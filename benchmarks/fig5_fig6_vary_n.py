@@ -1,0 +1,63 @@
+"""Figs. 5-6: vanilla SL vs Pigeon-SL+ for varying N (number of tolerated
+malicious clients).  Paper: MNIST N in {1,3,5} (M=12), CIFAR N in {1,4,9}
+(M=20); reduced mode uses M=8/N in {1,3} and M=10/N in {1,4}."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import Attack, LABEL_FLIP, from_cnn, run_pigeon, run_vanilla_sl
+from repro.data import build_image_task
+
+from .common import (RoundTimer, cifar_scale, csv_row, mnist_scale, pcfg_from,
+                     save_result)
+
+
+def _run_dataset(name: str, scale, n_values, seed: int):
+    data, cnn_cfg = build_image_task(name if name != "cifar" else "cifar10",
+                                     m_clients=scale.m, d_m=scale.d_m,
+                                     d_o=scale.d_o, n_test=scale.n_test,
+                                     seed=seed)
+    module = from_cnn(cnn_cfg)
+    curves = {}
+    attack = Attack(LABEL_FLIP)
+    us = 0.0
+    for n in n_values:
+        if scale.m % (n + 1) != 0:
+            continue            # paper: R must divide M
+        pcfg = pcfg_from(scale, seed, n=n)
+        malicious = set(range(n))
+        with RoundTimer() as t:
+            h_p = run_pigeon(module, data, pcfg, malicious, attack, plus=True)
+        us = t.us_per(pcfg.T)
+        h_v = run_vanilla_sl(module, data, pcfg, malicious, attack)
+        curves[f"pigeon_plus_N{n}"] = h_p.series("test_acc")
+        curves[f"vanilla_N{n}"] = h_v.series("test_acc")
+    return curves, us
+
+
+def run(full: bool = False, seed: int = 0):
+    out = {}
+    scale_m = mnist_scale(full)
+    n_vals_m = (1, 3, 5) if full else (1, 3)
+    curves_m, us_m = _run_dataset("mnist", scale_m, n_vals_m, seed)
+    out["mnist"] = curves_m
+    finals = {k: v[-1] for k, v in curves_m.items()}
+    csv_row("fig5_mnist_vary_n", us_m,
+            ";".join(f"{k}={v:.3f}" for k, v in sorted(finals.items())))
+
+    scale_c = cifar_scale(full)
+    if not full:
+        # need M divisible by both R=2 and R=5 for the N sweep
+        scale_c = dataclasses.replace(scale_c, m=10, t=4, e=3)
+    n_vals_c = (1, 4, 9) if full else (1, 4)
+    curves_c, us_c = _run_dataset("cifar", scale_c, n_vals_c, seed)
+    out["cifar"] = curves_c
+    finals = {k: v[-1] for k, v in curves_c.items()}
+    csv_row("fig6_cifar_vary_n", us_c,
+            ";".join(f"{k}={v:.3f}" for k, v in sorted(finals.items())))
+    save_result("fig5_fig6_vary_n", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""§Roofline report: formats experiments/dryrun_results.json into the
+per-(arch x shape x mesh) three-term table consumed by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import EXP_DIR, csv_row
+
+RESULTS = os.path.join(EXP_DIR, "dryrun_results.json")
+
+
+def load() -> List[Dict]:
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def fmt_row(r: Dict) -> str:
+    rl = r["roofline"]
+    mem = r["memory"]
+    args_gb = (mem["argument_bytes"] or 0) / 2**30
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh'].split('(')[0]} "
+            f"| {r['program']} "
+            f"| {rl['compute_s']:.2e} | {rl['memory_s']:.2e} "
+            f"| {rl['collective_s']:.2e} | **{rl['dominant']}** "
+            f"| {rl['model_flops']:.2e} | {rl['useful_ratio']:.3f} "
+            f"| {args_gb:.1f} |")
+
+
+def run(markdown: bool = True):
+    recs = load()
+    done = [r for r in recs if r.get("ok")]
+    skipped = [r for r in recs if r.get("skipped")]
+    failed = [r for r in recs if not r.get("ok") and not r.get("skipped")]
+    if markdown:
+        print("| arch | shape | mesh | program | compute_s | memory_s "
+              "| collective_s | dominant | model_flops | useful | args_GiB |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
+        for r in sorted(done, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+            print(fmt_row(r))
+        for r in skipped:
+            print(f"| {r['arch']} | {r['shape']} | - | SKIP: {r['reason'][:60]} "
+                  f"| | | | | | | |")
+    n_single = len([r for r in done if "pod" not in r["mesh"]])
+    n_multi = len([r for r in done if "pod" in r["mesh"]])
+    csv_row("roofline_report", 0,
+            f"ok_single={n_single};ok_multi={n_multi};failed={len(failed)};"
+            f"skipped={len(skipped)}")
+    return done, failed, skipped
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall-us per
+global protocol round; derived = headline metric) and writes full curves to
+experiments/*.json.
+"""
+import argparse
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale Table II parameters (hours on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="fig3|fig4|fig5|table1|roofline")
+    args = ap.parse_args()
+
+    from . import (ablation_shared_set, fig3_mnist_attacks, fig4_cifar_attacks,
+                   fig5_fig6_vary_n, roofline_report, table1_overhead)
+
+    benches = {
+        "table1": lambda: table1_overhead.run(args.full),
+        "fig3": lambda: fig3_mnist_attacks.run(args.full),
+        "fig4": lambda: fig4_cifar_attacks.run(args.full),
+        "fig5": lambda: fig5_fig6_vary_n.run(args.full),
+        "ablation": lambda: ablation_shared_set.run(args.full),
+        "roofline": lambda: roofline_report.run(markdown=False),
+    }
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

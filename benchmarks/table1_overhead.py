@@ -1,0 +1,81 @@
+"""Table I: communication/computation overhead — measured message counts
+from the protocol's CommMeter vs the paper's closed-form formulas.
+
+  vanilla SL   : M*Dt*d_c + M*d_CL            | M*Dt*F_CL
+  Pigeon-SL    : (M*Dt + 2R*Do)*d_c + M*d_CL  | (M*Dt + 2R*Do)*F_CL
+  Pigeon-SL+   : ((2M-Mb)*Dt + 2R*Do)*d_c + (2M-Mb)*d_CL
+                                              | ((2M-Mb)*Dt + 2R*Do)*F_CL
+(Dt = E*B samples per client turn, Mb = M/R, F_CL = one client fwd+bwd.)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core import (HONEST, ProtocolConfig, from_cnn, run_pigeon,
+                        run_vanilla_sl)
+from repro.core.protocol import _count_params, cut_width
+from repro.data import build_image_task
+
+from .common import RoundTimer, csv_row, save_result
+
+
+def run(full: bool = False, seed: int = 0):
+    data, cnn_cfg = build_image_task("mnist", m_clients=8, d_m=300, d_o=150,
+                                     n_test=500, seed=seed)
+    module = from_cnn(cnn_cfg)
+    pcfg = ProtocolConfig(M=8, N=3, T=1, E=5, B=32, lr=0.03, seed=seed)
+    gamma0, _ = module.init(jax.random.PRNGKey(0))
+    d_cl = _count_params(gamma0)
+    d_c = cut_width(module, gamma0, data.x0)
+    d_o = data.x0.shape[0]
+    dt = pcfg.E * pcfg.B
+    m, r = pcfg.M, pcfg.R
+    mb = m // r
+
+    rows = []
+    with RoundTimer() as t:
+        h = run_vanilla_sl(module, data, pcfg, malicious=set())
+    c = h.rounds[0]["comm"]
+    rows.append(("vanilla_sl",
+                 dict(measured_comm=c["activation_floats"] + c["param_floats"]
+                      + c["validation_floats"],
+                      formula_comm=m * dt * d_c + m * d_cl,
+                      measured_comp=c["client_passes"],
+                      formula_comp=m * dt)))
+    us = t.us_per(1)
+
+    h = run_pigeon(module, data, pcfg, malicious=set())
+    c = h.rounds[0]["comm"]
+    rows.append(("pigeon_sl",
+                 dict(measured_comm=c["activation_floats"] + c["param_floats"]
+                      + c["validation_floats"],
+                      formula_comm=(m * dt + 2 * r * d_o) * d_c + m * d_cl,
+                      measured_comp=c["client_passes"],
+                      formula_comp=m * dt + 2 * r * d_o)))
+
+    h = run_pigeon(module, data, pcfg, malicious=set(), plus=True)
+    c = h.rounds[0]["comm"]
+    rows.append(("pigeon_sl_plus",
+                 dict(measured_comm=c["activation_floats"] + c["param_floats"]
+                      + c["validation_floats"],
+                      formula_comm=((2 * m - mb) * dt + 2 * r * d_o) * d_c
+                      + (2 * m - mb) * d_cl,
+                      measured_comp=c["client_passes"],
+                      formula_comp=(2 * m - mb) * dt + 2 * r * d_o)))
+
+    out = {"params": dict(M=m, R=r, E=pcfg.E, B=pcfg.B, d_c=d_c, d_cl=d_cl,
+                          D_o=d_o), "rows": dict(rows)}
+    for name, row in rows:
+        match = (row["measured_comm"] == row["formula_comm"]
+                 and row["measured_comp"] == row["formula_comp"])
+        csv_row(f"table1_{name}", us,
+                f"comm_measured={row['measured_comm']};"
+                f"comm_formula={row['formula_comm']};match={match}")
+    save_result("table1_overhead", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

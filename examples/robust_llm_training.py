@@ -1,0 +1,58 @@
+"""End-to-end driver: Pigeon-SL over a transformer language model.
+
+    PYTHONPATH=src python examples/robust_llm_training.py [--steps-per-client 5]
+        [--rounds 8] [--d-model 512] [--layers 8]
+
+Builds a ~small decoder LM (default ~25M params; --d-model 768 --layers 12
+gives ~100M — a few hours on this 1-core CPU container, minutes on real
+hardware), splits it at the cut layer, and runs the full Pigeon-SL+ protocol
+over Markov-chain token data with one label-flipping client.  Demonstrates
+the framework integration: the SAME protocol code drives the paper's CNNs
+and every assigned architecture.
+"""
+import argparse
+import time
+
+from repro.core import (Attack, LABEL_FLIP, ProtocolConfig, from_lm, run_pigeon)
+from repro.data import build_lm_task
+from repro.models import build_model
+from repro.models.config import ModelConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--steps-per-client", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="pigeon-lm", arch_type="dense", n_layers=args.layers,
+        d_model=args.d_model, n_heads=max(4, args.d_model // 64),
+        n_kv_heads=max(2, args.d_model // 128), d_ff=4 * args.d_model,
+        vocab=args.vocab, cut_layer=max(1, args.layers // 4))
+    model = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab} "
+          f"(~{n_params/1e6:.1f}M params), cut at block {cfg.cut_layer}")
+
+    module = from_lm(model)
+    data = build_lm_task(vocab=cfg.vocab, seq_len=args.seq,
+                         m_clients=args.clients, d_m=128, d_o=48, n_test=48)
+    pcfg = ProtocolConfig(M=args.clients, N=1, T=args.rounds,
+                          E=args.steps_per_client, B=8, lr=3e-2, seed=0)
+    t0 = time.time()
+    hist = run_pigeon(module, data, pcfg, malicious={1},
+                      attack=Attack(LABEL_FLIP), plus=True, verbose=True)
+    print(f"\nfinal next-token accuracy: {hist.rounds[-1]['test_acc']:.4f} "
+          f"(uniform = {1/args.vocab:.4f}); wall {time.time()-t0:.0f}s")
+    print("honest-cluster selections:",
+          [r["selected_honest"] for r in hist.rounds])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Batched serving demo: KV-cache decode across architecture families.
+
+    PYTHONPATH=src python examples/serve_decode.py
+
+Greedy-decodes batched prompts through smoke-scale variants of three
+families (dense GQA, Mamba2 hybrid, MLA+MoE) — the same ``serve_step`` the
+dry-run lowers for decode_32k / long_500k on the production mesh.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import make_markov_tokens
+from repro.models import build_model
+
+
+def decode_demo(arch: str, batch=4, prompt_len=12, new_tokens=20):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(batch, prompt_len + new_tokens)
+    prompts = make_markov_tokens(0, cfg.vocab, batch, prompt_len)
+    decode = jax.jit(lambda p, c, t, i: model.decode_step(p, c, t, i),
+                     donate_argnums=(1,))
+    t0 = time.time()
+    logits = None
+    for i in range(prompt_len):
+        logits, cache = decode(params, cache, jnp.asarray(prompts[:, i:i+1]), i)
+    toks = []
+    for j in range(new_tokens):
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        toks.append(np.asarray(nxt))
+        logits, cache = decode(params, cache, nxt, prompt_len + j)
+    dt = time.time() - t0
+    rate = batch * (prompt_len + new_tokens) / dt
+    print(f"{arch:24s} [{cfg.arch_type:6s}] {rate:8.1f} tok/s  "
+          f"sample: {np.concatenate(toks,1)[0][:10].tolist()}")
+
+
+def main():
+    for arch in ("qwen3-8b", "zamba2-1.2b", "deepseek-v2-lite-16b"):
+        decode_demo(arch)
+
+
+if __name__ == "__main__":
+    main()

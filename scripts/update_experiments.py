@@ -1,0 +1,58 @@
+"""Render the §Roofline baseline table from experiments/dryrun_results.json
+into EXPERIMENTS.md (replaces the <!-- ROOFLINE_TABLE --> marker block)."""
+import json
+import re
+import sys
+
+RESULTS = "experiments/dryrun_results.json"
+TARGET = "EXPERIMENTS.md"
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main():
+    with open(RESULTS) as f:
+        recs = json.load(f)
+    rows = [r for r in recs if r.get("ok") and "pod" not in r["mesh"]
+            and "+" not in r["program"]]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    skips = [r for r in recs if r.get("skipped")]
+
+    lines = [MARK,
+             "| arch | shape | program | compute_s | memory_s | collective_s "
+             "| dominant | model_FLOPs | useful | args_GiB | temp_GiB |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rl = r["roofline"]
+        mem = r["memory"]
+        args_gb = (mem.get("argument_bytes") or 0) / 2**30
+        temp_gb = (mem.get("temp_bytes") or 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['program']} "
+            f"| {rl['compute_s']:.2e} | {rl['memory_s']:.2e} "
+            f"| {rl['collective_s']:.2e} | {rl['dominant']} "
+            f"| {rl['model_flops']:.2e} | {rl['useful_ratio']:.3f} "
+            f"| {args_gb:.1f} | {temp_gb:.1f} |")
+    for r in skips:
+        lines.append(f"| {r['arch']} | {r['shape']} | SKIPPED | | | | | | | | |")
+    lines.append("")
+    lines.append(f"({len(rows)} baseline pairs; args/temp GiB are whole-job "
+                 "sizes from compiled.memory_analysis(), divide by 256 chips "
+                 "for per-device.)")
+    block = "\n".join(lines)
+
+    with open(TARGET) as f:
+        text = f.read()
+    if MARK not in text:
+        sys.exit(f"marker {MARK} not found")
+    # replace from marker to the next section header
+    pattern = re.escape(MARK) + r".*?(?=\n### |\n## )"
+    new_text, n = re.subn(pattern, block + "\n", text, flags=re.S)
+    if n == 0:
+        new_text = text.replace(MARK, block)
+    with open(TARGET, "w") as f:
+        f.write(new_text)
+    print(f"updated {TARGET} with {len(rows)} rows")
+
+
+if __name__ == "__main__":
+    main()

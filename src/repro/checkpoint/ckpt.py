@@ -1,0 +1,65 @@
+"""Checkpointing: pytree <-> .npz + JSON treedef (no orbax dependency).
+
+Arrays are flattened with ``jax.tree.flatten_with_path`` so the archive keys
+are stable, human-readable paths; restore rebuilds the exact pytree
+structure.  Works for params, optimizer states and protocol state alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Pytree, metadata: Optional[Dict] = None) -> None:
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    arrays = {f"a{i}": np.asarray(v) for i, (_, v) in enumerate(flat)}
+    names = [_path_str(p) for p, _ in flat]
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path + ".npz", **arrays)
+    meta = {"names": names, "treedef": str(treedef), "metadata": metadata or {}}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_checkpoint(path: str) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Returns ({path_name: array}, metadata)."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    with np.load(path + ".npz") as z:
+        arrays = {meta["names"][int(k[1:])]: z[k] for k in z.files}
+    return arrays, meta.get("metadata", {})
+
+
+def restore_pytree(path: str, like: Pytree) -> Pytree:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    arrays, _ = load_checkpoint(path)
+    flat, treedef = jax.tree.flatten_with_path(like)
+    out = []
+    for p, v in flat:
+        name = _path_str(p)
+        if name not in arrays:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        a = arrays[name]
+        if tuple(a.shape) != tuple(v.shape):
+            raise ValueError(f"shape mismatch at {name}: {a.shape} vs {v.shape}")
+        out.append(jax.numpy.asarray(a, dtype=v.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,23 @@
+"""Pigeon-SL: the paper's primary contribution.
+
+Clustered split learning with pigeonhole-guaranteed honest clusters,
+shared-dataset validation selection, tamper-resilient parameter handoff and
+the throughput-matched Pigeon-SL+ variant.
+"""
+from .attacks import (ACTIVATION, GRADIENT, HONEST, KINDS, LABEL_FLIP, NONE,
+                      PARAM_TAMPER, Attack)
+from .clustering import cluster_is_honest, has_honest_cluster, make_clusters
+from .protocol import (ClientData, CommMeter, History, ProtocolConfig,
+                       run_pigeon, run_splitfed, run_vanilla_sl)
+from .split import SplitModule, client_update, from_cnn, from_lm, sl_minibatch_grads
+from .validation import check_handoff, select_cluster, validation_loss
+
+__all__ = [
+    "Attack", "HONEST", "NONE", "LABEL_FLIP", "ACTIVATION", "GRADIENT",
+    "PARAM_TAMPER", "KINDS",
+    "make_clusters", "has_honest_cluster", "cluster_is_honest",
+    "ClientData", "CommMeter", "History", "ProtocolConfig",
+    "run_pigeon", "run_splitfed", "run_vanilla_sl",
+    "SplitModule", "client_update", "from_cnn", "from_lm", "sl_minibatch_grads",
+    "check_handoff", "select_cluster", "validation_loss",
+]

@@ -1,0 +1,80 @@
+"""The three attack models of Section II (and the Section III-C parameter
+tampering used against the validation mechanism).
+
+All three are implemented exactly as parameterised in Section V-A:
+
+  * label flipping       y -> (y + 3) mod n_classes
+  * activation tampering g -> 0.1 * g + 0.9 * n~,  n~ = (|g|/|n|) n,
+                          n ~ N(0, I)  (norm-matched noise)
+  * gradient tampering   grad_c -> -grad_c  (sign reversal)
+
+``Attack`` is a frozen (hashable) dataclass so it can be a static jit arg —
+each attack kind compiles its own specialised update step, mirroring the fact
+that honest and malicious clients run different computations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NONE = "none"
+LABEL_FLIP = "label_flip"
+ACTIVATION = "activation"
+GRADIENT = "gradient"
+PARAM_TAMPER = "param_tamper"       # Section III-C: tampering the handed-off params
+
+KINDS = (NONE, LABEL_FLIP, ACTIVATION, GRADIENT, PARAM_TAMPER)
+
+
+@dataclasses.dataclass(frozen=True)
+class Attack:
+    kind: str = NONE
+    label_shift: int = 3
+    act_keep: float = 0.1            # fraction of the true activation kept
+    param_scale: float = 5.0         # multiplier used by the param-tamper attack
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+
+
+HONEST = Attack(NONE)
+
+
+def flip_labels(attack: Attack, y: jnp.ndarray, n_classes: int) -> jnp.ndarray:
+    if attack.kind != LABEL_FLIP:
+        return y
+    return (y + attack.label_shift) % n_classes
+
+
+def tamper_activation(attack: Attack, acts: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    if attack.kind != ACTIVATION:
+        return acts
+    n = jax.random.normal(key, acts.shape, jnp.float32)
+    # norm-match per sample (leading axis = batch)
+    axes = tuple(range(1, acts.ndim))
+    g_norm = jnp.sqrt(jnp.sum(jnp.square(acts.astype(jnp.float32)), axis=axes, keepdims=True))
+    n_norm = jnp.sqrt(jnp.sum(jnp.square(n), axis=axes, keepdims=True))
+    n_scaled = n * (g_norm / jnp.maximum(n_norm, 1e-12))
+    out = attack.act_keep * acts.astype(jnp.float32) + (1.0 - attack.act_keep) * n_scaled
+    return out.astype(acts.dtype)
+
+
+def tamper_gradient(attack: Attack, g: jnp.ndarray) -> jnp.ndarray:
+    if attack.kind != GRADIENT:
+        return g
+    return -g
+
+
+def tamper_params(attack: Attack, params, key: jax.Array):
+    """Section III-C: the malicious *last* client of the selected cluster
+    hands off manipulated client-side parameters to the next round."""
+    if attack.kind != PARAM_TAMPER:
+        return params
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    tampered = [l + attack.param_scale * jax.random.normal(k, l.shape, l.dtype)
+                for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, tampered)

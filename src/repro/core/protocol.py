@@ -1,0 +1,345 @@
+"""Protocol drivers: Pigeon-SL (Algorithm 1), Pigeon-SL+, vanilla SL and the
+clustered SplitFed baseline of Section V.
+
+Every driver returns a ``History`` whose per-round records include test
+accuracy, per-cluster validation losses, the selected cluster, whether that
+cluster was honest, tamper-detection events, and message-count accounting
+(floats transmitted, client fwd+bwd passes) so that Table I's complexity
+formulas can be validated against the measured counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attacks as atk
+from .attacks import Attack, HONEST
+from .clustering import cluster_is_honest, make_clusters
+from .split import SplitModule, client_update
+from .validation import (check_handoff, handoff_activations, select_cluster,
+                         validation_loss)
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolConfig:
+    M: int                    # total clients
+    N: int = 0                # tolerated malicious clients; R = N + 1
+    T: int = 50               # global rounds
+    E: int = 10               # mini-batch updates per client turn
+    B: int = 64               # mini-batch size
+    lr: float = 1e-3
+    seed: int = 0
+    tamper_check: bool = True
+    tamper_tol: float = 1e-4
+    eval_every: int = 1
+    eval_batch: int = 500
+
+    @property
+    def R(self) -> int:
+        return self.N + 1
+
+
+@dataclasses.dataclass
+class ClientData:
+    """Per-client local shards + the shared/reference and test sets."""
+    x: np.ndarray             # (M, D_m, ...)
+    y: np.ndarray             # (M, D_m)
+    x0: np.ndarray            # (D_o, ...) shared validation inputs
+    y0: np.ndarray            # (D_o,)
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+
+@dataclasses.dataclass
+class CommMeter:
+    """Message accounting in float-counts (Table I units: d_c, d_CL)."""
+    activation_floats: int = 0      # cut-layer activations, both directions
+    gradient_floats: int = 0        # cut-layer gradients
+    param_floats: int = 0           # client-side parameter handoffs (d_CL)
+    validation_floats: int = 0      # shared-set activations for validation/check
+    client_passes: int = 0          # forward(+backward) passes through gamma (F_CL)
+
+    def total_comm(self) -> int:
+        return (self.activation_floats + self.gradient_floats
+                + self.param_floats + self.validation_floats)
+
+
+@dataclasses.dataclass
+class History:
+    rounds: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+
+    def series(self, key):
+        return [r.get(key) for r in self.rounds]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _count_params(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def _sample_batches(rng: np.random.Generator, x: np.ndarray, y: np.ndarray,
+                    e: int, b: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    idx = rng.integers(0, x.shape[0], size=(e, b))
+    return jnp.asarray(x[idx]), jnp.asarray(y[idx])
+
+
+def _attack_for(client: int, malicious: Set[int], attack: Attack) -> Attack:
+    if client not in malicious:
+        return HONEST
+    # param-tampering clients train honestly (Section III-C: they avoid
+    # raising the validation loss so their cluster can get selected)
+    if attack.kind == atk.PARAM_TAMPER:
+        return HONEST
+    return attack
+
+
+def evaluate(module: SplitModule, gamma, phi, x_test: np.ndarray, y_test: np.ndarray,
+             batch: int = 500) -> float:
+    correct, total = 0, 0
+    for i in range(0, x_test.shape[0], batch):
+        xb = jnp.asarray(x_test[i : i + batch])
+        yb = y_test[i : i + batch]
+        logits = np.asarray(module.predict(gamma, phi, xb))
+        if logits.ndim == 3:      # LM: (B, S, V) — per-token accuracy
+            pred = logits.argmax(-1)
+            correct += (pred == yb).sum()
+            total += yb.size
+        else:
+            correct += (logits.argmax(-1) == yb).sum()
+            total += yb.shape[0]
+    return float(correct) / float(total)
+
+
+# ---------------------------------------------------------------------------
+# cluster-wise vanilla-SL training pass (lines 3-20 of Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def train_cluster(module: SplitModule, gamma, phi, cluster: Sequence[int],
+                  data: ClientData, pcfg: ProtocolConfig, malicious: Set[int],
+                  attack: Attack, rng: np.random.Generator, key: jax.Array,
+                  meter: CommMeter, d_c: int) -> Tuple[Pytree, Pytree, float]:
+    d_cl = _count_params(gamma)
+    losses = []
+    for j, client in enumerate(cluster):
+        xs, ys = _sample_batches(rng, data.x[client], data.y[client], pcfg.E, pcfg.B)
+        key, sub = jax.random.split(key)
+        a = _attack_for(client, malicious, attack)
+        gamma, phi, loss = client_update(module, a, gamma, phi, (xs, ys), pcfg.lr, sub)
+        losses.append(float(loss))
+        # accounting: E batches of B samples — activations up, cut grads down
+        n_samples = pcfg.E * pcfg.B
+        meter.client_passes += n_samples
+        meter.activation_floats += n_samples * d_c
+        meter.gradient_floats += n_samples * d_c
+        if j < len(cluster) - 1:
+            meter.param_floats += d_cl           # hand gamma to the next client
+    return gamma, phi, float(np.mean(losses))
+
+
+def cut_width(module: SplitModule, gamma, x0) -> int:
+    """d_c: per-sample width of the cut-layer activation message (computed
+    shape-only via eval_shape — no allocation)."""
+    shp = jax.eval_shape(module.client_forward, gamma, jnp.asarray(x0[:1]))
+    return int(np.prod(shp.shape[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Pigeon-SL / Pigeon-SL+
+# ---------------------------------------------------------------------------
+
+def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
+               malicious: Set[int], attack: Attack = HONEST, plus: bool = False,
+               verbose: bool = False, checkpoint_path: Optional[str] = None,
+               resume: bool = False) -> History:
+    rng = np.random.default_rng(pcfg.seed)
+    key = jax.random.PRNGKey(pcfg.seed)
+    key, k0 = jax.random.split(key)
+    gamma0, phi0 = module.init(k0)
+    theta = (gamma0, phi0)
+    start_round = 0
+    if resume and checkpoint_path is not None:
+        from ..checkpoint import load_checkpoint, restore_pytree
+        try:
+            _, meta = load_checkpoint(checkpoint_path)
+            theta = restore_pytree(checkpoint_path, theta)
+            start_round = int(meta.get("round", -1)) + 1
+            # fast-forward the protocol RNG so clustering stays on-stream
+            for _ in range(start_round):
+                make_clusters(rng, pcfg.M, pcfg.R)
+        except FileNotFoundError:
+            pass
+    x0, y0 = jnp.asarray(data.x0), jnp.asarray(data.y0)
+    d_o = data.x0.shape[0]
+    hist = History()
+    d_cl = _count_params(gamma0)
+    d_c = cut_width(module, gamma0, data.x0)
+
+    for t in range(start_round, pcfg.T):
+        meter = CommMeter()
+        clusters = make_clusters(rng, pcfg.M, pcfg.R)
+        results = []           # (gamma, phi, val_loss, val_acts, cluster)
+        for r, cluster in enumerate(clusters):
+            key, sub = jax.random.split(key)
+            g, p, train_loss = train_cluster(module, theta[0], theta[1], cluster, data,
+                                             pcfg, malicious, attack, rng, sub, meter, d_c)
+            vloss, vacts = validation_loss(module, g, p, x0, y0)
+            meter.validation_floats += d_o * d_c
+            meter.client_passes += d_o
+            results.append(dict(gamma=g, phi=p, vloss=float(vloss), vacts=vacts,
+                                cluster=cluster, train_loss=train_loss))
+
+        order = np.argsort([res["vloss"] for res in results])
+        detection_events = 0
+        selected = None
+        for cand in order:
+            res = results[cand]
+            last_client = res["cluster"][-1]
+            g_sel = res["gamma"]
+            handed = g_sel
+            if attack.kind == atk.PARAM_TAMPER and last_client in malicious:
+                key, sub = jax.random.split(key)
+                handed = atk.tamper_params(attack, g_sel, sub)
+            if pcfg.tamper_check:
+                # next-round first clients re-transmit g(x0, gamma_received);
+                # >=1 of the R recipients is honest, so a tampered handoff is
+                # always visible against the validation-time activations.
+                recv = handoff_activations(module, handed, x0)
+                meter.validation_floats += pcfg.R * d_o * d_c
+                meter.client_passes += pcfg.R * d_o
+                ok, dist = check_handoff(res["vacts"], [recv], pcfg.tamper_tol)
+                if not ok:
+                    detection_events += 1
+                    continue      # discard tampered cluster, reselect
+            selected = cand
+            theta = (handed, res["phi"])
+            break
+        if selected is None:      # every cluster tampered: keep theta^t
+            selected = int(order[0])
+
+        sel_res = results[selected]
+        meter.param_floats += pcfg.R * d_cl      # broadcast to next first clients
+
+        # Pigeon-SL+: R-1 extra sub-rounds on the selected cluster
+        if plus:
+            for _ in range(pcfg.R - 1):
+                key, sub = jax.random.split(key)
+                g, p, _ = train_cluster(module, theta[0], theta[1], sel_res["cluster"],
+                                        data, pcfg, malicious, attack, rng, sub, meter, d_c)
+                theta = (g, p)
+                meter.param_floats += _count_params(g)   # subround handoff to 1st client
+
+        rec = dict(
+            round=t,
+            clusters=clusters,
+            val_losses=[res["vloss"] for res in results],
+            train_losses=[res["train_loss"] for res in results],
+            selected=selected,
+            selected_honest=cluster_is_honest(sel_res["cluster"], malicious),
+            honest_cluster_exists=any(cluster_is_honest(c, malicious) for c in clusters),
+            detections=detection_events,
+            comm=dataclasses.asdict(meter),
+        )
+        if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+            rec["test_acc"] = evaluate(module, theta[0], theta[1],
+                                       data.x_test, data.y_test, pcfg.eval_batch)
+        hist.rounds.append(rec)
+        if checkpoint_path is not None:
+            from ..checkpoint import save_checkpoint
+            save_checkpoint(checkpoint_path, theta, {"round": t})
+        if verbose:
+            acc = rec.get("test_acc", float("nan"))
+            print(f"[pigeon{'+' if plus else ''}] t={t:3d} acc={acc:.4f} "
+                  f"sel={selected} honest={rec['selected_honest']} "
+                  f"vloss={rec['val_losses']}")
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# vanilla SL (the paper's baseline)
+# ---------------------------------------------------------------------------
+
+def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
+                   malicious: Set[int], attack: Attack = HONEST,
+                   verbose: bool = False) -> History:
+    rng = np.random.default_rng(pcfg.seed)
+    key = jax.random.PRNGKey(pcfg.seed)
+    key, k0 = jax.random.split(key)
+    gamma, phi = module.init(k0)
+    hist = History()
+    d_c = cut_width(module, gamma, data.x0)
+    for t in range(pcfg.T):
+        meter = CommMeter()
+        order = rng.permutation(pcfg.M).tolist()
+        key, sub = jax.random.split(key)
+        gamma, phi, train_loss = train_cluster(module, gamma, phi, order, data, pcfg,
+                                               malicious, attack, rng, sub, meter, d_c)
+        meter.param_floats += _count_params(gamma)   # hand-off into the next round
+        rec = dict(round=t, train_loss=train_loss, comm=dataclasses.asdict(meter))
+        if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+            rec["test_acc"] = evaluate(module, gamma, phi, data.x_test, data.y_test,
+                                       pcfg.eval_batch)
+        hist.rounds.append(rec)
+        if verbose:
+            print(f"[vanilla] t={t:3d} acc={rec.get('test_acc', float('nan')):.4f}")
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# SplitFed baseline (Section V: SFL + our clustering & validation selection)
+# ---------------------------------------------------------------------------
+
+def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
+                 malicious: Set[int], attack: Attack = HONEST,
+                 verbose: bool = False) -> History:
+    """Clients inside a cluster train *in parallel* from the same incoming
+    params; the cluster model is the FedAvg of its clients.  Cluster
+    selection by shared-set validation loss, as the paper's adapted SFL."""
+    rng = np.random.default_rng(pcfg.seed)
+    key = jax.random.PRNGKey(pcfg.seed)
+    key, k0 = jax.random.split(key)
+    theta = module.init(k0)
+    x0, y0 = jnp.asarray(data.x0), jnp.asarray(data.y0)
+    hist = History()
+
+    for t in range(pcfg.T):
+        clusters = make_clusters(rng, pcfg.M, pcfg.R)
+        results = []
+        for cluster in clusters:
+            gs, ps = [], []
+            for client in cluster:
+                xs, ys = _sample_batches(rng, data.x[client], data.y[client],
+                                         pcfg.E, pcfg.B)
+                key, sub = jax.random.split(key)
+                a = _attack_for(client, malicious, attack)
+                g, p, _ = client_update(module, a, theta[0], theta[1], (xs, ys),
+                                        pcfg.lr, sub)
+                gs.append(g)
+                ps.append(p)
+            g_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *gs)
+            p_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *ps)
+            vloss, _ = validation_loss(module, g_avg, p_avg, x0, y0)
+            results.append(dict(gamma=g_avg, phi=p_avg, vloss=float(vloss),
+                                cluster=cluster))
+        selected = select_cluster([res["vloss"] for res in results])
+        theta = (results[selected]["gamma"], results[selected]["phi"])
+        rec = dict(round=t, selected=selected,
+                   val_losses=[res["vloss"] for res in results],
+                   selected_honest=cluster_is_honest(results[selected]["cluster"],
+                                                     malicious))
+        if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+            rec["test_acc"] = evaluate(module, theta[0], theta[1], data.x_test,
+                                       data.y_test, pcfg.eval_batch)
+        hist.rounds.append(rec)
+        if verbose:
+            print(f"[sfl] t={t:3d} acc={rec.get('test_acc', float('nan')):.4f}")
+    return hist

@@ -1,0 +1,138 @@
+"""Split-learning abstraction: the gamma/phi decomposition and the vanilla-SL
+mini-batch message flow (FwdProp / BackProp of Algorithms 2 & 3).
+
+A :class:`SplitModule` is the minimal interface the Pigeon-SL protocol needs:
+any model that can be cut into a client half and an AP half fits (the paper's
+CNNs, and every transformer family in ``repro.models`` via ``from_lm``).
+
+``sl_minibatch_step`` reproduces the exact four-message exchange of the
+paper, with attack hooks at each of the three tampering points:
+
+  client --- g(x, gamma), y --->  AP        (activation + label messages)
+  client <---  d loss / d c  ---  AP        (cut-layer gradient message)
+
+implemented with ``jax.vjp`` so the client-side backward consumes exactly the
+(possibly tampered) cut-layer gradient the AP sent — no gradient information
+bypasses the cut.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attacks import Attack, flip_labels, tamper_activation, tamper_gradient
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitModule:
+    """Pure-function view of a split model."""
+    init: Callable[[jax.Array], Tuple[Pytree, Pytree]]
+    client_forward: Callable[[Pytree, jnp.ndarray], jnp.ndarray]
+    ap_loss: Callable[[Pytree, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    predict: Callable[[Pytree, Pytree, jnp.ndarray], jnp.ndarray]
+    n_classes: int = 10
+
+    def loss(self, gamma, phi, x, y):
+        return self.ap_loss(phi, self.client_forward(gamma, x), y)
+
+
+def from_cnn(cfg) -> SplitModule:
+    from ..models import cnn as cnn_mod
+
+    return SplitModule(
+        init=lambda key: cnn_mod.cnn_init(key, cfg),
+        client_forward=lambda g, x: cnn_mod.cnn_client_forward(g, cfg, x),
+        ap_loss=lambda p, a, y: _xent(cnn_mod.cnn_ap_forward(p, cfg, a), y),
+        predict=lambda g, p, x: cnn_mod.cnn_predict(g, p, cfg, x),
+        n_classes=cfg.n_classes,
+    )
+
+
+def from_lm(model) -> SplitModule:
+    """Adapt a ``repro.models.Model`` (token batches) to the SplitModule
+    interface: x = tokens (B, S); y = labels (B, S)."""
+
+    def init(key):
+        params = model.init(key)
+        return model.split_params(params)
+
+    def client_forward(gamma, tokens):
+        return model.client_forward(gamma, {"tokens": tokens})
+
+    def ap_loss(phi, acts, labels):
+        b = labels.shape[0]
+        loss, _ = model.ap_forward(phi, acts, {"tokens": labels, "labels": labels})
+        return loss
+
+    def predict(gamma, phi, tokens):
+        params = model.merge_params(gamma, phi)
+        return model.logits(params, {"tokens": tokens})
+
+    return SplitModule(init=init, client_forward=client_forward, ap_loss=ap_loss,
+                       predict=predict, n_classes=model.cfg.vocab)
+
+
+def _xent(logits, y):
+    from ..models.blocks import cross_entropy
+    return cross_entropy(logits, y)
+
+
+# ---------------------------------------------------------------------------
+# the SL mini-batch exchange with attack hooks
+# ---------------------------------------------------------------------------
+
+def sl_minibatch_grads(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytree,
+                       x: jnp.ndarray, y: jnp.ndarray, key: jax.Array
+                       ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+    """One FwdProp/BackProp exchange.  Returns (g_gamma, g_phi, loss).
+
+    The attack hooks sit exactly where the paper places them:
+      * labels tampered before transmission            (label flipping)
+      * cut activations tampered before transmission   (activation tampering)
+      * cut gradient tampered after reception          (gradient tampering)
+    """
+    y_sent = flip_labels(attack, y, module.n_classes)
+
+    acts, client_vjp = jax.vjp(lambda g: module.client_forward(g, x), gamma)
+    acts_sent = tamper_activation(attack, acts, key)
+
+    def ap_fn(phi_, acts_):
+        return module.ap_loss(phi_, acts_, y_sent)
+
+    loss, ap_grads = jax.value_and_grad(ap_fn, argnums=(0, 1))(phi, acts_sent)
+    g_phi, g_acts = ap_grads
+
+    g_acts_recv = tamper_gradient(attack, g_acts)
+    (g_gamma,) = client_vjp(g_acts_recv.astype(acts.dtype))
+    return g_gamma, g_phi, loss
+
+
+def sgd_update(params: Pytree, grads: Pytree, lr: float) -> Pytree:
+    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 5))
+def client_update(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytree,
+                  data: Tuple[jnp.ndarray, jnp.ndarray], lr: float, key: jax.Array
+                  ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+    """E mini-batch updates for one client (lines 10-18 of Algorithm 1).
+
+    data = (xs, ys) with xs: (E, B, ...), ys: (E, B, ...).
+    """
+    xs, ys = data
+
+    def step(carry, inputs):
+        gamma, phi, k = carry
+        x, y = inputs
+        k, sub = jax.random.split(k)
+        g_gamma, g_phi, loss = sl_minibatch_grads(module, attack, gamma, phi, x, y, sub)
+        return (sgd_update(gamma, g_gamma, lr), sgd_update(phi, g_phi, lr), k), loss
+
+    (gamma, phi, _), losses = jax.lax.scan(step, (gamma, phi, key), (xs, ys))
+    return gamma, phi, jnp.mean(losses)

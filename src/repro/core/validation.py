@@ -1,0 +1,61 @@
+"""Shared-dataset validation (Section III-C).
+
+The AP never sees raw client data; at the end of a round the *last* client of
+each cluster pushes the cut-layer activations of the shared dataset D_o and
+the AP finishes the forward pass to obtain the cluster validation loss
+l_bar_r.  Cluster selection is argmin over clusters.
+
+``check_handoff`` implements the tamper-resilience mechanism: the first
+clients of the next round each transmit g(x_0, gamma_received); the AP
+compares them against the activations the selected cluster reported at
+validation time — any mismatch exposes a parameter-tampering last client and
+triggers a rollback/reselect.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .split import SplitModule
+
+Pytree = Any
+
+
+@partial(jax.jit, static_argnums=(0,))
+def validation_loss(module: SplitModule, gamma: Pytree, phi: Pytree,
+                    x0: jnp.ndarray, y0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (loss, cut-activations).  The activations are what the last
+    client actually transmits — kept so the AP can cross-check handoffs."""
+    acts = module.client_forward(gamma, x0)
+    loss = module.ap_loss(phi, acts, y0)
+    return loss, acts
+
+
+def select_cluster(losses: Sequence[float]) -> int:
+    """argmin_r l_bar_r (ties broken towards the lower index)."""
+    return int(jnp.argmin(jnp.asarray(losses)))
+
+
+@partial(jax.jit, static_argnums=(0,))
+def handoff_activations(module: SplitModule, gamma: Pytree, x0: jnp.ndarray) -> jnp.ndarray:
+    """g(x_0, gamma_received) transmitted by a first client before training."""
+    return module.client_forward(gamma, x0)
+
+
+def check_handoff(reference_acts: jnp.ndarray, received: Sequence[jnp.ndarray],
+                  tol: float = 1e-4) -> Tuple[bool, float]:
+    """AP-side comparison.  ``reference_acts`` are the validation-time
+    activations from the selected cluster's last client; ``received`` are the
+    next-round first clients' transmissions.  Honest handoff => all equal.
+
+    Returns (ok, max_distance)."""
+    ref = reference_acts.astype(jnp.float32)
+    denom = jnp.maximum(jnp.linalg.norm(ref), 1e-12)
+    max_d = 0.0
+    for acts in received:
+        d = float(jnp.linalg.norm(acts.astype(jnp.float32) - ref) / denom)
+        max_d = max(max_d, d)
+    return max_d <= tol, max_d

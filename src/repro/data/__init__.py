@@ -1,0 +1,8 @@
+from .pipeline import (build_image_task, build_lm_task, dirichlet_relabel,
+                       minibatches)
+from .synthetic import (lm_batch, make_classification_data, make_markov_tokens,
+                        make_templates, sample_images)
+
+__all__ = ["build_image_task", "build_lm_task", "minibatches", "lm_batch",
+           "make_classification_data", "make_markov_tokens", "make_templates",
+           "sample_images"]

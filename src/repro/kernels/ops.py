@@ -1,0 +1,92 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on real TPU
+backends — the kernels are written for TPU (pl.pallas_call + BlockSpec VMEM
+tiling) and validated here in interpret mode against the ref.py oracles.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import fused_xent as _fx
+from . import tamper_check as _tc
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """Multi-head attention. q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D).
+    Returns (B, Sq, H, D)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    of = _fa.flash_attention(qf, kf, vf, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return of.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
+def fused_cross_entropy(hidden, weights, labels, *, block_t: int = 256,
+                        block_v: int = 512, interpret: Optional[bool] = None):
+    """Mean fused softmax-xent.  hidden (..., D); labels (...,)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    d = hidden.shape[-1]
+    h2 = hidden.reshape(-1, d)
+    l2 = labels.reshape(-1)
+    per_tok = _fx.fused_xent(h2, weights, l2, block_t=block_t, block_v=block_v,
+                             interpret=interpret)
+    return jnp.mean(per_tok)
+
+
+@partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, k, v, index, *, window: int = 0, block_k: int = 512,
+                     interpret: Optional[bool] = None):
+    """Single-token decode attention. q: (B, 1, H, D); k, v: (B, S, Hkv, D);
+    index: scalar position of the new token.  Returns (B, 1, H, D)."""
+    from . import decode_attention as _da
+    interpret = _default_interpret() if interpret is None else interpret
+    b, _, h, d = q.shape
+    _, s, hkv, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, 1, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    of = _da.decode_attention(qf, kf, vf, index, window=window,
+                              block_k=block_k, interpret=interpret)
+    return of.reshape(b, h, 1, d).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("n_heads", "interpret"))
+def slstm_scan(pre, r, *, n_heads: int, interpret: Optional[bool] = None):
+    """Fused sLSTM time scan. pre: (T, B, 4d); r: (H, dh, 4dh) -> (T, B, d)."""
+    from . import slstm_scan as _ss
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ss.slstm_scan(pre, r, n_heads=n_heads, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def tamper_distance(ref, recv, *, block_n: int = 256,
+                    interpret: Optional[bool] = None):
+    """Relative L2 distance ||ref-recv|| / ||ref|| between activation sets.
+    ref/recv: (..., D) — flattened to (N, D)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    d = ref.shape[-1]
+    a = ref.reshape(-1, d)
+    b = recv.reshape(-1, d)
+    sums = _tc.tamper_check_sums(a, b, block_n=block_n, interpret=interpret)
+    return jnp.sqrt(sums[0]) / jnp.maximum(jnp.sqrt(sums[1]), 1e-12)

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references the
+shape/dtype sweep tests assert against)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (BH, Sq, D); k, v: (BHkv, Sk, D) — GQA by head-group repetition."""
+    bh, sq, d = q.shape
+    bhkv, sk, _ = k.shape
+    groups = bh // bhkv
+    k = jnp.repeat(k, groups, axis=0)
+    v = jnp.repeat(v, groups, axis=0)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if window > 0:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def xent_reference(hidden: jnp.ndarray, weights: jnp.ndarray,
+                   labels: jnp.ndarray) -> jnp.ndarray:
+    """(T, D) x (D, V), labels (T,) -> per-token loss (T,) f32."""
+    logits = (hidden.astype(jnp.float32) @ weights.astype(jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return lse - picked
+
+
+def tamper_sums_reference(ref: jnp.ndarray, recv: jnp.ndarray) -> jnp.ndarray:
+    a = ref.astype(jnp.float32)
+    b = recv.astype(jnp.float32)
+    return jnp.stack([jnp.sum((a - b) ** 2), jnp.sum(a * a)])
+
+
+def decode_attention_reference(q, k, v, index, window: int = 0,
+                               scale: Optional[float] = None):
+    """q: (BH, 1, D); k, v: (BHkv, S, D); attend to k_pos <= index."""
+    bh, _, d = q.shape
+    bhkv, s, _ = k.shape
+    groups = bh // bhkv
+    k = jnp.repeat(k, groups, axis=0)
+    v = jnp.repeat(v, groups, axis=0)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    sc = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    valid = pos <= index
+    if window > 0:
+        valid = valid & (index - pos < window)
+    sc = jnp.where(valid[None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def slstm_scan_reference(pre, r, n_heads: int):
+    """pre: (T, B, 4d); r: (H, dh, 4dh) — mirrors models.xlstm._slstm_step."""
+    t, b, d4 = pre.shape
+    d = d4 // 4
+    dh = d // n_heads
+    h = jnp.zeros((b, d), jnp.float32)
+    c = jnp.zeros((b, d), jnp.float32)
+    n = jnp.zeros((b, d), jnp.float32)
+    m = jnp.full((b, d), -1e30, jnp.float32)
+    outs = []
+    for step in range(t):
+        rec = jnp.einsum("bhd,hde->bhe", h.reshape(b, n_heads, dh),
+                         r.astype(jnp.float32)).reshape(b, 4 * d)
+        z = pre[step].astype(jnp.float32) + rec
+        li, lf_raw, zz, oo = jnp.split(z, 4, axis=-1)
+        lf = jax.nn.log_sigmoid(lf_raw)
+        m_new = jnp.maximum(lf + m, li)
+        i = jnp.exp(li - m_new)
+        f = jnp.exp(lf + m - m_new)
+        c = f * c + i * jnp.tanh(zz)
+        n = f * n + i
+        m = m_new
+        h = jax.nn.sigmoid(oo) * c / jnp.maximum(n, 1.0)
+        outs.append(h)
+    return jnp.stack(outs).astype(pre.dtype)

@@ -1,0 +1,2 @@
+# NOTE: deliberately does NOT import dryrun (which sets
+# XLA_FLAGS/device-count); import submodules explicitly.

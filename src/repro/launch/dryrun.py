@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: AOT-lower and compile every (architecture x input
+shape) combination on the production meshes, record memory / cost /
+collective analyses and the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun_results.json
+
+The single-pod mesh (16x16, data x model) lowers the per-cluster SL step —
+the program each Pigeon cluster runs independently.  The multi-pod mesh
+(2x16x16, pod x data x model) lowers the full ``pigeon_round_step`` for the
+train shape (cluster replicas sharded over "pod", validation-argmin-select
+and winner broadcast across pods) and pod-extended data parallelism for the
+inference shapes — proving the "pod" axis shards.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..configs import get_config, list_archs
+from . import hlo_analysis
+from .mesh import make_production_mesh
+from .roofline import model_flops_for, roofline_terms
+from .shapes import SHAPES, applicable
+from .steps import apply_shape_settings, input_specs
+
+
+def lower_and_compile(spec, save_hlo: Optional[str] = None) -> Dict[str, Any]:
+    t0 = time.time()
+    jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                     out_shardings=spec.out_shardings)
+    lowered = jitted.lower(*spec.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    if save_hlo:
+        os.makedirs(os.path.dirname(save_hlo), exist_ok=True)
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_txt = compiled.as_text()
+    ha = hlo_analysis.analyze_hlo(hlo_txt)
+    return {
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost_analysis": {
+            "flops_body_once": ca.get("flops"),
+            "bytes_body_once": ca.get("bytes accessed"),
+        },
+        "hlo": {
+            "flops_per_device": ha.flops,
+            "bytes_per_device": ha.bytes,
+            "collective_bytes_per_device": ha.coll_bytes,
+            "collectives_by_kind": {k: round(v) for k, v in ha.coll_by_kind.items()},
+            "collective_counts": ha.coll_count,
+        },
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            seq_shard_cache: bool = False, pigeon_clusters: Optional[int] = None,
+            save_hlo_dir: Optional[str] = None,
+            optimizations: tuple = ()) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    # the multi-pod train program is the full Pigeon round (R=2 clusters,
+    # one per pod); the single-pod program is one cluster's SL step.
+    if pigeon_clusters is None:
+        pigeon_clusters = 2 if (multi_pod and shape.kind == "train") else 0
+
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16(pod,data,model)" if multi_pod else "16x16(data,model)",
+        "chips": chips,
+        "program": ("pigeon_round_step" if pigeon_clusters else
+                    {"train": "train_step", "prefill": "prefill_step",
+                     "decode": "serve_step"}[shape.kind])
+                   + ("".join(f"+{o}" for o in optimizations))
+                   + ("+seq_shard_cache" if seq_shard_cache else ""),
+    }
+    try:
+        save_hlo = None
+        if save_hlo_dir:
+            tag = "multi" if multi_pod else "single"
+            tag += "".join(f"+{o}" for o in optimizations)
+            save_hlo = os.path.join(save_hlo_dir, f"{arch}_{shape_name}_{tag}.hlo.txt")
+        with mesh:
+            spec = input_specs(cfg, shape_name, mesh,
+                               pigeon_clusters=pigeon_clusters,
+                               seq_shard_cache=seq_shard_cache,
+                               optimizations=optimizations)
+            rec.update(lower_and_compile(spec, save_hlo))
+        rec["ok"] = True
+        # roofline (single-pod table is the baseline record)
+        tokens = shape.seq_len * shape.global_batch if shape.kind != "decode" \
+            else shape.global_batch
+        rl = roofline_terms(rec["hlo"]["flops_per_device"],
+                            rec["hlo"]["bytes_per_device"],
+                            rec["hlo"]["collective_bytes_per_device"],
+                            chips, shape.kind, cfg.active_param_count(), tokens)
+        rec["roofline"] = rl.as_dict()
+    except Exception as e:  # noqa: BLE001 — failures are bugs; record them
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--seq-shard-cache", action="store_true",
+                    help="flash-decoding cache layout (perf variant)")
+    ap.add_argument("--out", default=None, help="append results to this JSON file")
+    ap.add_argument("--save-hlo", default=None, metavar="DIR",
+                    help="dump optimized HLO text per combo into DIR")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="named optimization(s): moe_shard, pigeon_psum, "
+                         "mlstm_bf16_state (repeatable)")
+    ap.add_argument("--no-pigeon", action="store_true",
+                    help="multi-pod train: lower plain data-parallel "
+                         "train_step instead of pigeon_round_step (control)")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            ok, reason = applicable(arch, shape_name)
+            if not ok:
+                results.append({"arch": arch, "shape": shape_name,
+                                "skipped": True, "reason": reason})
+                print(f"SKIP  {arch:24s} {shape_name:12s} {reason}")
+                continue
+            for mp in meshes:
+                rec = run_one(arch, shape_name, mp,
+                              seq_shard_cache=args.seq_shard_cache,
+                              save_hlo_dir=args.save_hlo,
+                              optimizations=tuple(args.opt),
+                              pigeon_clusters=0 if args.no_pigeon else None)
+                results.append(rec)
+                status = "OK " if rec.get("ok") else "FAIL"
+                extra = ""
+                if rec.get("ok"):
+                    r = rec["roofline"]
+                    extra = (f"dom={r['dominant']:10s} "
+                             f"c={r['compute_s']:.2e}s m={r['memory_s']:.2e}s "
+                             f"x={r['collective_s']:.2e}s "
+                             f"compile={rec['compile_s']:.0f}s")
+                else:
+                    extra = rec.get("error", "")[:120]
+                print(f"{status}  {arch:24s} {shape_name:12s} "
+                      f"{rec['mesh']:22s} {extra}", flush=True)
+
+    if args.out:
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        # replace same-key records
+        def key(r):
+            return (r.get("arch"), r.get("shape"), r.get("mesh"), r.get("program"))
+        merged = {key(r): r for r in existing}
+        for r in results:
+            merged[key(r)] = r
+        with open(args.out, "w") as f:
+            json.dump(list(merged.values()), f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,330 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body exactly once
+(verified empirically in EXPERIMENTS.md §Dry-run), which under-counts
+scan-over-layers models by ~n_layers.  This analyzer re-derives the roofline
+terms from the HLO text with loop trip-count multiplication:
+
+  * FLOPs      — from ``dot`` / ``convolution`` instructions (2*M*N*K), the
+                 only FLOP-dense ops in these models;
+  * bytes      — per top-level instruction, operand-bytes + result-bytes
+                 (fusion bodies excluded: they never touch HBM);
+  * collective — per collective instruction, the per-device bytes moved
+                 (ring estimates: all-reduce 2x, all-gather/reduce-scatter
+                 (g-1)/g x gathered size, all-to-all 1x, collective-permute
+                 1x), multiplied through loop trip counts.
+
+Trip counts come from the loop condition computation (the scan bound is the
+max s32 constant compared against).  All counts are per-device (the HLO is
+the per-partition SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_TRIP_RE = re.compile(r"known_trip_count\W+n\W+(\d+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    rest: str                       # operand list + attrs
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    is_entry: bool = False
+    param_types: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(name=m.group(2), instrs=[],
+                                  is_entry=bool(m.group(1)))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        line = _COMMENT_RE.sub("", line)
+        mi = _INSTR_RE.match(line)
+        if mi:
+            cur.instrs.append(Instr(mi.group(1), mi.group(2).strip(),
+                                    mi.group(3), mi.group(4)))
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands are the leading %refs before the closing paren of the op call
+    depth, out, i = 1, [], 0
+    while i < len(rest) and depth > 0:
+        c = rest[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        i += 1
+    arglist = rest[: i - 1]
+    return re.findall(r"%([\w.\-]+)", arglist)
+
+
+def _group_size(rest: str, default: int) -> int:
+    # replica_groups=[8,4]<=[32]  -> group size 4 ... (iota format)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    # replica_groups={{0,1,2,3},...} -> size of first group
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "custom-call", "iota", "while",
+                   "conditional", "call", "partition-id", "replica-id"}
+
+
+def _instr_bytes(ins: Instr, rbytes: int, operand_bytes: List[int]) -> float:
+    """HBM-traffic estimate for one top-level instruction.
+
+    ``dynamic-update-slice`` (and fusions rooted in one — XLA's in-place
+    while-loop stash pattern) writes only the updated slice, so the full
+    buffer operand must not be counted per iteration; likewise a fusion
+    containing ``slice``/``dynamic-slice`` of a big buffer (scan reading its
+    per-step xs) only touches the slice it produces, not the whole operand
+    — without this rule an sLSTM time-scan is over-counted ~1000x
+    (EXPERIMENTS.md §Perf, hillclimb B diagnosis)."""
+    name_or_op = ins.name + " " + ins.op
+    total_ops = float(sum(operand_bytes))
+    largest = float(max(operand_bytes)) if operand_bytes else 0.0
+    if "dynamic-update-slice" in name_or_op or "scatter" in name_or_op:
+        # in-place window write: update + indices read, window written
+        return 2.0 * (total_ops - largest)
+    if "slice" in name_or_op or "gather" in name_or_op:
+        # only the produced window is touched in the big operand(s)
+        small = sum(o for o in operand_bytes if o <= 4 * max(rbytes, 1))
+        return 2.0 * rbytes + small
+    if ins.op == "fusion" and "reduce" not in name_or_op:
+        # generic fusion: an operand vastly larger than the result is a
+        # buffer the fusion slices internally (scan stash reads) — cap each
+        # operand at ~result size; reductions legitimately read everything.
+        cap = max(4.0 * rbytes, float(1 << 20))
+        return rbytes + sum(min(float(o), cap) for o in operand_bytes)
+    return rbytes + total_ops
+
+
+def analyze_computation(comp: Computation, types: Dict[str, str]) -> Tuple[CompCost, List[Tuple[str, str, float]]]:
+    """Returns (local cost, calls=[(kind, callee, mult_hint)])."""
+    cost = CompCost()
+    calls: List[Tuple[str, str, float]] = []
+    # local symbol table
+    local_types = dict(types)
+    for ins in comp.instrs:
+        local_types[ins.name] = ins.result_type
+    for ins in comp.instrs:
+        op = ins.op
+        rtype = ins.result_type
+        rbytes = _type_bytes(rtype)
+        opnames = _operand_names(ins.rest)
+        operand_bytes = [_type_bytes(local_types.get(o, "")) for o in opnames]
+        obytes = sum(operand_bytes)
+
+        if op == "dot":
+            out_elems = 1
+            for d in _shape_dims(rtype):
+                out_elems *= d
+            lhs_dims = _shape_dims(local_types.get(opnames[0], "")) if opnames else []
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+            k = 1
+            if m and m.group(1) and lhs_dims:
+                for d in m.group(1).split(","):
+                    di = int(d)
+                    if di < len(lhs_dims):
+                        k *= lhs_dims[di]
+            cost.flops += 2.0 * out_elems * k
+        elif op == "convolution":
+            out_elems = 1
+            for d in _shape_dims(rtype):
+                out_elems *= d
+            rhs_dims = _shape_dims(local_types.get(opnames[1], "")) if len(opnames) > 1 else []
+            k = 1
+            for d in rhs_dims[:-1]:
+                k *= d
+            cost.flops += 2.0 * out_elems * k
+
+        if op in COLLECTIVES:
+            g = _group_size(ins.rest, 2)
+            if op == "all-reduce":
+                moved = 2.0 * rbytes * (g - 1) / g
+            elif op == "all-gather":
+                moved = rbytes * (g - 1) / g
+            elif op == "reduce-scatter":
+                moved = obytes * (g - 1) / g
+            elif op == "all-to-all":
+                moved = rbytes * (g - 1) / g
+            else:  # collective-permute
+                moved = rbytes
+            cost.coll_bytes += moved
+            cost.coll_by_kind[op] = cost.coll_by_kind.get(op, 0.0) + moved
+            cost.coll_count[op] = cost.coll_count.get(op, 0) + 1
+
+        if op not in _SKIP_BYTES_OPS:
+            cost.bytes += _instr_bytes(ins, rbytes, operand_bytes)
+
+        # sub-computation references
+        m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+        if m:
+            calls.append(("fusion", m.group(1), 1.0))
+        if op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+            mt = _TRIP_RE.search(ins.rest)
+            hint = float(mt.group(1)) if mt else 0.0   # 0 => derive from cond
+            if mb and mc:
+                calls.append(("while", mb.group(1), hint))
+                calls.append(("while_cond", mc.group(1), hint))
+        if op in ("call", "conditional", "async-start"):
+            mt = re.search(r"to_apply=%?([\w.\-]+)", ins.rest)
+            if mt:
+                calls.append(("call", mt.group(1), 1.0))
+            for mm in re.finditer(r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w.\-,% ]+)", ins.rest):
+                for nm in re.findall(r"%?([\w.\-]+)", mm.group(1)):
+                    calls.append(("call", nm, 1.0))
+    return cost, calls
+
+
+def trip_count(comp: Computation) -> int:
+    """Max s32 constant in the loop condition — the scan bound."""
+    best = 1
+    for ins in comp.instrs:
+        if ins.op == "constant" and ins.result_type.startswith("s32"):
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    flops: float
+    bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    coll_count: Dict[str, int]
+
+
+def analyze_hlo(hlo: str) -> HLOAnalysis:
+    comps = parse_computations(hlo)
+    # pre-compute local costs and call lists
+    infos = {name: analyze_computation(c, {}) for name, c in comps.items()}
+
+    memo: Dict[str, CompCost] = {}
+
+    def total(name: str, seen=()) -> CompCost:
+        if name in memo:
+            return memo[name]
+        if name not in infos or name in seen:
+            return CompCost()
+        local, calls = infos[name]
+        agg = CompCost(local.flops, local.bytes, local.coll_bytes,
+                       dict(local.coll_by_kind), dict(local.coll_count))
+        pending_body: Optional[str] = None
+        for kind, callee, hint in calls:
+            if kind == "while":
+                pending_body = callee
+            elif kind == "while_cond":
+                n = hint or (trip_count(comps[callee]) if callee in comps else 1)
+                if pending_body:
+                    sub = total(pending_body, seen + (name,))
+                    _accumulate(agg, sub, n)
+                    pending_body = None
+                sub = total(callee, seen + (name,))
+                _accumulate(agg, sub, n)
+            elif kind == "fusion":
+                # fusion bodies never touch HBM: count their FLOPs, not bytes
+                sub = total(callee, seen + (name,))
+                _accumulate(agg, sub, 1, include_bytes=False)
+            else:
+                sub = total(callee, seen + (name,))
+                _accumulate(agg, sub, 1)
+        if pending_body:   # while with body parsed after cond or missing cond
+            sub = total(pending_body, seen + (name,))
+            _accumulate(agg, sub, 1)
+        memo[name] = agg
+        return agg
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HLOAnalysis(0, 0, 0, {}, {})
+    agg = total(entry)
+    return HLOAnalysis(agg.flops, agg.bytes, agg.coll_bytes,
+                       agg.coll_by_kind, agg.coll_count)
+
+
+def _accumulate(agg: CompCost, sub: CompCost, mult: float,
+                include_bytes: bool = True) -> None:
+    agg.flops += sub.flops * mult
+    if include_bytes:
+        agg.bytes += sub.bytes * mult
+    agg.coll_bytes += sub.coll_bytes * mult
+    for k, v in sub.coll_by_kind.items():
+        agg.coll_by_kind[k] = agg.coll_by_kind.get(k, 0.0) + v * mult
+    for k, v in sub.coll_count.items():
+        agg.coll_count[k] = agg.coll_count.get(k, 0) + int(v * mult)

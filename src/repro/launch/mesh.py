@@ -1,0 +1,32 @@
+"""Production mesh definitions (TPU v5e target).
+
+A pod is a 16x16 = 256-chip slice with ("data", "model") axes; the two-pod
+production job adds a leading "pod" axis.  In the Pigeon-SL mapping the
+"pod" axis carries *cluster parallelism*: with R = N + 1 = 2 clusters each
+pod trains one cluster's split network independently, and the cluster
+selection (argmin validation loss + parameter broadcast) is the only
+cross-pod collective — exactly the paper's communication pattern.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Axis names that carry the batch dimension."""
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+# TPU v5e hardware constants (per chip) for the roofline model.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

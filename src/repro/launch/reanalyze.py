@@ -1,0 +1,67 @@
+"""Re-run the static HLO analysis over saved .hlo.txt dumps and refresh the
+hlo/roofline fields in dryrun_results.json — lets accounting fixes apply to
+every recorded combo without recompiling.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze \
+      --hlo-dir experiments/hlo --out experiments/dryrun_results.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from ..configs import get_config
+from . import hlo_analysis
+from .roofline import roofline_terms
+from .shapes import SHAPES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo-dir", default="experiments/hlo")
+    ap.add_argument("--out", default="experiments/dryrun_results.json")
+    args = ap.parse_args()
+
+    with open(args.out) as f:
+        recs = json.load(f)
+
+    n_updated = 0
+    for rec in recs:
+        if not rec.get("ok"):
+            continue
+        tag = "multi" if "pod" in rec["mesh"] else "single"
+        opts = ""
+        if "+" in rec.get("program", ""):
+            opts = "+" + "+".join(rec["program"].split("+")[1:])
+        path = os.path.join(args.hlo_dir,
+                            f"{rec['arch']}_{rec['shape']}_{tag}{opts}.hlo.txt")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            ha = hlo_analysis.analyze_hlo(f.read())
+        rec["hlo"] = {
+            "flops_per_device": ha.flops,
+            "bytes_per_device": ha.bytes,
+            "collective_bytes_per_device": ha.coll_bytes,
+            "collectives_by_kind": {k: round(v) for k, v in ha.coll_by_kind.items()},
+            "collective_counts": ha.coll_count,
+        }
+        shape = SHAPES[rec["shape"]]
+        cfg = get_config(rec["arch"])
+        tokens = shape.seq_len * shape.global_batch if shape.kind != "decode" \
+            else shape.global_batch
+        rl = roofline_terms(ha.flops, ha.bytes, ha.coll_bytes, rec["chips"],
+                            shape.kind, cfg.active_param_count(), tokens)
+        rec["roofline"] = rl.as_dict()
+        n_updated += 1
+
+    with open(args.out, "w") as f:
+        json.dump(recs, f, indent=1)
+    print(f"re-analyzed {n_updated} records -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

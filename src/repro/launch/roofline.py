@@ -1,0 +1,61 @@
+"""Roofline model (TPU v5e): the three terms per (arch, shape, mesh).
+
+  compute term    = HLO_FLOPs / (chips * 197 TFLOP/s)
+  memory term     = HLO_bytes / (chips * 819 GB/s)
+  collective term = collective_bytes / (chips * 50 GB/s)
+
+FLOPs/bytes/collective_bytes are *global* (per-device analysis x chips);
+dividing by chips recovers the per-device time.  MODEL_FLOPS is the analytic
+6*N*D (train) / 2*N*D (prefill/decode) with N = active params, giving the
+useful-compute ratio that catches remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops_for(kind: str, active_params: int, tokens: int) -> float:
+    """Analytic model FLOPs for the step (global, all chips)."""
+    if kind == "train":
+        return 6.0 * active_params * tokens
+    # prefill and decode are forward-only
+    return 2.0 * active_params * tokens
+
+
+def roofline_terms(per_device_flops: float, per_device_bytes: float,
+                   per_device_coll_bytes: float, chips: int,
+                   kind: str, active_params: int, tokens: int) -> Roofline:
+    compute_s = per_device_flops / PEAK_FLOPS_BF16
+    memory_s = per_device_bytes / HBM_BW
+    coll_s = per_device_coll_bytes / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", coll_s)),
+        key=lambda kv: kv[1])[0]
+    mf = model_flops_for(kind, active_params, tokens)
+    global_flops = per_device_flops * chips
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops_global=global_flops,
+        useful_ratio=(mf / global_flops) if global_flops else 0.0,
+    )

@@ -1,0 +1,164 @@
+"""Sharding rules: params / batches / decode caches -> NamedSharding.
+
+Strategy (baseline, GSPMD-propagated):
+  * batch dims over ("pod","data") — pure data parallelism across pods
+    unless the pod axis is carrying Pigeon clusters (see steps.pigeon_round);
+  * weight matrices tensor-parallel over "model": the FFN/attention
+    projection *output* dim for the up-projections, the *input* dim for the
+    down-projections (Megatron pattern: one all-reduce per block);
+  * MoE expert banks expert-parallel over "model" (experts % 16 == 0 for
+    both MoE archs);
+  * vocab (embedding rows / head columns) over "model";
+  * everything small (norms, biases, gates, conv kernels) replicated.
+
+A dim is only sharded when divisible by the axis size; otherwise the rule
+falls through to replication — GSPMD then picks the collectives.  Leaves
+inside a layer stack have a leading layer dim which is never sharded.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# leaf-name patterns -> which logical dim gets the "model" axis.
+# dims are indexed from the END of the shape so stacked leading dims are
+# transparent ("-1" = last dim, "-2" = second-to-last).
+_RULES = [
+    (r"embed$", -2),                    # (V, D) shard vocab rows
+    (r"head/w$", -1),                   # (D, V) shard vocab cols
+    (r"(wq|wk|wv)/w$", -1),             # (D, H*hd) shard heads-out
+    (r"(wq|wk|wv)/b$", -1),
+    (r"wo/w$", -2),                     # (H*hd, D) shard heads-in
+    (r"(gate|up)/w$", -1),              # (D, F) shard ffn-out
+    (r"down/w$", -2),                   # (F, D) shard ffn-in
+    (r"moe/(gate|up)$", -3),            # (E, D, F) expert parallel
+    (r"moe/down$", -3),                 # (E, F, D) expert parallel
+    (r"shared/(gate|up)/w$", -1),
+    (r"shared/down/w$", -2),
+    (r"in_proj/w$", -1),                # mamba (D, d_in_proj)
+    (r"out_proj/w$", -2),               # mamba (di, D)
+    (r"w_dkv/w$", -1),                  # MLA down-proj
+    (r"(w_uk|w_uv)/w$", -1),            # MLA up-proj (rank, H*hd)
+    (r"w_if/w$", -1),
+    (r"r$", None),                      # slstm recurrent: replicate
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _spec_for_leaf(path: str, shape: Tuple[int, ...], model_size: int,
+                   model_axis: str = "model", cluster_axis: Optional[str] = None,
+                   cluster_dim: bool = False) -> P:
+    """cluster_dim: the leaf carries a leading cluster-replica dim (sharded
+    over cluster_axis); the name rules then apply to the remaining dims."""
+    ndim = len(shape)
+    lead = 1 if (cluster_dim and cluster_axis is not None) else 0
+    spec = [None] * ndim
+    for pat, dim in _RULES:
+        if re.search(pat, path):
+            if dim is not None:
+                d = ndim + dim
+                if lead <= d < ndim and shape[d] % model_size == 0 and shape[d] >= model_size:
+                    spec[d] = model_axis
+            break
+    if lead:
+        spec[0] = cluster_axis
+    return P(*spec)
+
+
+def param_shardings(params_shape: Pytree, mesh: Mesh,
+                    cluster_axis: Optional[str] = None) -> Pytree:
+    """Build NamedShardings for a params pytree (of ShapeDtypeStructs or
+    arrays).  If ``cluster_axis`` is given, every leaf is assumed to carry a
+    leading cluster-replica dim sharded over that axis (the multi-pod
+    Pigeon layout)."""
+    model_size = mesh.shape["model"]
+
+    def one(path, leaf):
+        spec = _spec_for_leaf(_path_str(path), tuple(leaf.shape), model_size,
+                              cluster_axis=cluster_axis,
+                              cluster_dim=cluster_axis is not None)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_shardings(batch_shape: Pytree, mesh: Mesh,
+                    cluster_axis: Optional[str] = None) -> Pytree:
+    """Batch dim over ("pod","data") (or ("data",) on one pod).  If
+    cluster_axis is set, a leading cluster dim is sharded over it and the
+    batch goes over the remaining data axes."""
+    dp = [n for n in mesh.axis_names if n in ("pod", "data") and n != cluster_axis]
+    dp_axes = tuple(dp) if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(leaf):
+        spec = [dp_axes] + [None] * (len(leaf.shape) - 1)
+        if cluster_axis is not None:
+            spec = [cluster_axis] + spec[:len(leaf.shape) - 1]
+        return NamedSharding(mesh, P(*spec[: len(leaf.shape)]))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(cache_shape: Pytree, mesh: Mesh, batch: int,
+                    seq_shard: bool = False) -> Pytree:
+    """Decode-cache shardings.
+
+    Default: shard the cache batch dim over ("pod","data") when divisible,
+    the kv-heads dim over "model" when divisible, else replicate.
+    ``seq_shard=True`` (long-context flash-decoding layout) shards the
+    *sequence* dim of attention caches over the data axes instead — the
+    layout consumed by the shard_map decode-attention optimisation.
+    """
+    dp = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    model_size = mesh.shape["model"]
+    dp_axes = dp if len(dp) > 1 else dp[0]
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        name = _path_str(path)
+        spec = [None] * len(shape)
+        # stacked layer dim first for stacked caches: (L, B, S, H, hd)
+        bdim = 1 if len(shape) >= 2 and shape[0] != batch else 0
+        if "k" == name.split("/")[-1] or "v" == name.split("/")[-1] \
+                or "latent" in name or "k_rope" in name:
+            sdim = bdim + 1
+            if seq_shard and shape[sdim] % dp_size == 0:
+                spec[sdim] = dp_axes
+            elif shape[bdim] % dp_size == 0:
+                spec[bdim] = dp_axes
+            # kv-heads over model if present and divisible; otherwise fall
+            # back to sharding the cache sequence over "model" (kv=8 heads
+            # cannot split over 16) so a 32k cache still fits HBM
+            if len(shape) >= sdim + 3 and shape[sdim + 1] % model_size == 0:
+                spec[sdim + 1] = "model"
+            elif spec[sdim] is None and shape[sdim] % model_size == 0:
+                spec[sdim] = "model"
+        else:
+            # recurrent states: (L, B, H, P, N) — batch over data, heads over model
+            if shape[bdim] % dp_size == 0:
+                spec[bdim] = dp_axes
+            if len(shape) > bdim + 1 and shape[bdim + 1] % model_size == 0:
+                spec[bdim + 1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

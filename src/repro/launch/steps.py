@@ -1,0 +1,341 @@
+"""The compiled step functions and their ShapeDtypeStruct input specs.
+
+Four programs cover the assigned (arch x shape) grid:
+
+  * ``train_step``        — one SL mini-batch update of a cluster's split
+                            network (client + AP halves fused into one SPMD
+                            program; the cut is a logical boundary).
+  * ``prefill_step``      — full-sequence forward, last-token logits.
+  * ``serve_step``        — ONE new token against a seq_len KV cache.
+  * ``pigeon_round_step`` — the multi-pod program: R cluster replicas
+                            stacked on a leading dim (sharded over the "pod"
+                            axis), per-cluster SGD update + shared-set
+                            validation loss + argmin selection + broadcast
+                            of the winning parameters — the paper's entire
+                            global round as one SPMD program.
+
+``input_specs(arch, shape, mesh)`` builds the matching ShapeDtypeStruct
+stand-ins (weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import build_model
+from ..models.config import ModelConfig
+from ..models.model import Model
+from . import shardings as shd
+from .shapes import SHAPES, InputShape, shape_settings
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# batch spec construction
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape: InputShape, cluster_dim: int = 0) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one training/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    lead = (cluster_dim,) if cluster_dim else ()
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.dtype]
+    if cfg.arch_type == "vlm":
+        npx = cfg.n_prefix_tokens
+        return {
+            "patches": jax.ShapeDtypeStruct(lead + (b, npx, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct(lead + (b, s - npx), jnp.int32),
+            "labels": jax.ShapeDtypeStruct(lead + (b, s - npx), jnp.int32),
+        }
+    if cfg.arch_type in ("audio", "encdec"):
+        s_half = s // 2
+        return {
+            "frames": jax.ShapeDtypeStruct(lead + (b, s_half, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct(lead + (b, s_half), jnp.int32),
+            "labels": jax.ShapeDtypeStruct(lead + (b, s_half), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct(lead + (b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(lead + (b, s), jnp.int32),
+    }
+
+
+def decode_structs(cfg: ModelConfig, model: Model, shape: InputShape):
+    """(tokens, index, cache, memory?) ShapeDtypeStructs for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.dtype]
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s, dt))
+    memory = None
+    if cfg.arch_type in ("audio", "encdec"):
+        memory = jax.ShapeDtypeStruct((b, min(4096, s // 8), cfg.d_model), dt)
+    return tokens, index, cache, memory
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, lr: float = 1e-3) -> Callable:
+    def train_step(params, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new_params, loss
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        h, _ = model.forward(params, batch)
+        # last-position logits — the serving prefill output
+        return (h[:, -1:, :] @ params["head"]["w"]).astype(jnp.float32)
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    def serve_step(params, cache, tokens, index, memory=None):
+        logits, new_cache = model.decode_step(params, cache, tokens, index, memory)
+        return logits.astype(jnp.float32), new_cache
+    return serve_step
+
+
+def make_pigeon_round_step_shardmap(model: Model, mesh, lr: float = 1e-3,
+                                    n_clusters: int = 2) -> Callable:
+    """Cluster parallelism as a *manual* pod-axis shard_map (§Perf hillclimb
+    C iteration 3): each pod runs its cluster's un-vmapped train+validate
+    program (data/model axes stay GSPMD-auto), and the only cross-pod
+    collectives are the R-sized loss all-gather and the winner psum."""
+    from jax.sharding import PartitionSpec as P
+    train = make_train_step(model, lr)
+
+    def per_pod(stacked_params, batch, val_batch):
+        # local leaves carry a leading cluster dim of size 1
+        params = jax.tree.map(lambda x: x[0], stacked_params)
+        batch = jax.tree.map(lambda x: x[0], batch)
+        new_params, _ = train(params, batch)
+        # keep the shared-set forward sharded over the (auto) data axis
+        val_batch = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, P("data", *([None] * (x.ndim - 1)))), val_batch)
+        vloss, _ = model.loss(new_params, val_batch)
+        losses = jax.lax.all_gather(vloss, "pod")               # (R,)
+        sel = jnp.argmin(losses)
+        mine = (jax.lax.axis_index("pod") == sel)
+        winner = jax.tree.map(
+            lambda x: jax.lax.psum(
+                jnp.where(mine, x, jnp.zeros_like(x)).astype(jnp.float32),
+                "pod").astype(x.dtype),
+            new_params)
+        out = jax.tree.map(lambda x: x[None], winner)
+        return out, losses, sel
+
+    def round_step(stacked_params, batches, val_batch):
+        p_specs = jax.tree.map(lambda _: P("pod"), stacked_params)
+        b_specs = jax.tree.map(lambda _: P("pod"), batches)
+        v_specs = jax.tree.map(lambda _: P(), val_batch)
+        fn = jax.shard_map(
+            per_pod, mesh=mesh,
+            in_specs=(p_specs, b_specs, v_specs),
+            out_specs=(jax.tree.map(lambda _: P("pod"), stacked_params),
+                       P(), P()),
+            check_vma=False,
+            axis_names={"pod"})
+        return fn(stacked_params, batches, val_batch)
+
+    return round_step
+
+
+def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3,
+                                n_clusters: int = 2) -> Callable:
+    """Beyond-paper Pigeon-SL+ round for the multi-pod mapping.
+
+    Paper's Pigeon-SL+ trains ONLY the selected cluster for R-1 extra
+    sub-rounds — on the pod mapping that leaves R-1 pods idle.  Here the
+    extra sub-round trains the winner on BOTH pods data-parallel (each pod
+    contributes gradients from its own sub-batch; one cross-pod grad
+    all-reduce), so the + phase runs at full-fleet throughput while keeping
+    the paper's semantics (extra updates flow only into the winning
+    cluster's parameters).
+    """
+    base = make_pigeon_round_step(model, lr, n_clusters)
+
+    def plus_round(stacked_params, batches, val_batch, plus_batches):
+        rebro, vlosses, sel = base(stacked_params, batches, val_batch)
+        # all cluster slots now hold the winner; the extra sub-round is a
+        # plain DP step over (pod, data): treat the cluster dim of
+        # plus_batches as additional batch parallelism.
+        def one(params, batch):
+            new_params, loss = make_train_step(model, lr)(params, batch)
+            return new_params, loss
+
+        new_stacked, losses = jax.vmap(one)(rebro, plus_batches)
+        # average the replicas' updates (they started identical, trained on
+        # different data => params differ by their grad contributions)
+        mean_params = jax.tree.map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
+            new_stacked)
+        out = jax.tree.map(
+            lambda m, full: jnp.broadcast_to(m[None], full.shape).astype(full.dtype),
+            mean_params, new_stacked)
+        return out, vlosses, sel
+
+    return plus_round
+
+
+def make_pigeon_round_step(model: Model, lr: float = 1e-3, n_clusters: int = 2,
+                           psum_select: bool = False) -> Callable:
+    """One Pigeon-SL global round over R stacked cluster replicas.
+
+    stacked_params: every leaf has leading dim R (sharded over "pod").
+    batches:        (R, B, S) per-cluster token batches.
+    val_batch:      shared D_o batch, replicated — each cluster evaluates the
+                    same reference set (Section III-C).
+    Returns (new_stacked_params, val_losses, selected_idx).
+    """
+    train = make_train_step(model, lr)
+
+    def one_cluster(params, batch, val_batch):
+        new_params, _ = train(params, batch)
+        vloss, _ = model.loss(new_params, val_batch)
+        return new_params, vloss
+
+    def round_step(stacked_params, batches, val_batch):
+        new_stacked, vlosses = jax.vmap(one_cluster, in_axes=(0, 0, None))(
+            stacked_params, batches, val_batch)
+        sel = jnp.argmin(vlosses)
+        # the paper's "selected cluster shares its params with the first
+        # clients of the next round" collective, across the pod axis.
+        if psum_select:
+            # one-hot contraction over the cluster axis: lowers to a single
+            # masked all-reduce per leaf instead of the gather+full-replicate
+            # path GSPMD emits for dynamic indexing (§Perf hillclimb C).
+            onehot = (jnp.arange(n_clusters) == sel)
+            def pick(x):
+                oh = onehot.astype(jnp.float32).reshape((-1,) + (1,) * (x.ndim - 1))
+                s = jnp.sum(x.astype(jnp.float32) * oh, axis=0)
+                return jnp.broadcast_to(s[None], x.shape).astype(x.dtype)
+            rebro = jax.tree.map(pick, new_stacked)
+        else:
+            selected = jax.tree.map(lambda x: jnp.take(x, sel, axis=0), new_stacked)
+            rebro = jax.tree.map(
+                lambda s, full: jnp.broadcast_to(s[None], full.shape).astype(full.dtype),
+                selected, new_stacked)
+        return rebro, vlosses, sel
+
+    return round_step
+
+
+# ---------------------------------------------------------------------------
+# input_specs — everything dryrun.py needs to lower one (arch, shape, mesh)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoweringSpec:
+    fn: Callable
+    args: Tuple                 # ShapeDtypeStructs
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()
+
+
+def apply_shape_settings(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    return dataclasses.replace(cfg, **shape_settings(shape))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
+                pigeon_clusters: int = 0, lr: float = 1e-3,
+                seq_shard_cache: bool = False,
+                optimizations: Tuple[str, ...] = ()) -> LoweringSpec:
+    """Build the (fn, ShapeDtypeStruct args, shardings) triple for one
+    (architecture x input-shape x mesh) combination."""
+    shape = SHAPES[shape_name]
+    cfg = apply_shape_settings(cfg, shape)
+    if optimizations:
+        cfg = dataclasses.replace(
+            cfg, optimizations=tuple(cfg.optimizations) + tuple(optimizations))
+    model = build_model(cfg)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+    if shape.kind == "train":
+        if pigeon_clusters:
+            r = pigeon_clusters
+            p_shard = shd.param_shardings(
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct((r,) + x.shape, x.dtype),
+                             params_shape), mesh, cluster_axis="pod")
+            stacked = jax.tree.map(lambda x: jax.ShapeDtypeStruct((r,) + x.shape, x.dtype),
+                                   params_shape)
+            # "pigeon_batch_split": each cluster trains global_batch/R, so
+            # the robust round costs the same tokens/step as plain DP
+            # (§Perf hillclimb C iteration 2)
+            per_cluster_b = (shape.global_batch // r
+                             if "pigeon_batch_split" in cfg.optimizations
+                             else shape.global_batch)
+            batches = batch_struct(cfg, dataclasses.replace(
+                shape, global_batch=per_cluster_b), cluster_dim=r)
+            b_shard = shd.batch_shardings(batches, mesh, cluster_axis="pod")
+            val_shape = dataclasses.replace(shape, global_batch=max(
+                16, shape.global_batch // 8))
+            val_batch = batch_struct(cfg, val_shape)
+            # the shared set D_o is replicated across pods (every cluster
+            # validates the same data — §III-C) but sharded over the data
+            # axis *within* a pod; leaving it fully replicated makes GSPMD
+            # replicate the validation forward 16x (§Perf hillclimb C it.4)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            v_shard = jax.tree.map(
+                lambda x: NamedSharding(mesh, P("data", *([None] * (x.ndim - 1)))),
+                val_batch)
+            if "pigeon_plus" in cfg.optimizations:
+                fn = make_pigeon_plus_round_step(model, lr, r)
+                plus_batches = batch_struct(cfg, dataclasses.replace(
+                    shape, global_batch=per_cluster_b), cluster_dim=r)
+                pb_shard = shd.batch_shardings(plus_batches, mesh,
+                                               cluster_axis="pod")
+                return LoweringSpec(fn, (stacked, batches, val_batch, plus_batches),
+                                    (p_shard, b_shard, v_shard, pb_shard), None)
+            if "pigeon_shardmap" in cfg.optimizations:
+                fn = make_pigeon_round_step_shardmap(model, mesh, lr, r)
+            else:
+                fn = make_pigeon_round_step(model, lr, r,
+                                            psum_select="pigeon_psum" in cfg.optimizations)
+            return LoweringSpec(fn, (stacked, batches, val_batch),
+                                (p_shard, b_shard, v_shard), None)
+        p_shard = shd.param_shardings(params_shape, mesh)
+        batch = batch_struct(cfg, shape)
+        b_shard = shd.batch_shardings(batch, mesh)
+        fn = make_train_step(model, lr)
+        return LoweringSpec(fn, (params_shape, batch), (p_shard, b_shard), None)
+
+    if shape.kind == "prefill":
+        p_shard = shd.param_shardings(params_shape, mesh)
+        batch = batch_struct(cfg, shape)
+        b_shard = shd.batch_shardings(batch, mesh)
+        fn = make_prefill_step(model)
+        return LoweringSpec(fn, (params_shape, batch), (p_shard, b_shard), None)
+
+    # decode
+    tokens, index, cache, memory = decode_structs(cfg, model, shape)
+    p_shard = shd.param_shardings(params_shape, mesh)
+    c_shard = shd.cache_shardings(cache, mesh, shape.global_batch,
+                                  seq_shard=seq_shard_cache or shape.global_batch == 1)
+    t_shard = shd.batch_shardings({"t": tokens}, mesh)["t"] \
+        if shape.global_batch % np.prod([mesh.shape[a] for a in mesh.axis_names
+                                         if a in ("pod", "data")]) == 0 \
+        else shd.replicated(mesh)
+    i_shard = shd.replicated(mesh)
+    fn = make_serve_step(model)
+    args = (params_shape, cache, tokens, index)
+    in_sh = (p_shard, c_shard, t_shard, i_shard)
+    if memory is not None:
+        args = args + (memory,)
+        in_sh = in_sh + (shd.batch_shardings({"m": memory}, mesh)["m"],)
+    return LoweringSpec(fn, args, in_sh, None)

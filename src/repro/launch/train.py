@@ -1,0 +1,91 @@
+"""Training launcher.
+
+Runs the Pigeon-SL protocol (or a baseline) over any registered architecture
+at smoke scale on CPU, or over the paper's CNNs:
+
+  PYTHONPATH=src python -m repro.launch.train --task mnist --protocol pigeon+ \
+      --attack label_flip --malicious 2 --rounds 10
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
+      --protocol pigeon --attack gradient --rounds 3
+
+The full-size configs are trained via the dry-run/production path (pjit on
+the 16x16 mesh) — on this CPU container only the reduced variants execute.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from ..configs import get_smoke_config, list_archs
+from ..core import (Attack, HONEST, ProtocolConfig, from_cnn, from_lm,
+                    run_pigeon, run_splitfed, run_vanilla_sl)
+from ..data import build_image_task, build_lm_task
+from ..models import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default=None, choices=["mnist", "cifar10"])
+    ap.add_argument("--arch", default=None, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (required on CPU)")
+    ap.add_argument("--protocol", default="pigeon+",
+                    choices=["pigeon", "pigeon+", "vanilla", "sfl"])
+    ap.add_argument("--attack", default="none",
+                    choices=["none", "label_flip", "activation", "gradient",
+                             "param_tamper"])
+    ap.add_argument("--malicious", type=int, default=0,
+                    help="number of malicious clients (first k ids)")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--tolerance", type=int, default=1,
+                    help="N, the malicious-client budget (R = N+1)")
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--local-steps", type=int, default=5, help="E")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.task:
+        data, cnn_cfg = build_image_task(args.task, m_clients=args.clients,
+                                         d_m=300, d_o=150, n_test=1000,
+                                         seed=args.seed)
+        module = from_cnn(cnn_cfg)
+        lr = args.lr or (0.05 if args.task == "mnist" else 0.02)
+    else:
+        arch = args.arch or "qwen3-8b"
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        module = from_lm(model)
+        data = build_lm_task(vocab=cfg.vocab, seq_len=32,
+                             m_clients=args.clients, d_m=64, d_o=32,
+                             n_test=32, seed=args.seed)
+        lr = args.lr or 5e-2
+
+    pcfg = ProtocolConfig(M=args.clients, N=args.tolerance, T=args.rounds,
+                          E=args.local_steps, B=args.batch, lr=lr,
+                          seed=args.seed)
+    attack = HONEST if args.attack == "none" else Attack(args.attack)
+    malicious = set(range(args.malicious))
+
+    t0 = time.time()
+    if args.protocol == "vanilla":
+        hist = run_vanilla_sl(module, data, pcfg, malicious, attack, verbose=True)
+    elif args.protocol == "sfl":
+        hist = run_splitfed(module, data, pcfg, malicious, attack, verbose=True)
+    else:
+        hist = run_pigeon(module, data, pcfg, malicious, attack,
+                          plus=args.protocol == "pigeon+", verbose=True)
+    dt = time.time() - t0
+    final = hist.rounds[-1].get("test_acc")
+    print(f"done: {args.protocol} rounds={args.rounds} "
+          f"final_test_acc={final} wall={dt:.1f}s")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(hist.rounds, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .config import ModelConfig, reduce_config
+from .model import Model, build_model, build_plan
+from .cnn import CNNConfig, MNIST_CNN, CIFAR_CNN
+
+__all__ = ["ModelConfig", "reduce_config", "Model", "build_model", "build_plan",
+           "CNNConfig", "MNIST_CNN", "CIFAR_CNN"]

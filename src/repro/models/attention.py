@@ -1,0 +1,309 @@
+"""Attention layers: GQA (with RoPE / QK-norm / bias / sliding window) and MLA.
+
+Two execution paths:
+  * ``attend``         — reference path, materialises the (q, k) score matrix.
+  * ``attend_chunked`` — scan over query chunks; O(chunk * seq) live memory.
+                         This is the XLA-level "flash" path used for long
+                         sequences in the dry-run; the Pallas kernel in
+                         ``repro.kernels.flash_attention`` is the TPU hot-path.
+
+Decode path keeps a (batch, max_seq, kv_heads, head_dim) cache per layer and
+supports sliding-window eviction-free masking (we mask instead of evicting so
+that the cache layout stays static for XLA).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import Params, apply_rope, linear, linear_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int = 0           # 0 => full/global attention
+    softmax_scale: Optional[float] = None
+    q_chunk: int = 0                  # 0 => un-chunked reference path
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: AttnConfig, dtype=jnp.float32) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(kq, cfg.d_model, cfg.n_heads * cfg.head_dim, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": linear_init(kk, cfg.d_model, cfg.n_kv_heads * cfg.head_dim, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": linear_init(kv, cfg.d_model, cfg.n_kv_heads * cfg.head_dim, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": linear_init(ko, cfg.n_heads * cfg.head_dim, cfg.d_model, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# masking helpers
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window: int = 0) -> jnp.ndarray:
+    """(q, k) boolean mask — True means *attend*."""
+    m = q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        m = m & (q_pos[:, None] - k_pos[None, :] < window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, Hkv*groups, D)."""
+    if groups == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, groups, d)).reshape(b, s, h * groups, d)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray,
+           scale: float) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k, v: (B, Sk, H, D); mask: (Sq, Sk) or (B, Sq, Sk)."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None, None, :, :]
+    else:
+        mask = mask[:, None, :, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attend_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   q_pos: jnp.ndarray, k_pos: jnp.ndarray, scale: float,
+                   window: int, q_chunk: int) -> jnp.ndarray:
+    """Scan over query chunks to bound live memory (XLA flash equivalent)."""
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]                      # MLA: value dim != query dim
+    q_chunk = largest_divisor_chunk(sq, q_chunk)
+    n_chunks = sq // q_chunk
+    qc = q.reshape(b, n_chunks, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(n_chunks, q_chunk)
+
+    def one_chunk(carry, xs):
+        qi, pi = xs
+        m = causal_mask(pi, k_pos, window)
+        out = attend(qi, k, v, m, scale)
+        return carry, out
+
+    _, outs = jax.lax.scan(one_chunk, None, (qc, pc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv)
+
+
+def largest_divisor_chunk(s: int, chunk: int) -> int:
+    """Largest chunk <= requested that divides s (seqs like 3840 = 4096-256
+    patches aren't powers of two)."""
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    return chunk
+
+
+# ---------------------------------------------------------------------------
+# full layer forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p: Params, cfg: AttnConfig, x: jnp.ndarray,
+                positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Causal self-attention over a full sequence.  x: (B, S, d_model)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q = linear(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = linear(p["wk"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = cfg.softmax_scale or (1.0 / math.sqrt(cfg.head_dim))
+    if cfg.q_chunk and s > cfg.q_chunk:
+        out = attend_chunked(q, k, v, positions, positions, scale, cfg.sliding_window, cfg.q_chunk)
+    else:
+        mask = causal_mask(positions, positions, cfg.sliding_window)
+        out = attend(q, k, v, mask, scale)
+    return linear(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.head_dim))
+
+
+def gqa_cross_forward(p: Params, cfg: AttnConfig, x: jnp.ndarray,
+                      memory: jnp.ndarray) -> jnp.ndarray:
+    """Cross-attention (no causal mask, no rope on memory side positions
+    beyond index order).  Used by the encoder-decoder architecture."""
+    b, sq, _ = x.shape
+    sk = memory.shape[1]
+    q = linear(p["wq"], x).reshape(b, sq, cfg.n_heads, cfg.head_dim)
+    k = linear(p["wk"], memory).reshape(b, sk, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], memory).reshape(b, sk, cfg.n_kv_heads, cfg.head_dim)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = cfg.softmax_scale or (1.0 / math.sqrt(cfg.head_dim))
+    mask = jnp.ones((sq, sk), dtype=bool)
+    out = attend(q, k, v, mask, scale)
+    return linear(p["wo"], out.reshape(b, sq, cfg.n_heads * cfg.head_dim))
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token) with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_seq: int, cfg: AttnConfig, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    return {
+        "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def gqa_decode(p: Params, cfg: AttnConfig, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               index: jnp.ndarray) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step.  x: (B, 1, d_model); cache holds max_seq positions;
+    ``index`` is the scalar position of the new token."""
+    b = x.shape[0]
+    q = linear(p["wq"], x).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k_new = linear(p["wk"], x).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v_new = linear(p["wv"], x).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k_new = rmsnorm(p["k_norm"], k_new)
+    pos = jnp.full((1,), index, dtype=jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, index, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, index, 0, 0))
+
+    max_seq = k_cache.shape[1]
+    k_pos = jnp.arange(max_seq)
+    valid = k_pos <= index
+    if cfg.sliding_window > 0:
+        valid = valid & (index - k_pos < cfg.sliding_window)
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k_all = _repeat_kv(k_cache, groups)
+    v_all = _repeat_kv(v_cache, groups)
+    scale = cfg.softmax_scale or (1.0 / math.sqrt(cfg.head_dim))
+    out = attend(q, k_all, v_all, valid[None, :], scale)
+    y = linear(p["wo"], out.reshape(b, 1, cfg.n_heads * cfg.head_dim))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2), decode caches the latent.
+# ---------------------------------------------------------------------------
+
+class MLAConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    head_dim: int
+    kv_lora_rank: int
+    rope_dim: int = 64            # decoupled rope sub-dimension
+    rope_theta: float = 10000.0
+    q_chunk: int = 0
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": linear_init(ks[0], cfg.d_model, cfg.n_heads * (cfg.head_dim + cfg.rope_dim), dtype=dtype),
+        # joint KV low-rank compression + decoupled shared rope key
+        "w_dkv": linear_init(ks[1], cfg.d_model, cfg.kv_lora_rank + cfg.rope_dim, dtype=dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "w_uk": linear_init(ks[2], cfg.kv_lora_rank, cfg.n_heads * cfg.head_dim, dtype=dtype),
+        "w_uv": linear_init(ks[3], cfg.kv_lora_rank, cfg.n_heads * cfg.head_dim, dtype=dtype),
+        "wo": linear_init(ks[4], cfg.n_heads * cfg.head_dim, cfg.d_model, dtype=dtype),
+    }
+
+
+def mla_forward(p: Params, cfg: MLAConfig, x: jnp.ndarray,
+                positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence MLA.  Content path is rope-free (latent-cacheable); a
+    decoupled rope sub-key carries position, shared across heads."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q_full = linear(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim + cfg.rope_dim)
+    q_c, q_r = q_full[..., : cfg.head_dim], q_full[..., cfg.head_dim:]
+    dkv = linear(p["w_dkv"], x)
+    latent = rmsnorm(p["kv_norm"], dkv[..., : cfg.kv_lora_rank])
+    k_rope = dkv[..., cfg.kv_lora_rank:].reshape(b, s, 1, cfg.rope_dim)
+    k_c = linear(p["w_uk"], latent).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    v = linear(p["w_uv"], latent).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    q_r = apply_rope(q_r, positions, cfg.rope_theta)
+    k_r = apply_rope(k_rope, positions, cfg.rope_theta)
+    k_r = jnp.broadcast_to(k_r, (b, s, cfg.n_heads, cfg.rope_dim))
+    q = jnp.concatenate([q_c, q_r], axis=-1)
+    k = jnp.concatenate([k_c, k_r], axis=-1)
+    scale = 1.0 / math.sqrt(cfg.head_dim + cfg.rope_dim)
+    if cfg.q_chunk and s > cfg.q_chunk:
+        out = attend_chunked(q, k, v, positions, positions, scale, 0, cfg.q_chunk)
+    else:
+        mask = causal_mask(positions, positions)
+        out = attend(q, k, v, mask, scale)
+    return linear(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.head_dim))
+
+
+def init_mla_cache(batch: int, max_seq: int, cfg: MLAConfig, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    """MLA decode cache: compressed latent + shared rope key (the whole point
+    of MLA — cache is rank+rope_dim wide instead of 2*heads*head_dim)."""
+    return {
+        "latent": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.rope_dim), dtype),
+    }
+
+
+def mla_decode(p: Params, cfg: MLAConfig, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               index: jnp.ndarray) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    b = x.shape[0]
+    q_full = linear(p["wq"], x).reshape(b, 1, cfg.n_heads, cfg.head_dim + cfg.rope_dim)
+    q_c, q_r = q_full[..., : cfg.head_dim], q_full[..., cfg.head_dim:]
+    pos = jnp.full((1,), index, dtype=jnp.int32)
+    q_r = apply_rope(q_r, pos, cfg.rope_theta)
+    dkv = linear(p["w_dkv"], x)
+    latent_new = rmsnorm(p["kv_norm"], dkv[..., : cfg.kv_lora_rank])
+    k_rope_new = apply_rope(dkv[..., cfg.kv_lora_rank:].reshape(b, 1, 1, cfg.rope_dim), pos,
+                            cfg.rope_theta).reshape(b, 1, cfg.rope_dim)
+    latent = jax.lax.dynamic_update_slice(cache["latent"], latent_new.astype(cache["latent"].dtype), (0, index, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, index, 0))
+
+    # absorb: score = q_c^T W_uk latent + q_r^T k_rope
+    w_uk = p["w_uk"]["w"].reshape(cfg.kv_lora_rank, cfg.n_heads, cfg.head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_c, w_uk)               # (b,1,h,rank)
+    scores_c = jnp.einsum("bqhr,bkr->bhqk", q_lat, latent)
+    scores_r = jnp.einsum("bqhd,bkd->bhqk", q_r, k_rope)
+    scale = 1.0 / math.sqrt(cfg.head_dim + cfg.rope_dim)
+    scores = (scores_c + scores_r).astype(jnp.float32) * scale
+    max_seq = latent.shape[1]
+    valid = jnp.arange(max_seq) <= index
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(latent.dtype)
+    ctx_lat = jnp.einsum("bhqk,bkr->bqhr", probs, latent)         # (b,1,h,rank)
+    w_uv = p["w_uv"]["w"].reshape(cfg.kv_lora_rank, cfg.n_heads, cfg.head_dim)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx_lat, w_uv)
+    y = linear(p["wo"], out.reshape(b, 1, cfg.n_heads * cfg.head_dim))
+    return y, {"latent": latent, "k_rope": k_rope}

@@ -1,0 +1,143 @@
+"""Common neural-net building blocks (pure JAX, dict-based params).
+
+Every block follows the ``init(key, ...) -> params`` / ``apply(params, x, ...)``
+convention.  Params are plain nested dicts of ``jnp.ndarray`` so that they can
+be sliced for the split-learning cut layer, stacked for ``lax.scan`` and
+sharded with ``NamedSharding`` without any framework dependency.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None):
+    """Truncated-normal (fan-in) initialisation for a dense kernel."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / norm primitives
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.float32) -> Params:
+    p = {"w": dense_init(key, d_in, d_out, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU and plain GeLU variants)
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d_model, d_ff, dtype=dtype),
+        "up": linear_init(k2, d_model, d_ff, dtype=dtype),
+        "down": linear_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": linear_init(k1, d_model, d_ff, bias=True, dtype=dtype),
+        "down": linear_init(k2, d_ff, d_model, bias=True, dtype=dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x)))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotate pairs of channels.  x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean cross-entropy (float32 accumulation)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    losses = lse - picked
+    if mask is not None:
+        return jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(losses)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

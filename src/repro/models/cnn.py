@@ -1,0 +1,121 @@
+"""The paper's exact simulation models (Section V-A).
+
+MNIST:    conv(1->2, 5x5, pad 2) - pool - conv(2->4, 5x5, pad 2) - pool -
+          FC 32 (cut layer) - FC 10.
+CIFAR-10: conv(3->32, 3x3) - pool - conv(32->64, 3x3) - pool -
+          conv(64->128, 3x3) - pool - FC 256 (cut layer) - FC 128 - FC 64 - FC 10.
+
+The cut layer is the first fully-connected layer, exactly as described: the
+client-side NN ends at the cut-layer output (d_c = 32 / 256), the AP-side NN
+consumes it.  2x2 max-pooling after each conv keeps the FC sizes manageable
+(the paper does not spell out pooling; this is the standard choice).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import Params, cross_entropy, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    image_size: int
+    in_channels: int
+    conv_channels: Tuple[int, ...]
+    kernel: int
+    padding: int
+    fc_sizes: Tuple[int, ...]         # first entry is the cut layer width d_c
+    n_classes: int = 10
+
+    @property
+    def d_cut(self) -> int:
+        return self.fc_sizes[0]
+
+    @property
+    def flat_dim(self) -> int:
+        s = self.image_size
+        for _ in self.conv_channels:
+            s = s // 2
+        return s * s * self.conv_channels[-1]
+
+
+MNIST_CNN = CNNConfig(name="mnist_cnn", image_size=28, in_channels=1,
+                      conv_channels=(2, 4), kernel=5, padding=2,
+                      fc_sizes=(32,))
+CIFAR_CNN = CNNConfig(name="cifar_cnn", image_size=32, in_channels=3,
+                      conv_channels=(32, 64, 128), kernel=3, padding=1,
+                      fc_sizes=(256, 128, 64))
+
+
+def _conv_init(key, k: int, c_in: int, c_out: int) -> Params:
+    w = jax.random.truncated_normal(key, -2, 2, (k, k, c_in, c_out)) / math.sqrt(k * k * c_in)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def _conv(p: Params, x: jnp.ndarray, padding: int) -> jnp.ndarray:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_init(key, cfg: CNNConfig) -> Tuple[Params, Params]:
+    """Returns (gamma, phi): client-side and AP-side parameters."""
+    n_conv = len(cfg.conv_channels)
+    keys = jax.random.split(key, n_conv + len(cfg.fc_sizes) + 1)
+    convs = []
+    c_in = cfg.in_channels
+    for i, c_out in enumerate(cfg.conv_channels):
+        convs.append(_conv_init(keys[i], cfg.kernel, c_in, c_out))
+        c_in = c_out
+    cut_fc = {"w": dense_init(keys[n_conv], cfg.flat_dim, cfg.d_cut),
+              "b": jnp.zeros((cfg.d_cut,), jnp.float32)}
+    gamma = {"convs": tuple(convs), "cut_fc": cut_fc}
+
+    fcs = []
+    d_in = cfg.d_cut
+    for j, d_out in enumerate(tuple(cfg.fc_sizes[1:]) + (cfg.n_classes,)):
+        fcs.append({"w": dense_init(keys[n_conv + 1 + j], d_in, d_out),
+                    "b": jnp.zeros((d_out,), jnp.float32)})
+        d_in = d_out
+    phi = {"fcs": tuple(fcs)}
+    return gamma, phi
+
+
+def cnn_client_forward(gamma: Params, cfg: CNNConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, H, W, C) -> cut-layer activations (B, d_c)."""
+    for p in gamma["convs"]:
+        x = _maxpool2(jax.nn.relu(_conv(p, x, cfg.padding)))
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(x @ gamma["cut_fc"]["w"] + gamma["cut_fc"]["b"])
+
+
+def cnn_ap_forward(phi: Params, cfg: CNNConfig, acts: jnp.ndarray) -> jnp.ndarray:
+    """Cut activations -> logits (B, n_classes)."""
+    x = acts
+    n = len(phi["fcs"])
+    for i, p in enumerate(phi["fcs"]):
+        x = x @ p["w"] + p["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def cnn_predict(gamma: Params, phi: Params, cfg: CNNConfig, x: jnp.ndarray) -> jnp.ndarray:
+    return cnn_ap_forward(phi, cfg, cnn_client_forward(gamma, cfg, x))
+
+
+def cnn_loss(gamma: Params, phi: Params, cfg: CNNConfig, x: jnp.ndarray,
+             y: jnp.ndarray) -> jnp.ndarray:
+    return cross_entropy(cnn_predict(gamma, phi, cfg, x), y)

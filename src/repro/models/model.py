@@ -1,0 +1,326 @@
+"""Top-level Model API.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods are pure
+functions over a params pytree:
+
+  * ``init(key)``                          — parameter initialisation
+  * ``forward(params, batch)``             — final hidden states (B, S, D)
+  * ``loss(params, batch)``                — scalar LM loss (+ MoE aux)
+  * ``split_params(params)``               — (client γ, AP φ) at cfg.cut_layer
+  * ``client_forward(γ, batch)``           — cut-layer activations (the SL
+                                             "smashed data" sent to the AP)
+  * ``ap_forward(φ, acts, batch)``         — loss from cut activations
+  * ``init_cache(batch_size, max_seq)``    — decode cache
+  * ``decode_step(params, cache, tok, i)`` — one-token decode -> (logits, cache)
+
+The client/AP decomposition is exactly the paper's gamma/phi split; the cut
+layer activation tensor is what the attack/defence machinery in
+``repro.core`` tampers with and validates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tfm
+from .blocks import cross_entropy, embed_init, linear, rmsnorm, rmsnorm_init
+from .config import ModelConfig
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class StackPlan:
+    kind: str
+    n: int
+    meta: Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    plan: List[StackPlan]
+    enc_plan: Optional[List[StackPlan]] = None
+
+    # -- construction -------------------------------------------------------
+    def init(self, key) -> Pytree:
+        cfg = self.cfg
+        dt = tfm._dtype(cfg)
+        k_emb, k_stacks, k_head, k_enc = jax.random.split(key, 4)
+        stacks = tfm.build_stacks(cfg, k_stacks)
+        # plan must match build order
+        params: Dict[str, Any] = {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, dt),
+            "stacks": tuple(s.params for s in stacks),
+            "final_norm": rmsnorm_init(cfg.d_model, dt),
+            "head": {"w": embed_init(k_head, cfg.d_model, cfg.vocab, dt)},
+        }
+        if cfg.arch_type in ("encdec", "audio"):
+            n_enc = cfg.n_enc_layers or cfg.n_layers
+            enc = tfm.stack_init(k_enc, n_enc, partial(tfm._encdec_enc_init, cfg))
+            params["encoder"] = {"stacks": (enc,), "norm": rmsnorm_init(cfg.d_model, dt)}
+        return params
+
+    def _stacks(self, stack_params, plan=None) -> List[tfm.BlockStack]:
+        plan = plan or self.plan
+        return [tfm.BlockStack(sp.kind, sp.n, p, sp.meta)
+                for sp, p in zip(plan, stack_params)]
+
+    # -- embedding & prefix handling ----------------------------------------
+    def embed(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (x, positions)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"][tokens] * jnp.asarray(
+            jnp.sqrt(float(cfg.d_model)), x_dtype(params))
+        if cfg.arch_type == "vlm" and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        positions = jnp.arange(x.shape[1])
+        return x, positions
+
+    def encode(self, params, batch) -> jnp.ndarray:
+        """Encoder pass for encdec/audio — consumes precomputed frame
+        embeddings (the modality frontend stub)."""
+        cfg = self.cfg
+        x = batch["frames"].astype(x_dtype(params))
+        enc_stack = tfm.BlockStack("enc", x.shape[0], params["encoder"]["stacks"][0])
+        # scan over encoder layers
+        def body(carry, layer):
+            return (tfm._encdec_enc_layer(cfg, layer, carry), None)[0], None
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(fn, x, params["encoder"]["stacks"][0])
+        return rmsnorm(params["encoder"]["norm"], x)
+
+    # -- forward / loss ------------------------------------------------------
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full forward to final hidden states.  Returns (hidden, aux)."""
+        cfg = self.cfg
+        memory = self.encode(params, batch) if cfg.arch_type in ("encdec", "audio") else None
+        x, positions = self.embed(params, batch)
+        aux = jnp.zeros((), jnp.float32)
+        for stack in self._stacks(params["stacks"]):
+            x, a = tfm.run_stack(cfg, stack, x, positions, memory)
+            aux = aux + a
+        return rmsnorm(params["final_norm"], x), aux
+
+    def logits(self, params, batch) -> jnp.ndarray:
+        h, _ = self.forward(params, batch)
+        return linear(params["head"], h)
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        h, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        if cfg.arch_type == "vlm" and "patches" in batch:
+            h = h[:, batch["patches"].shape[1]:, :]   # loss over text positions only
+        mask = batch.get("mask")
+        if cfg.loss_chunk and h.shape[1] > cfg.loss_chunk:
+            lm = _chunked_xent(params["head"]["w"], h, labels, mask, cfg.loss_chunk)
+        else:
+            logits = linear(params["head"], h)
+            lm = cross_entropy(logits, labels, mask)
+        return lm + aux, {"lm_loss": lm, "aux_loss": aux}
+
+    # -- split-learning view -------------------------------------------------
+    def split_plans(self) -> Tuple[List[StackPlan], List[StackPlan], List[Tuple[int, int, int]]]:
+        """Split the plan at cfg.cut_layer blocks.  Returns (client_plan,
+        ap_plan, slices) where slices[i] = (stack_idx, client_n, total_n)."""
+        cut = self.cfg.cut_layer
+        client, ap, slices = [], [], []
+        seen = 0
+        for idx, sp in enumerate(self.plan):
+            take = max(0, min(sp.n, cut - seen))
+            if take == sp.n:
+                client.append(sp)
+            elif take == 0:
+                ap.append(sp)
+            else:
+                client.append(StackPlan(sp.kind, take, _slice_meta(sp.meta, 0, take)))
+                ap.append(StackPlan(sp.kind, sp.n - take, _slice_meta(sp.meta, take, sp.n)))
+            slices.append((idx, take, sp.n))
+            seen += sp.n
+        return client, ap, slices
+
+    def split_params(self, params) -> Tuple[Pytree, Pytree]:
+        _, _, slices = self.split_plans()
+        client_stacks, ap_stacks = [], []
+        for (idx, take, total), sp in zip(slices, params["stacks"]):
+            if take == total:
+                client_stacks.append(sp)
+            elif take == 0:
+                ap_stacks.append(sp)
+            else:
+                client_stacks.append(jax.tree.map(lambda a: a[:take], sp))
+                ap_stacks.append(jax.tree.map(lambda a: a[take:], sp))
+        gamma = {"embed": params["embed"], "stacks": tuple(client_stacks)}
+        if "encoder" in params:
+            gamma["encoder"] = params["encoder"]
+        phi = {"stacks": tuple(ap_stacks), "final_norm": params["final_norm"],
+               "head": params["head"]}
+        return gamma, phi
+
+    def merge_params(self, gamma, phi) -> Pytree:
+        _, _, slices = self.split_plans()
+        stacks, ci, ai = [], 0, 0
+        for idx, take, total in slices:
+            if take == total:
+                stacks.append(gamma["stacks"][ci]); ci += 1
+            elif take == 0:
+                stacks.append(phi["stacks"][ai]); ai += 1
+            else:
+                c, a = gamma["stacks"][ci], phi["stacks"][ai]
+                stacks.append(jax.tree.map(lambda x, y: jnp.concatenate([x, y]), c, a))
+                ci += 1; ai += 1
+        params = {"embed": gamma["embed"], "stacks": tuple(stacks),
+                  "final_norm": phi["final_norm"], "head": phi["head"]}
+        if "encoder" in gamma:
+            params["encoder"] = gamma["encoder"]
+        return params
+
+    def client_forward(self, gamma, batch) -> jnp.ndarray:
+        """Client-side NN g(x, γ): embedding + first cut_layer blocks ->
+        cut-layer activations (B, S, d_model)."""
+        cfg = self.cfg
+        client_plan, _, _ = self.split_plans()
+        memory = None
+        params_view = {"embed": gamma["embed"]}
+        x, positions = self.embed(params_view, batch)
+        if cfg.arch_type in ("encdec", "audio"):
+            memory = self.encode(gamma, batch)
+        for stack in self._stacks(gamma["stacks"], client_plan):
+            x, _ = tfm.run_stack(cfg, stack, x, positions, memory)
+        if memory is not None:
+            # the smashed data for enc-dec includes the encoder memory
+            return jnp.concatenate([x, memory], axis=1)
+        return x
+
+    def ap_forward(self, phi, acts, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """AP-side NN h(a, φ): remaining blocks + head -> loss."""
+        cfg = self.cfg
+        _, ap_plan, _ = self.split_plans()
+        memory = None
+        if cfg.arch_type in ("encdec", "audio"):
+            s_dec = batch["tokens"].shape[1]
+            memory = acts[:, s_dec:, :]
+            acts = acts[:, :s_dec, :]
+        x = acts
+        positions = jnp.arange(x.shape[1])
+        aux = jnp.zeros((), jnp.float32)
+        for stack in self._stacks(phi["stacks"], ap_plan):
+            x, a = tfm.run_stack(cfg, stack, x, positions, memory)
+            aux = aux + a
+        h = rmsnorm(phi["final_norm"], x)
+        labels = batch["labels"]
+        if cfg.arch_type == "vlm" and "patches" in batch:
+            h = h[:, batch["patches"].shape[1]:, :]
+        mask = batch.get("mask")
+        if cfg.loss_chunk and h.shape[1] > cfg.loss_chunk:
+            lm = _chunked_xent(phi["head"]["w"], h, labels, mask, cfg.loss_chunk)
+        else:
+            lm = cross_entropy(linear(phi["head"], h), labels, mask)
+        return lm + aux, {"lm_loss": lm, "aux_loss": aux}
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_seq: int, dtype=None) -> Tuple:
+        cfg = self.cfg
+        dtype = dtype or tfm._dtype(cfg)
+        caches = []
+        for sp in self.plan:
+            stack = tfm.BlockStack(sp.kind, sp.n, None, sp.meta)
+            caches.append(tfm.init_stack_cache(cfg, stack, batch_size, max_seq, dtype))
+        return tuple(caches)
+
+    def decode_step(self, params, cache, tokens, index, memory=None):
+        """tokens: (B, 1) int32; index: scalar position.  Returns
+        (logits (B, 1, V), new_cache)."""
+        cfg = self.cfg
+        x = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model)).astype(x_dtype(params))
+        new_caches = []
+        for stack, c in zip(self._stacks(params["stacks"]), cache):
+            x, nc = tfm.decode_stack(cfg, stack, x, c, index, memory)
+            new_caches.append(nc)
+        h = rmsnorm(params["final_norm"], x)
+        return linear(params["head"], h), tuple(new_caches)
+
+
+def x_dtype(params) -> jnp.dtype:
+    return params["embed"].dtype if "embed" in params else jnp.float32
+
+
+def _slice_meta(meta: Dict[str, Any], lo: int, hi: int) -> Dict[str, Any]:
+    return {k: v[lo:hi] for k, v in meta.items()}
+
+
+def _chunked_xent(head_w, h, labels, mask, chunk):
+    """Scan over sequence chunks so the full (B, S, V) logits tensor is never
+    live — the memory-side optimisation recorded in EXPERIMENTS.md §Perf."""
+    from .attention import largest_divisor_chunk
+    b, s, d = h.shape
+    chunk = largest_divisor_chunk(s, chunk)
+    n = s // chunk
+    hc = h.reshape(b, n, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n, chunk).swapaxes(0, 1)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    mc = mask.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        hi, li, mi = xs
+        logits = (hi @ head_w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        sum_loss, sum_mask = carry
+        return (sum_loss + jnp.sum((lse - picked) * mi), sum_mask + jnp.sum(mi)), None
+
+    (total, denom), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                            jnp.zeros((), jnp.float32)), (hc, lc, mc))
+    return total / jnp.maximum(denom, 1.0)
+
+
+def build_plan(cfg: ModelConfig) -> List[StackPlan]:
+    """Static stack layout — MUST mirror tfm.build_stacks ordering, but
+    without allocating any parameters (the dry-run never materialises the
+    full-size models)."""
+    at = cfg.arch_type
+    plan: List[StackPlan] = []
+    if at in ("dense", "vlm"):
+        plan.append(StackPlan("attn_mlp", cfg.n_layers, {"window": tfm._layer_windows(cfg)}))
+    elif at == "moe":
+        if cfg.first_dense:
+            plan.append(StackPlan("dense_mlp", cfg.first_dense, {}))
+        plan.append(StackPlan("moe", cfg.n_layers - cfg.first_dense, {}))
+    elif at == "ssm":
+        if cfg.slstm_every:
+            remaining = cfg.n_layers
+            while remaining > 0:
+                n_m = min(cfg.slstm_every - 1, remaining)
+                if n_m > 0:
+                    plan.append(StackPlan("mlstm", n_m, {}))
+                    remaining -= n_m
+                if remaining > 0:
+                    plan.append(StackPlan("slstm", 1, {}))
+                    remaining -= 1
+        else:
+            plan.append(StackPlan("mamba", cfg.n_layers, {}))
+    elif at == "hybrid":
+        remaining = cfg.n_layers
+        period = cfg.attn_every or cfg.n_layers
+        while remaining > 0:
+            n_m = min(period, remaining)
+            plan.append(StackPlan("mamba", n_m, {}))
+            remaining -= n_m
+            if remaining > 0:
+                plan.append(StackPlan("shared_attn", 1, {}))
+    elif at in ("encdec", "audio"):
+        plan.append(StackPlan("dec_cross", cfg.n_layers, {}))
+    else:
+        raise ValueError(at)
+    return plan
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, plan=build_plan(cfg))

@@ -1,0 +1,238 @@
+"""Mixture-of-Experts layer with top-k routing and capacity-based dispatch.
+
+Design notes (TPU adaptation):
+  * Dispatch is scatter-based: tokens are placed into a static
+    ``(n_experts, capacity, d_model)`` buffer at ``(expert, slot)`` computed
+    from a per-expert running count.  This keeps the dispatch memory
+    O(E*C*D + T*D) instead of the O(T*E*C) one-hot formulation, and the
+    expert compute is a single grouped einsum so the MXU sees clean
+    ``(E, C, D) x (E, D, F)`` matmuls.  FLOPs therefore scale with
+    ``T * top_k`` (active experts), which keeps roofline accounting honest.
+  * Experts shard over the ``model`` mesh axis (expert parallelism); the
+    scatter/gather between token-sharded and expert-sharded layouts lowers to
+    the all-to-all-style collectives the paper family of systems relies on.
+  * Tokens beyond capacity are dropped (contribute zero), matching the
+    standard capacity-factor formulation.  Tests use a generous capacity so
+    the layer is exact vs. the loop-over-experts reference.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import Params, dense_init, linear, linear_init
+
+
+class MoEConfig(NamedTuple):
+    d_model: int
+    d_expert: int            # per-expert FFN hidden size
+    n_experts: int           # routed experts
+    top_k: int
+    n_shared: int = 0        # always-on shared experts (DeepSeek style)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # emit mesh sharding constraints (experts over "model", capacity over
+    # "data") — requires an ambient mesh; set only by the launch layer.
+    shard: bool = False
+    # shard-local dispatch: tokens reshaped to (data_shards, T_local) so the
+    # capacity scatter/gather is local per data shard and only the expert
+    # einsum communicates (the all-to-all pattern).  0 => global dispatch.
+    shard_groups: int = 0
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_expert
+    p = {
+        "router": dense_init(kr, d, e, dtype),
+        "gate": (jax.random.truncated_normal(kg, -2, 2, (e, d, f)) / math.sqrt(d)).astype(dtype),
+        "up": (jax.random.truncated_normal(ku, -2, 2, (e, d, f)) / math.sqrt(d)).astype(dtype),
+        "down": (jax.random.truncated_normal(kd, -2, 2, (e, f, d)) / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared > 0:
+        from .blocks import swiglu_init
+        p["shared"] = swiglu_init(ks, d, cfg.n_shared * f, dtype)
+    return p
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _sharded_identity(x, spec):
+    """Identity whose sharding constraint binds BOTH the forward value and
+    the cotangent.  ``with_sharding_constraint`` alone constrains only the
+    primal; the MoE dispatch backward then loses its layout and GSPMD
+    all-gathers the full routed-token tensor (EXPERIMENTS.md §Perf,
+    composition diagnosis)."""
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _si_fwd(x, spec):
+    return jax.lax.with_sharding_constraint(x, spec), None
+
+
+def _si_bwd(spec, _, g):
+    return (jax.lax.with_sharding_constraint(g, spec),)
+
+
+_sharded_identity.defvjp(_si_fwd, _si_bwd)
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def route(p: Params, cfg: MoEConfig, x_flat: jnp.ndarray):
+    """Returns (weights (T,k), ids (T,k), aux_loss)."""
+    logits = (x_flat @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.top_k)               # (T, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    pe = probs.mean(axis=0)                                      # (E,)
+    onehot = jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32)
+    fe = onehot.sum(axis=(0, 1)) / x_flat.shape[0]               # frac tokens per expert
+    aux = cfg.n_experts * jnp.sum(fe * pe) * cfg.router_aux_weight
+    return weights.astype(x_flat.dtype), ids, aux
+
+
+def moe_forward(p: Params, cfg: MoEConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    if cfg.shard_groups and (b * s) % cfg.shard_groups == 0 and b * s >= cfg.shard_groups * cfg.n_experts:
+        return _moe_forward_local_dispatch(p, cfg, x)
+    x_flat = x.reshape(b * s, d)
+    t = b * s
+    weights, ids, aux = route(p, cfg, x_flat)
+    cap = capacity(t, cfg)
+
+    # slot assignment: position of (token, k) within its expert's queue
+    flat_ids = ids.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(flat_ids, cfg.n_experts, dtype=jnp.int32)   # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1)             # (T*k, E)
+    slot = jnp.take_along_axis(pos_in_expert, flat_ids[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, cap - 1)
+
+    # scatter tokens into (E, C, D)
+    src = jnp.repeat(x_flat, cfg.top_k, axis=0)                  # (T*k, D)
+    src = src * keep[:, None].astype(src.dtype)
+    buf = jnp.zeros((cfg.n_experts, cap, d), x.dtype)
+    buf = buf.at[flat_ids, slot_c].add(src)
+    if cfg.shard:
+        # Without this constraint GSPMD keeps the capacity dim replicated
+        # across the data axis: every data shard runs ALL experts' full
+        # capacity (16x overcompute, see EXPERIMENTS.md §Perf).  Forcing
+        # (experts x capacity) over (model x data) turns the dispatch into
+        # the all-to-all the MoE literature expects.
+        from jax.sharding import PartitionSpec as P
+        buf = jax.lax.with_sharding_constraint(buf, P("model", "data", None))
+
+    # grouped expert SwiGLU
+    g = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["down"])           # (E, C, D)
+    if cfg.shard:
+        from jax.sharding import PartitionSpec as P
+        out_buf = jax.lax.with_sharding_constraint(out_buf, P("model", "data", None))
+
+    # gather back and combine with routing weights
+    gathered = out_buf[flat_ids, slot_c]                         # (T*k, D)
+    gathered = gathered * keep[:, None].astype(gathered.dtype)
+    gathered = gathered.reshape(t, cfg.top_k, d)
+    out = jnp.einsum("tkd,tk->td", gathered, weights.astype(gathered.dtype))
+
+    if "shared" in p:
+        from .blocks import swiglu
+        out = out + swiglu(p["shared"], x_flat)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_forward_local_dispatch(p: Params, cfg: MoEConfig, x: jnp.ndarray
+                                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shard-local dispatch (§Perf hillclimb A, iteration 2).
+
+    Tokens are reshaped to (G, T_loc, D) with G = the data-axis size, so the
+    slot cumsum, the capacity scatter and the combine gather are *local to
+    each data shard* (a vmapped scatter over a batch-aligned sharded dim
+    never crosses shards).  Only the grouped expert einsum reshards — the
+    all-to-all the MoE literature expects — instead of the global scatter of
+    the naive formulation, which GSPMD lowers to full replication."""
+    from jax.sharding import PartitionSpec as P
+    b, s, d = x.shape
+    g = cfg.shard_groups
+    t = b * s
+    t_loc = t // g
+    x_flat = x.reshape(t, d)
+    weights, ids, aux = route(p, cfg, x_flat)               # (T,k) global route
+    cap = capacity(t_loc, cfg)
+
+    xg = x_flat.reshape(g, t_loc, d)
+    idsg = ids.reshape(g, t_loc * cfg.top_k)
+    wg = weights.reshape(g, t_loc, cfg.top_k)
+    if cfg.shard:
+        xg = jax.lax.with_sharding_constraint(xg, P("data", None, None))
+        idsg = jax.lax.with_sharding_constraint(idsg, P("data", None))
+
+    # local slot assignment per shard row
+    onehot = jax.nn.one_hot(idsg, cfg.n_experts, dtype=jnp.int32)   # (G, Tk, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    slot = jnp.take_along_axis(pos, idsg[..., None], axis=2)[..., 0]  # (G, Tk)
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, cap - 1)
+
+    src = jnp.repeat(xg, cfg.top_k, axis=1)                 # (G, Tk, D)
+    src = src * keep[..., None].astype(src.dtype)
+    if cfg.shard:
+        src = _sharded_identity(src, P("data", None, None))
+
+    def scatter_one(buf, f_ids, f_slot, f_src):
+        return buf.at[f_ids, f_slot].add(f_src)
+
+    buf0 = jnp.zeros((g, cfg.n_experts, cap, d), x.dtype)
+    buf = jax.vmap(scatter_one)(buf0, idsg, slot_c, src)    # (G, E, C, D)
+    if cfg.shard:
+        buf = _sharded_identity(buf, P("data", "model", None, None))
+
+    gg = jnp.einsum("gecd,edf->gecf", buf, p["gate"])
+    uu = jnp.einsum("gecd,edf->gecf", buf, p["up"])
+    hh = jax.nn.silu(gg) * uu
+    out_buf = jnp.einsum("gecf,efd->gecd", hh, p["down"])
+    if cfg.shard:
+        out_buf = _sharded_identity(out_buf, P("data", None, None, None))
+
+    def gather_one(f_buf, f_ids, f_slot):
+        return f_buf[f_ids, f_slot]
+
+    gathered = jax.vmap(gather_one)(out_buf, idsg, slot_c)  # (G, Tk, D)
+    if cfg.shard:
+        gathered = _sharded_identity(gathered, P("data", None, None))
+    gathered = gathered * keep[..., None].astype(gathered.dtype)
+    gathered = gathered.reshape(g, t_loc, cfg.top_k, d)
+    out = jnp.einsum("gtkd,gtk->gtd", gathered, wg.astype(gathered.dtype))
+    out = out.reshape(t, d)
+    if "shared" in p:
+        from .blocks import swiglu
+        out = out + swiglu(p["shared"], x_flat)
+    return out.reshape(b, s, d), aux
+
+
+def moe_forward_reference(p: Params, cfg: MoEConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact loop-over-experts oracle (E-times overcompute — tests only)."""
+    b, s, d = x.shape
+    x_flat = x.reshape(b * s, d)
+    weights, ids, aux = route(p, cfg, x_flat)
+    out = jnp.zeros_like(x_flat)
+    for e in range(cfg.n_experts):
+        h = jax.nn.silu(x_flat @ p["gate"][e]) * (x_flat @ p["up"][e])
+        y_e = h @ p["down"][e]                                   # (T, D)
+        w_e = jnp.sum(jnp.where(ids == e, weights, 0.0), axis=1)  # (T,)
+        out = out + y_e * w_e[:, None].astype(y_e.dtype)
+    if "shared" in p:
+        from .blocks import swiglu
+        out = out + swiglu(p["shared"], x_flat)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,173 @@
+"""Mamba2 (SSD) block — chunked selective-state-space implementation.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the
+recurrence is computed as a masked quadratic form (maps onto the MXU like an
+attention block), across chunks a single ``lax.scan`` carries the
+``(batch, heads, head_dim, state)`` recurrent state.  Live memory is
+O(chunk^2) instead of O(seq * state), which is what makes the 524k-token
+long-context shape lowerable.
+
+Decode is the O(1) recurrence: ``h = h * exp(dt*A) + dt * (B ⊗ x)``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import Params, dense_init, linear, linear_init, rmsnorm, rmsnorm_init
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_init(key, cfg: SSMConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    di, st, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj emits [z, x, B, C, dt]
+    d_in_proj = 2 * di + 2 * st + h
+    conv_dim = di + 2 * st
+    return {
+        "in_proj": linear_init(ks[0], cfg.d_model, d_in_proj, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),   # A = -exp(A_log)
+        "dt_bias": jnp.zeros((h,), dtype),
+        "D": jnp.ones((h,), dtype),
+        "out_norm": rmsnorm_init(di, dtype),
+        "out_proj": linear_init(ks[2], di, cfg.d_model, dtype=dtype),
+    }
+
+
+def _depthwise_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv over seq.  xBC: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunk(state, inputs, cfg: SSMConfig):
+    """One SSD chunk.  state: (B, H, P, N).  inputs per-chunk arrays."""
+    x, dt, Bm, Cm, A = inputs          # x:(B,Q,H,P) dt:(B,Q,H) Bm/Cm:(B,Q,N) A:(H,)
+    dtA = dt * A                       # (B,Q,H) negative
+    cum = jnp.cumsum(dtA, axis=1)      # (B,Q,H) running log-decay within chunk
+    # intra-chunk quadratic term
+    # M[t,s] = exp(cum_t - cum_s) for s<=t  (per B,H)
+    diff = cum[:, :, None, :] - cum[:, None, :, :]                  # (B,Q,Q,H)
+    q = x.shape[1]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: above-diagonal entries are positive and overflow, and
+    # where(causal, exp(inf), 0) produces NaN *gradients* (inf * 0)
+    decay = jnp.exp(jnp.where(causal[None, :, :, None], diff, -jnp.inf))  # (B,Q,Q,H)
+    cb = jnp.einsum("bqn,bsn->bqs", Cm, Bm)                         # (B,Q,Q)
+    gate = decay * cb[..., None]                                    # (B,Q,Q,H)
+    xdt = x * dt[..., None]                                         # (B,Q,H,P)
+    y_intra = jnp.einsum("bqsh,bshp->bqhp", gate, xdt)
+    # contribution from incoming state
+    y_state = jnp.einsum("bqn,bhpn->bqhp", Cm, state) * jnp.exp(cum)[..., None]
+    # state update
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)                    # (B,Q,H)
+    dstate = jnp.einsum("bqhp,bqn,bqh->bhpn", xdt, Bm, decay_to_end)
+    total_decay = jnp.exp(cum[:, -1, :])                            # (B,H)
+    new_state = state * total_decay[:, :, None, None] + dstate
+    return new_state, y_intra + y_state
+
+
+def mamba2_forward(p: Params, cfg: SSMConfig, u: jnp.ndarray) -> jnp.ndarray:
+    """u: (B, S, d_model) -> (B, S, d_model)."""
+    b, s, _ = u.shape
+    di, st, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    proj = linear(p["in_proj"], u)
+    z, xBC, dt_raw = jnp.split(proj, [di, 2 * di + 2 * st], axis=-1)
+    xBC = _depthwise_conv(xBC, p["conv_w"], p["conv_b"])
+    x, Bm, Cm = jnp.split(xBC, [di, di + st], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                    # (H,)
+
+    x_h = x.reshape(b, s, h, pd).astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+
+    q = min(cfg.chunk, s)
+    n_chunks = s // q
+    assert n_chunks * q == s, f"chunk {q} must divide seq {s}"
+
+    def chunker(a):
+        return a.reshape(b, n_chunks, q, *a.shape[2:]).swapaxes(0, 1)
+
+    xs = (chunker(x_h), chunker(dt), chunker(Bm), chunker(Cm))
+    state0 = jnp.zeros((b, h, pd, st), jnp.float32)
+
+    def step(state, xs_t):
+        return _ssd_chunk(state, (*xs_t, A), cfg)
+
+    _, ys = jax.lax.scan(step, state0, xs)                          # (n_chunks,B,Q,H,P)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, pd)
+    y = y + x_h * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(u.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(batch: int, cfg: SSMConfig, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    return {
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner + 2 * cfg.d_state), dtype),
+    }
+
+
+def mamba2_decode(p: Params, cfg: SSMConfig, u: jnp.ndarray,
+                  cache: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """u: (B, 1, d_model)."""
+    b = u.shape[0]
+    di, st, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    proj = linear(p["in_proj"], u[:, 0])                            # (B, d_in_proj)
+    z, xBC_new, dt_raw = jnp.split(proj, [di, 2 * di + 2 * st], axis=-1)
+    window = jnp.concatenate([cache["conv"], xBC_new[:, None, :]], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    x, Bm, Cm = jnp.split(xBC, [di, di + st], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    x_h = x.reshape(b, h, pd).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                         # (B,H)
+    dstate = jnp.einsum("bhp,bn,bh->bhpn", x_h, Bm.astype(jnp.float32), dt)
+    state = cache["state"] * decay[:, :, None, None] + dstate
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + x_h * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, di).astype(u.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)[:, None, :]
+    return out, {"state": state, "conv": window[:, 1:, :]}
+
+
+def mamba2_forward_reference(p: Params, cfg: SSMConfig, u: jnp.ndarray) -> jnp.ndarray:
+    """Token-by-token recurrent oracle (tests only)."""
+    b, s, _ = u.shape
+    cache = init_ssm_cache(b, cfg, u.dtype)
+    ys = []
+    for t in range(s):
+        y, cache = mamba2_decode(p, cfg, u[:, t : t + 1], cache)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)

@@ -1,0 +1,537 @@
+"""Decoder/encoder assembly for every architecture family.
+
+The model is organised as an ordered list of homogeneous ``BlockStack``s.
+Layers inside a stack are stacked on a leading axis and executed with
+``jax.lax.scan`` (keeps the HLO small enough to AOT-compile 48-layer models
+on one CPU core).  Heterogeneous architectures (gemma3 local:global, zamba2
+mamba+shared-attn, xLSTM mLSTM/sLSTM) are expressed as per-layer metadata
+inside a stack or as multiple stacks.
+
+The split-learning cut is a first-class operation: ``split_params`` divides
+a model into the client side (embedding + first ``cut_layer`` blocks) and the
+AP side (remaining blocks + final norm + LM head), exactly the gamma/phi
+decomposition of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .attention import AttnConfig, MLAConfig
+from .blocks import (Params, cross_entropy, embed_init, linear, linear_init,
+                     rmsnorm, rmsnorm_init, swiglu, swiglu_init)
+from .config import ModelConfig
+from .moe import MoEConfig
+from .ssm import SSMConfig
+from .xlstm import XLSTMConfig
+
+Pytree = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[cfg.dtype]
+
+
+def attn_cfg(cfg: ModelConfig, window: int = -1) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        sliding_window=cfg.sliding_window if window < 0 else window,
+        q_chunk=cfg.q_chunk)
+
+
+def mla_cfg(cfg: ModelConfig) -> MLAConfig:
+    return MLAConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                     head_dim=cfg.resolved_head_dim, kv_lora_rank=cfg.kv_lora_rank,
+                     rope_dim=cfg.rope_dim, rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk)
+
+
+def moe_cfg(cfg: ModelConfig) -> MoEConfig:
+    shard = "moe_shard" in cfg.optimizations
+    return MoEConfig(d_model=cfg.d_model, d_expert=cfg.d_expert, n_experts=cfg.n_experts,
+                     top_k=cfg.top_k, n_shared=cfg.n_shared_experts,
+                     capacity_factor=cfg.capacity_factor,
+                     shard=shard, shard_groups=16 if shard else 0)
+
+
+def ssm_cfg(cfg: ModelConfig) -> SSMConfig:
+    return SSMConfig(d_model=cfg.d_model, d_state=cfg.ssm_state, chunk=cfg.ssm_chunk)
+
+
+def xlstm_cfg(cfg: ModelConfig) -> XLSTMConfig:
+    return XLSTMConfig(d_model=cfg.d_model, n_heads=cfg.n_heads, chunk=cfg.ssm_chunk,
+                       state_dtype=("bfloat16" if "mlstm_bf16_state" in cfg.optimizations
+                                    else "float32"),
+                       slstm_unroll=16 if "slstm_unroll" in cfg.optimizations else 1)
+
+
+# ---------------------------------------------------------------------------
+# BlockStack
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BlockStack:
+    kind: str                 # attn_mlp | mla_moe | moe | mamba | shared_attn | mlstm | slstm
+    n: int                    # number of layers in this stack
+    params: Pytree            # leaves have leading dim n (except shared_attn)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)  # e.g. per-layer window
+
+
+def stack_init(key, n: int, init_one) -> Pytree:
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)
+
+
+# ---------------------------------------------------------------------------
+# per-kind layer bodies (one layer; scanned over the stack)
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_layer(cfg: ModelConfig, p: Params, x: jnp.ndarray, window: jnp.ndarray,
+                    positions: Optional[jnp.ndarray]) -> jnp.ndarray:
+    acfg = attn_cfg(cfg)._replace(sliding_window=0)
+    b, s, _ = x.shape
+    pos = positions if positions is not None else jnp.arange(s)
+    h = rmsnorm(p["ln1"], x)
+    # window is a traced per-layer scalar: build mask dynamically
+    def attn_with_window(h):
+        q = linear(p["attn"]["wq"], h).reshape(b, s, acfg.n_heads, acfg.head_dim)
+        k = linear(p["attn"]["wk"], h).reshape(b, s, acfg.n_kv_heads, acfg.head_dim)
+        v = linear(p["attn"]["wv"], h).reshape(b, s, acfg.n_kv_heads, acfg.head_dim)
+        if acfg.qk_norm:
+            q = rmsnorm(p["attn"]["q_norm"], q)
+            k = rmsnorm(p["attn"]["k_norm"], k)
+        q = attn_mod.apply_rope(q, pos, acfg.rope_theta)
+        k = attn_mod.apply_rope(k, pos, acfg.rope_theta)
+        groups = acfg.n_heads // acfg.n_kv_heads
+        k = attn_mod._repeat_kv(k, groups)
+        v = attn_mod._repeat_kv(v, groups)
+        scale = 1.0 / math.sqrt(acfg.head_dim)
+        if cfg.q_chunk and s > cfg.q_chunk:
+            out = _attend_chunked_dynwin(q, k, v, pos, pos, scale, window, cfg.q_chunk)
+        else:
+            m = _dyn_mask(pos, pos, window)
+            out = attn_mod.attend(q, k, v, m, scale)
+        return linear(p["attn"]["wo"], out.reshape(b, s, acfg.n_heads * acfg.head_dim))
+
+    x = x + attn_with_window(h)
+    x = x + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+    return x
+
+
+def _dyn_mask(q_pos, k_pos, window):
+    m = q_pos[:, None] >= k_pos[None, :]
+    win_m = (q_pos[:, None] - k_pos[None, :]) < jnp.maximum(window, 1)
+    return jnp.where(window > 0, m & win_m, m)
+
+
+def _attend_chunked_dynwin(q, k, v, q_pos, k_pos, scale, window, q_chunk):
+    b, sq, h, d = q.shape
+    q_chunk = attn_mod.largest_divisor_chunk(sq, q_chunk)
+    n_chunks = sq // q_chunk
+    qc = q.reshape(b, n_chunks, q_chunk, h, d).swapaxes(0, 1)
+    pc = q_pos.reshape(n_chunks, q_chunk)
+
+    def one(carry, xs):
+        qi, pi = xs
+        m = _dyn_mask(pi, k_pos, window)
+        return carry, attn_mod.attend(qi, k, v, m, scale)
+
+    _, outs = jax.lax.scan(one, None, (qc, pc))
+    return outs.swapaxes(0, 1).reshape(b, sq, h, d)
+
+
+def _attn_mlp_init(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dt),
+        "attn": attn_mod.gqa_init(k1, attn_cfg(cfg), dt),
+        "ln2": rmsnorm_init(cfg.d_model, dt),
+        "mlp": swiglu_init(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _moe_layer(cfg: ModelConfig, p: Params, x: jnp.ndarray, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    acfg = attn_cfg(cfg)
+    if cfg.kv_lora_rank:
+        x = x + attn_mod.mla_forward(p["attn"], mla_cfg(cfg), rmsnorm(p["ln1"], x), positions)
+    else:
+        x = x + attn_mod.gqa_forward(p["attn"], acfg, rmsnorm(p["ln1"], x), positions)
+    out, aux = moe_mod.moe_forward(p["moe"], moe_cfg(cfg), rmsnorm(p["ln2"], x))
+    return x + out, aux
+
+
+def _moe_init(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg)
+    attn_p = (attn_mod.mla_init(k1, mla_cfg(cfg), dt) if cfg.kv_lora_rank
+              else attn_mod.gqa_init(k1, attn_cfg(cfg), dt))
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dt),
+        "attn": attn_p,
+        "ln2": rmsnorm_init(cfg.d_model, dt),
+        "moe": moe_mod.moe_init(k2, moe_cfg(cfg), dt),
+    }
+
+
+def _dense_first_layer(cfg: ModelConfig, p, x, positions):
+    if cfg.kv_lora_rank:
+        x = x + attn_mod.mla_forward(p["attn"], mla_cfg(cfg), rmsnorm(p["ln1"], x), positions)
+    else:
+        x = x + attn_mod.gqa_forward(p["attn"], attn_cfg(cfg), rmsnorm(p["ln1"], x), positions)
+    return x + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+
+
+def _dense_first_init(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg)
+    attn_p = (attn_mod.mla_init(k1, mla_cfg(cfg), dt) if cfg.kv_lora_rank
+              else attn_mod.gqa_init(k1, attn_cfg(cfg), dt))
+    return {"ln1": rmsnorm_init(cfg.d_model, dt), "attn": attn_p,
+            "ln2": rmsnorm_init(cfg.d_model, dt),
+            "mlp": swiglu_init(k2, cfg.d_model, cfg.d_ff, dt)}
+
+
+def _mamba_layer(cfg: ModelConfig, p, x):
+    return x + ssm_mod.mamba2_forward(p["mixer"], ssm_cfg(cfg), rmsnorm(p["ln"], x))
+
+
+def _mamba_init(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    return {"ln": rmsnorm_init(cfg.d_model, dt),
+            "mixer": ssm_mod.mamba2_init(key, ssm_cfg(cfg), dt)}
+
+
+def _mlstm_layer(cfg: ModelConfig, p, x):
+    return x + xlstm_mod.mlstm_forward(p["mixer"], xlstm_cfg(cfg), rmsnorm(p["ln"], x))
+
+
+def _mlstm_init(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    return {"ln": rmsnorm_init(cfg.d_model, dt),
+            "mixer": xlstm_mod.mlstm_init(key, xlstm_cfg(cfg), dt)}
+
+
+def _slstm_layer(cfg: ModelConfig, p, x):
+    return x + xlstm_mod.slstm_forward(p["mixer"], xlstm_cfg(cfg), rmsnorm(p["ln"], x))
+
+
+def _slstm_init(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    return {"ln": rmsnorm_init(cfg.d_model, dt),
+            "mixer": xlstm_mod.slstm_init(key, xlstm_cfg(cfg), dt)}
+
+
+def _shared_attn_layer(cfg: ModelConfig, p, x, positions):
+    """Zamba2-style shared attention block (full attention over d_model)."""
+    return x + attn_mod.gqa_forward(p["attn"], attn_cfg(cfg)._replace(sliding_window=0),
+                                    rmsnorm(p["ln"], x), positions)
+
+
+def _shared_attn_init(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    return {"ln": rmsnorm_init(cfg.d_model, dt),
+            "attn": attn_mod.gqa_init(key, attn_cfg(cfg), dt)}
+
+
+# ---------------------------------------------------------------------------
+# stack construction per architecture
+# ---------------------------------------------------------------------------
+
+def build_stacks(cfg: ModelConfig, key) -> List[BlockStack]:
+    at = cfg.arch_type
+    stacks: List[BlockStack] = []
+    if at in ("dense", "vlm"):
+        windows = _layer_windows(cfg)
+        p = stack_init(key, cfg.n_layers, partial(_attn_mlp_init, cfg))
+        stacks.append(BlockStack("attn_mlp", cfg.n_layers, p, {"window": windows}))
+    elif at == "moe":
+        k1, k2 = jax.random.split(key)
+        if cfg.first_dense:
+            p0 = stack_init(k1, cfg.first_dense, partial(_dense_first_init, cfg))
+            stacks.append(BlockStack("dense_mlp", cfg.first_dense, p0))
+        n_moe = cfg.n_layers - cfg.first_dense
+        p = stack_init(k2, n_moe, partial(_moe_init, cfg))
+        stacks.append(BlockStack("moe", n_moe, p))
+    elif at == "ssm":
+        # xLSTM: mLSTM blocks with sLSTM interleaved every slstm_every
+        if cfg.slstm_every:
+            idx = 0
+            keys = jax.random.split(key, 2 * cfg.n_layers)
+            ki = iter(keys)
+            remaining = cfg.n_layers
+            while remaining > 0:
+                n_m = min(cfg.slstm_every - 1, remaining)
+                if n_m > 0:
+                    stacks.append(BlockStack(
+                        "mlstm", n_m, stack_init(next(ki), n_m, partial(_mlstm_init, cfg))))
+                    remaining -= n_m
+                if remaining > 0:
+                    stacks.append(BlockStack(
+                        "slstm", 1, stack_init(next(ki), 1, partial(_slstm_init, cfg))))
+                    remaining -= 1
+        else:
+            p = stack_init(key, cfg.n_layers, partial(_mamba_init, cfg))
+            stacks.append(BlockStack("mamba", cfg.n_layers, p))
+    elif at == "hybrid":
+        # zamba2: mamba backbone, shared attention block every attn_every layers
+        keys = jax.random.split(key, 64)
+        ki = iter(keys)
+        remaining = cfg.n_layers
+        period = cfg.attn_every or cfg.n_layers
+        # NOTE: zamba2 ties the weights of all shared-attn invocations; we give
+        # each invocation its own params so the optimizer pytree stays a tree
+        # (documented in DESIGN.md §Arch-applicability).
+        while remaining > 0:
+            n_m = min(period, remaining)
+            stacks.append(BlockStack(
+                "mamba", n_m, stack_init(next(ki), n_m, partial(_mamba_init, cfg))))
+            remaining -= n_m
+            if remaining > 0:
+                stacks.append(BlockStack("shared_attn", 1, _shared_attn_init(cfg, next(ki))))
+    elif at in ("encdec", "audio"):
+        # decoder stacks only here; encoder built separately
+        p = stack_init(key, cfg.n_layers, partial(_encdec_dec_init, cfg))
+        stacks.append(BlockStack("dec_cross", cfg.n_layers, p))
+    else:
+        raise ValueError(f"unknown arch_type {at}")
+    return stacks
+
+
+def _layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer sliding window sizes (0 = global)."""
+    if cfg.global_every:
+        w = [0 if (i + 1) % cfg.global_every == 0 else cfg.sliding_window
+             for i in range(cfg.n_layers)]
+    else:
+        w = [cfg.sliding_window] * cfg.n_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder extras
+# ---------------------------------------------------------------------------
+
+def _encdec_enc_init(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg)
+    return {"ln1": rmsnorm_init(cfg.d_model, dt),
+            "attn": attn_mod.gqa_init(k1, attn_cfg(cfg), dt),
+            "ln2": rmsnorm_init(cfg.d_model, dt),
+            "mlp": swiglu_init(k2, cfg.d_model, cfg.d_ff, dt)}
+
+
+def _encdec_enc_layer(cfg: ModelConfig, p, x):
+    """Bidirectional encoder layer."""
+    b, s, _ = x.shape
+    acfg = attn_cfg(cfg)
+    h = rmsnorm(p["ln1"], x)
+    q = linear(p["attn"]["wq"], h).reshape(b, s, acfg.n_heads, acfg.head_dim)
+    k = linear(p["attn"]["wk"], h).reshape(b, s, acfg.n_kv_heads, acfg.head_dim)
+    v = linear(p["attn"]["wv"], h).reshape(b, s, acfg.n_kv_heads, acfg.head_dim)
+    pos = jnp.arange(s)
+    q = attn_mod.apply_rope(q, pos, acfg.rope_theta)
+    k = attn_mod.apply_rope(k, pos, acfg.rope_theta)
+    groups = acfg.n_heads // acfg.n_kv_heads
+    k = attn_mod._repeat_kv(k, groups)
+    v = attn_mod._repeat_kv(v, groups)
+    mask = jnp.ones((s, s), bool)
+    out = attn_mod.attend(q, k, v, mask, 1.0 / math.sqrt(acfg.head_dim))
+    x = x + linear(p["attn"]["wo"], out.reshape(b, s, -1))
+    return x + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+
+
+def _encdec_dec_init(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    return {"ln1": rmsnorm_init(cfg.d_model, dt),
+            "self_attn": attn_mod.gqa_init(k1, attn_cfg(cfg), dt),
+            "ln_x": rmsnorm_init(cfg.d_model, dt),
+            "cross_attn": attn_mod.gqa_init(k2, attn_cfg(cfg), dt),
+            "ln2": rmsnorm_init(cfg.d_model, dt),
+            "mlp": swiglu_init(k3, cfg.d_model, cfg.d_ff, dt)}
+
+
+def _encdec_dec_layer(cfg: ModelConfig, p, x, memory, positions):
+    acfg = attn_cfg(cfg)
+    x = x + attn_mod.gqa_forward(p["self_attn"], acfg, rmsnorm(p["ln1"], x), positions)
+    x = x + attn_mod.gqa_cross_forward(p["cross_attn"], acfg, rmsnorm(p["ln_x"], x), memory)
+    return x + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+
+
+# ---------------------------------------------------------------------------
+# stack execution (training / prefill)
+# ---------------------------------------------------------------------------
+
+def run_stack(cfg: ModelConfig, stack: BlockStack, x: jnp.ndarray,
+              positions=None, memory=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x, aux_loss_sum)."""
+    kind = stack.kind
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if kind == "shared_attn":
+        return _shared_attn_layer(cfg, stack.params, x, positions), aux0
+
+    def body(carry, layer):
+        x, aux = carry
+        if kind == "attn_mlp":
+            p, window = layer
+            y = _attn_mlp_layer(cfg, p, x, window, positions)
+        elif kind == "dense_mlp":
+            y = _dense_first_layer(cfg, layer, x, positions)
+        elif kind == "moe":
+            y, a = _moe_layer(cfg, layer, x, positions)
+            aux = aux + a
+        elif kind == "mamba":
+            y = _mamba_layer(cfg, layer, x)
+        elif kind == "mlstm":
+            y = _mlstm_layer(cfg, layer, x)
+        elif kind == "slstm":
+            y = _slstm_layer(cfg, layer, x)
+        elif kind == "enc":
+            y = _encdec_enc_layer(cfg, layer, x)
+        elif kind == "dec_cross":
+            y = _encdec_dec_layer(cfg, layer, x, memory, positions)
+        else:
+            raise ValueError(kind)
+        return (y, aux), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    xs = (stack.params, stack.meta["window"]) if kind == "attn_mlp" else stack.params
+    (x, aux), _ = jax.lax.scan(fn, (x, aux0), xs)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# stack decode (single token)
+# ---------------------------------------------------------------------------
+
+def init_stack_cache(cfg: ModelConfig, stack: BlockStack, batch: int, max_seq: int,
+                     dtype) -> Pytree:
+    kind = stack.kind
+    if kind in ("attn_mlp", "dense_mlp", "moe"):
+        if kind != "attn_mlp" and cfg.kv_lora_rank:
+            one = lambda: attn_mod.init_mla_cache(batch, max_seq, mla_cfg(cfg), dtype)
+        else:
+            one = lambda: attn_mod.init_kv_cache(batch, max_seq, attn_cfg(cfg), dtype)
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[one() for _ in range(stack.n)]) \
+            if stack.n > 1 else jax.tree.map(lambda x: x[None], one())
+    if kind == "shared_attn":
+        return attn_mod.init_kv_cache(batch, max_seq, attn_cfg(cfg), dtype)
+    if kind == "mamba":
+        one = lambda: ssm_mod.init_ssm_cache(batch, ssm_cfg(cfg), dtype)
+    elif kind == "mlstm":
+        one = lambda: xlstm_mod.init_mlstm_cache(batch, xlstm_cfg(cfg), dtype)
+    elif kind == "slstm":
+        one = lambda: xlstm_mod.init_slstm_cache(batch, xlstm_cfg(cfg), dtype)
+    elif kind == "dec_cross":
+        one = lambda: attn_mod.init_kv_cache(batch, max_seq, attn_cfg(cfg), dtype)
+    else:
+        raise ValueError(kind)
+    trees = [one() for _ in range(stack.n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees) if stack.n > 1 \
+        else jax.tree.map(lambda x: x[None], trees[0])
+
+
+def decode_stack(cfg: ModelConfig, stack: BlockStack, x: jnp.ndarray, cache: Pytree,
+                 index: jnp.ndarray, memory=None) -> Tuple[jnp.ndarray, Pytree]:
+    """One decode step through a stack.  x: (B, 1, d_model)."""
+    kind = stack.kind
+    if kind == "shared_attn":
+        h = rmsnorm(stack.params["ln"], x)
+        y, new_cache = attn_mod.gqa_decode(stack.params["attn"],
+                                           attn_cfg(cfg)._replace(sliding_window=0),
+                                           h, cache, index)
+        return x + y, new_cache
+
+    # scan over layers carrying x, threading caches
+    if kind in ("attn_mlp", "dense_mlp", "moe", "dec_cross"):
+        def scan_body(x, xs):
+            if kind == "attn_mlp":
+                (p, window), lcache = xs
+                h = rmsnorm(p["ln1"], x)
+                y, nc = _gqa_decode_dynwin(p["attn"], attn_cfg(cfg), h, lcache, index, window)
+                x = x + y
+                x = x + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+                return x, nc
+            layer, lcache = xs
+            if kind == "dec_cross":
+                h = rmsnorm(layer["ln1"], x)
+                y, nc = attn_mod.gqa_decode(layer["self_attn"], attn_cfg(cfg), h, lcache, index)
+                x = x + y
+                x = x + attn_mod.gqa_cross_forward(layer["cross_attn"], attn_cfg(cfg),
+                                                   rmsnorm(layer["ln_x"], x), memory)
+                x = x + swiglu(layer["mlp"], rmsnorm(layer["ln2"], x))
+                return x, nc
+            h = rmsnorm(layer["ln1"], x)
+            if cfg.kv_lora_rank:
+                y, nc = attn_mod.mla_decode(layer["attn"], mla_cfg(cfg), h, lcache, index)
+            else:
+                y, nc = attn_mod.gqa_decode(layer["attn"], attn_cfg(cfg), h, lcache, index)
+            x = x + y
+            h2 = rmsnorm(layer["ln2"], x)
+            if kind == "moe":
+                out, _ = moe_mod.moe_forward(layer["moe"], moe_cfg(cfg), h2)
+                x = x + out
+            else:
+                x = x + swiglu(layer["mlp"], h2)
+            return x, nc
+
+        xs = ((stack.params, stack.meta["window"]), cache) if kind == "attn_mlp" \
+            else (stack.params, cache)
+        x, new_cache = jax.lax.scan(scan_body, x, xs)
+        return x, new_cache
+
+    # recurrent kinds
+    def scan_body_rec(x, xs):
+        layer, lcache = xs
+        h = rmsnorm(layer["ln"], x)
+        if kind == "mamba":
+            y, nc = ssm_mod.mamba2_decode(layer["mixer"], ssm_cfg(cfg), h, lcache)
+        elif kind == "mlstm":
+            y, nc = xlstm_mod.mlstm_decode(layer["mixer"], xlstm_cfg(cfg), h, lcache)
+        elif kind == "slstm":
+            y, nc = xlstm_mod.slstm_decode(layer["mixer"], xlstm_cfg(cfg), h, lcache)
+        else:
+            raise ValueError(kind)
+        return x + y, nc
+
+    x, new_cache = jax.lax.scan(scan_body_rec, x, (stack.params, cache))
+    return x, new_cache
+
+
+def _gqa_decode_dynwin(p, acfg: AttnConfig, x, cache, index, window):
+    """gqa_decode with a traced per-layer window scalar."""
+    b = x.shape[0]
+    q = linear(p["wq"], x).reshape(b, 1, acfg.n_heads, acfg.head_dim)
+    k_new = linear(p["wk"], x).reshape(b, 1, acfg.n_kv_heads, acfg.head_dim)
+    v_new = linear(p["wv"], x).reshape(b, 1, acfg.n_kv_heads, acfg.head_dim)
+    if acfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k_new = rmsnorm(p["k_norm"], k_new)
+    pos = jnp.full((1,), index, dtype=jnp.int32)
+    q = attn_mod.apply_rope(q, pos, acfg.rope_theta)
+    k_new = attn_mod.apply_rope(k_new, pos, acfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, index, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, index, 0, 0))
+    max_seq = k_cache.shape[1]
+    k_pos = jnp.arange(max_seq)
+    valid = k_pos <= index
+    win_valid = (index - k_pos) < jnp.maximum(window, 1)
+    valid = jnp.where(window > 0, valid & win_valid, valid)
+    groups = acfg.n_heads // acfg.n_kv_heads
+    k_all = attn_mod._repeat_kv(k_cache, groups)
+    v_all = attn_mod._repeat_kv(v_cache, groups)
+    out = attn_mod.attend(q, k_all, v_all, valid[None, :], 1.0 / math.sqrt(acfg.head_dim))
+    y = linear(p["wo"], out.reshape(b, 1, acfg.n_heads * acfg.head_dim))
+    return y, {"k": k_cache, "v": v_cache}

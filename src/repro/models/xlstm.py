@@ -1,0 +1,272 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, recurrent scan).
+
+The mLSTM training path uses the same chunking strategy as the Mamba2 SSD
+block: within a chunk the stabilised exponential-gating recurrence is
+computed as a masked quadratic form, across chunks a ``lax.scan`` carries the
+``(C, n, m)`` matrix-memory state (stored log-stabilised as ``C_hat =
+C * exp(-m)``).  Decode is the O(1) recurrence from the xLSTM paper
+[arXiv:2405.04517].
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import Params, linear, linear_init, rmsnorm, rmsnorm_init
+
+
+class XLSTMConfig(NamedTuple):
+    d_model: int
+    n_heads: int = 4
+    proj_factor: int = 2
+    chunk: int = 256
+    # dtype of the (C, n) matrix-memory carries and the big gated einsums;
+    # exponents/stabilisers always stay f32.  bf16 halves the dominant
+    # memory-roofline term of the 48-layer model (§Perf hillclimb B).
+    state_dtype: str = "float32"
+    # unroll K timesteps inside each sLSTM scan body: the recurrent weight
+    # read and its gradient accumulation amortise K-fold (§Perf hillclimb B
+    # iteration 2 — the recurrent weight traffic dominates the sLSTM layers).
+    slstm_unroll: int = 1
+
+    @property
+    def d_inner(self) -> int:
+        return self.proj_factor * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 7)
+    di = cfg.d_inner
+    return {
+        "up": linear_init(ks[0], cfg.d_model, 2 * di, dtype=dtype),      # [x_inner, z gate]
+        "wq": linear_init(ks[1], di, di, dtype=dtype),
+        "wk": linear_init(ks[2], di, di, dtype=dtype),
+        "wv": linear_init(ks[3], di, di, dtype=dtype),
+        "w_if": linear_init(ks[4], di, 2 * cfg.n_heads, bias=True, dtype=dtype),  # gates
+        "out_norm": rmsnorm_init(di, dtype),
+        "down": linear_init(ks[5], di, cfg.d_model, dtype=dtype),
+    }
+
+
+def _mlstm_chunk(carry, inputs, scale: float, state_dtype=jnp.float32):
+    """carry: (C_hat (B,H,D,D), n_hat (B,H,D), m (B,H)).
+
+    Exponents and stabilisers stay f32; the matrix-memory carries and the
+    big (B,Q,Q,H)/(B,H,D,D) einsum operands run in ``state_dtype``."""
+    C_in, n_in, m_in = carry
+    q, k, v, lf, li = inputs          # q,k,v: (B,Q,H,D); lf,li: (B,Q,H)
+    qn = q.shape[1]
+    Lf = jnp.cumsum(lf, axis=1)                                   # (B,Q,H)
+    # intra-chunk log weights D[t,s] = Lf_t - Lf_s + li_s  (s <= t)
+    dmat = Lf[:, :, None, :] - Lf[:, None, :, :] + li[:, None, :, :]
+    causal = jnp.tril(jnp.ones((qn, qn), bool))[None, :, :, None]
+    dmat = jnp.where(causal, dmat, -jnp.inf)
+    a = m_in[:, None, :] + Lf                                     # (B,Q,H) inter log-scale
+    m_t = jnp.maximum(a, jnp.max(dmat, axis=2))                   # (B,Q,H)
+    w = jnp.exp(dmat - m_t[:, :, None, :])                        # (B,Q,Q,H)
+    qs = q.astype(state_dtype)
+    ks = k.astype(state_dtype)
+    vs = v.astype(state_dtype)
+    qk = jnp.einsum("bqhd,bshd->bqsh", qs, ks,
+                    preferred_element_type=jnp.float32) * scale
+    gated = (w * qk).astype(state_dtype)
+    intra = jnp.einsum("bqsh,bshd->bqhd", gated, vs,
+                       preferred_element_type=jnp.float32)
+    inter_scale = jnp.exp(a - m_t)                                # (B,Q,H)
+    inter = jnp.einsum("bqhd,bhde->bqhe", qs, C_in,
+                       preferred_element_type=jnp.float32) * inter_scale[..., None]
+    num = intra + inter
+    denom_intra = jnp.sum(gated.astype(jnp.float32), axis=2)      # (B,Q,H)
+    denom_inter = jnp.einsum("bqhd,bhd->bqh", qs, n_in,
+                             preferred_element_type=jnp.float32) * inter_scale
+    denom = jnp.maximum(jnp.abs(denom_intra + denom_inter), jnp.exp(-m_t))
+    h = num / denom[..., None]
+    # chunk-end state update
+    end_w = Lf[:, -1:, :] - Lf + li                               # (B,Q,H)
+    m_out = jnp.maximum(m_in + Lf[:, -1, :], jnp.max(end_w, axis=1))
+    kv_w = jnp.exp(end_w - m_out[:, None, :]).astype(state_dtype)  # (B,Q,H)
+    decay_out = jnp.exp(m_in + Lf[:, -1, :] - m_out)
+    C_out = (C_in.astype(jnp.float32) * decay_out[..., None, None]
+             + jnp.einsum("bqh,bqhd,bqhe->bhde", kv_w, ks * scale, vs,
+                          preferred_element_type=jnp.float32)).astype(state_dtype)
+    n_out = (n_in.astype(jnp.float32) * decay_out[..., None]
+             + jnp.einsum("bqh,bqhd->bhd", kv_w, ks * scale,
+                          preferred_element_type=jnp.float32)).astype(state_dtype)
+    return (C_out, n_out, m_out), h
+
+
+def mlstm_forward(p: Params, cfg: XLSTMConfig, x: jnp.ndarray) -> jnp.ndarray:
+    b, s, _ = x.shape
+    di, h, pd = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    up = linear(p["up"], x)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = linear(p["wq"], xi).reshape(b, s, h, pd).astype(jnp.float32)
+    k = linear(p["wk"], xi).reshape(b, s, h, pd).astype(jnp.float32)
+    v = linear(p["wv"], xi).reshape(b, s, h, pd).astype(jnp.float32)
+    gates = linear(p["w_if"], xi).astype(jnp.float32)             # (B,S,2H)
+    li, lf_raw = jnp.split(gates, 2, axis=-1)
+    lf = jax.nn.log_sigmoid(lf_raw)
+    scale = 1.0 / math.sqrt(pd)
+
+    qn = min(cfg.chunk, s)
+    n_chunks = s // qn
+    assert n_chunks * qn == s
+    sdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.state_dtype]
+
+    def chunker(arr):
+        return arr.reshape(b, n_chunks, qn, *arr.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(map(chunker, (q, k, v, lf, li)))
+    carry0 = (jnp.zeros((b, h, pd, pd), sdt),
+              jnp.zeros((b, h, pd), sdt),
+              jnp.full((b, h), -jnp.inf, jnp.float32))
+    _, hs = jax.lax.scan(lambda c, i: _mlstm_chunk(c, i, scale, sdt), carry0, xs)
+    out = hs.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)
+    out = rmsnorm(p["out_norm"], out) * jax.nn.silu(z)
+    return linear(p["down"], out)
+
+
+def init_mlstm_cache(batch: int, cfg: XLSTMConfig, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    h, pd = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, h, pd, pd), jnp.float32),
+        "n": jnp.zeros((batch, h, pd), jnp.float32),
+        "m": jnp.full((batch, h), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, cfg: XLSTMConfig, x: jnp.ndarray,
+                 cache: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    b = x.shape[0]
+    di, hh, pd = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    up = linear(p["up"], x[:, 0])
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = linear(p["wq"], xi).reshape(b, hh, pd).astype(jnp.float32)
+    k = linear(p["wk"], xi).reshape(b, hh, pd).astype(jnp.float32)
+    v = linear(p["wv"], xi).reshape(b, hh, pd).astype(jnp.float32)
+    gates = linear(p["w_if"], xi).astype(jnp.float32)
+    li, lf_raw = jnp.split(gates, 2, axis=-1)                     # (B,H)
+    lf = jax.nn.log_sigmoid(lf_raw)
+    scale = 1.0 / math.sqrt(pd)
+    m_new = jnp.maximum(cache["m"] + lf, li)
+    decay = jnp.exp(cache["m"] + lf - m_new)
+    inject = jnp.exp(li - m_new)
+    C = cache["C"] * decay[..., None, None] + inject[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k * scale, v)
+    n = cache["n"] * decay[..., None] + inject[..., None] * (k * scale)
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    hval = (num / den[..., None]).reshape(b, di).astype(x.dtype)
+    out = rmsnorm(p["out_norm"], hval) * jax.nn.silu(z)
+    y = linear(p["down"], out)[:, None, :]
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_forward_reference(p: Params, cfg: XLSTMConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Step-by-step recurrent oracle (tests only)."""
+    b, s, _ = x.shape
+    cache = init_mlstm_cache(b, cfg, x.dtype)
+    ys = []
+    for t in range(s):
+        y, cache = mlstm_decode(p, cfg, x[:, t : t + 1], cache)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, per-head recurrent weights)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    return {
+        "w_in": linear_init(ks[0], d, 4 * d, bias=True, dtype=dtype),    # i,f,z,o pre-acts
+        "r": (jax.random.normal(ks[1], (h, dh, 4 * dh)) / math.sqrt(dh)).astype(dtype),
+        "out_norm": rmsnorm_init(d, dtype),
+        "down": linear_init(ks[2], d, cfg.d_model, dtype=dtype),
+    }
+
+
+def init_slstm_cache(batch: int, cfg: XLSTMConfig, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+    }
+
+
+def _slstm_step(p: Params, cfg: XLSTMConfig, pre_x: jnp.ndarray, state):
+    """pre_x: (B, 4d) input pre-activations for one step."""
+    b = pre_x.shape[0]
+    d, hh = cfg.d_model, cfg.n_heads
+    dh = d // hh
+    h_prev = state["h"].reshape(b, hh, dh).astype(jnp.float32)
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, p["r"].astype(jnp.float32)).reshape(b, 4 * d)
+    pre = pre_x.astype(jnp.float32) + rec
+    li, lf_raw, zz, oo = jnp.split(pre, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(lf_raw)
+    m_new = jnp.maximum(lf + state["m"], li)
+    i = jnp.exp(li - m_new)
+    f = jnp.exp(lf + state["m"] - m_new)
+    c = f * state["c"] + i * jnp.tanh(zz)
+    n = f * state["n"] + i
+    h_new = jax.nn.sigmoid(oo) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h_new, "m": m_new}
+
+
+def slstm_forward(p: Params, cfg: XLSTMConfig, x: jnp.ndarray) -> jnp.ndarray:
+    b, s, _ = x.shape
+    pre = linear(p["w_in"], x)                                    # (B,S,4d)
+    k = max(1, cfg.slstm_unroll)
+    while s % k:
+        k -= 1
+
+    if k == 1:
+        def step(state, pre_t):
+            new = _slstm_step(p, cfg, pre_t, state)
+            return new, new["h"]
+        state0 = init_slstm_cache(b, cfg, x.dtype)
+        _, hs = jax.lax.scan(step, state0, pre.swapaxes(0, 1))
+        out = hs.swapaxes(0, 1).astype(x.dtype)
+    else:
+        # K steps unrolled per scan body: the recurrent weight matmul reads
+        # p["r"] once per body (loop-invariant), its gradient accumulates
+        # once per body — K-fold less HBM traffic than the per-step scan.
+        pre_c = pre.reshape(b, s // k, k, -1).swapaxes(0, 1)      # (S/K,B,K,4d)
+
+        def block(state, pre_blk):
+            hs_blk = []
+            for i in range(k):
+                state = _slstm_step(p, cfg, pre_blk[:, i], state)
+                hs_blk.append(state["h"])
+            return state, jnp.stack(hs_blk, axis=1)               # (B,K,d)
+
+        state0 = init_slstm_cache(b, cfg, x.dtype)
+        _, hs = jax.lax.scan(block, state0, pre_c)                # (S/K,B,K,d)
+        out = hs.swapaxes(0, 1).reshape(b, s, -1).astype(x.dtype)
+    out = rmsnorm(p["out_norm"], out)
+    return linear(p["down"], out)
+
+
+def slstm_decode(p: Params, cfg: XLSTMConfig, x: jnp.ndarray,
+                 cache: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    pre = linear(p["w_in"], x[:, 0])
+    new = _slstm_step(p, cfg, pre, cache)
+    out = rmsnorm(p["out_norm"], new["h"].astype(x.dtype))
+    return linear(p["down"], out)[:, None, :], new

@@ -1,0 +1,5 @@
+from .optim import (Optimizer, adamw, cosine_schedule, clip_by_global_norm,
+                    constant_schedule, sgd, warmup_cosine)
+
+__all__ = ["Optimizer", "sgd", "adamw", "constant_schedule", "cosine_schedule",
+           "warmup_cosine", "clip_by_global_norm"]

@@ -1,0 +1,97 @@
+"""Per-architecture smoke tests: instantiate the REDUCED variant of each
+assigned architecture (<=2 layers, d_model<=512, <=4 experts), run one
+forward and one train step on CPU, assert output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+
+ARCHS = list_archs()
+
+
+def _smoke_batch(cfg, b=2, s=16):
+    batch = {"tokens": jnp.arange(b * s).reshape(b, s) % cfg.vocab,
+             "labels": (jnp.arange(b * s).reshape(b, s) + 1) % cfg.vocab}
+    if cfg.arch_type == "vlm":
+        batch["patches"] = 0.1 * jnp.ones((b, cfg.n_prefix_tokens, cfg.d_model))
+    if cfg.arch_type in ("audio", "encdec"):
+        batch["frames"] = 0.1 * jnp.ones((b, 8, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_is_exact(arch):
+    """The full config matches the assigned spec (spot-check key fields)."""
+    cfg = get_config(arch)
+    spec = {
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 10944, 102400),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == spec, f"{arch}: {got} != {spec}"
+    assert cfg.source, f"{arch} missing source citation"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduced_bounds(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 2 or cfg.arch_type in ("hybrid",)
+    assert cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg)
+    # forward
+    logits = model.logits(params, batch)
+    expect_s = batch["tokens"].shape[1]
+    if cfg.arch_type == "vlm":
+        expect_s += cfg.n_prefix_tokens
+    assert logits.shape == (2, expect_s, cfg.vocab), logits.shape
+    assert not bool(jnp.any(jnp.isnan(logits))), f"{arch}: NaN logits"
+    # one SGD train step
+    step = jax.jit(make_train_step(model, lr=1e-3))
+    new_params, loss = step(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss {loss}"
+    # params changed
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved, f"{arch}: train step did not update params"
+    # loss decreases over a few steps (sanity that gradients point downhill)
+    p, prev = params, float(loss)
+    for _ in range(3):
+        p, l = step(p, batch)
+    assert float(l) < prev + 0.5, f"{arch}: loss exploded {prev} -> {l}"
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "zamba2-1.2b", "xlstm-1.3b",
+                                  "deepseek-v2-lite-16b"])
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 8)
+    logits, cache = model.decode_step(params, cache,
+                                      jnp.zeros((2, 1), jnp.int32), 0)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))

@@ -1,0 +1,145 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attacks import (ACTIVATION, GRADIENT, LABEL_FLIP, Attack,
+                                flip_labels, tamper_activation, tamper_gradient)
+from repro.core.clustering import has_honest_cluster, make_clusters
+from repro.launch.hlo_analysis import _type_bytes, _shape_dims
+from repro.models.moe import MoEConfig, capacity
+
+
+# ---------------------------------------------------------------------------
+# pigeonhole clustering invariants (eq. (1) + the honest-cluster guarantee)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 10**9))
+@settings(max_examples=100, deadline=None)
+def test_clusters_partition_and_pigeonhole(r, size_per, seed):
+    m = r * size_per
+    rng = np.random.default_rng(seed)
+    clusters = make_clusters(rng, m, r)
+    # (i) disjoint, (ii) covering
+    all_members = sorted(c for cl in clusters for c in cl)
+    assert all_members == list(range(m))
+    assert len(clusters) == r
+    assert all(len(c) == size_per for c in clusters)
+    # pigeonhole: any adversary set of size N = r-1 leaves an honest cluster
+    n = r - 1
+    malicious = set(rng.choice(m, size=min(n, m), replace=False).tolist())
+    assert has_honest_cluster(clusters, malicious)
+
+
+@given(st.integers(2, 6))
+@settings(max_examples=20, deadline=None)
+def test_adversary_can_poison_at_most_n_clusters(r):
+    """With N = r-1 malicious clients, at most N clusters are touched."""
+    rng = np.random.default_rng(0)
+    m = r * 3
+    clusters = make_clusters(rng, m, r)
+    malicious = set(range(r - 1))          # worst case: N distinct clients
+    touched = sum(1 for cl in clusters if any(c in malicious for c in cl))
+    assert touched <= r - 1
+
+
+# ---------------------------------------------------------------------------
+# attack transforms
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 50), st.integers(1, 49), st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_label_flip_is_shift_and_stays_in_range(n_classes, shift, seed):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.integers(0, n_classes, 32))
+    a = Attack(LABEL_FLIP, label_shift=shift)
+    y2 = flip_labels(a, y, n_classes)
+    assert bool(jnp.all((y2 >= 0) & (y2 < n_classes)))
+    assert bool(jnp.all(((y2 - y) % n_classes) == shift % n_classes))
+
+
+@given(st.integers(1, 8), st.integers(2, 64), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_activation_tamper_preserves_scale(b, d, seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(0, 1, (b, d)) + 0.1)
+    a = Attack(ACTIVATION)
+    out = tamper_activation(a, x, jax.random.PRNGKey(seed % 1000))
+    # norm-matched noise: by the triangle inequality the per-sample output
+    # norm cannot exceed the input norm (0.1|a| + 0.9|a|)
+    xi = np.linalg.norm(np.asarray(x), axis=1)
+    oi = np.linalg.norm(np.asarray(out), axis=1)
+    assert np.all(oi <= xi * (1 + 1e-4) + 1e-3)
+    # and the attack actually changes the message (d >= 2: the noise
+    # direction almost surely differs from the activation direction)
+    assert float(jnp.abs(out - x).max()) > 0
+
+
+@given(st.integers(1, 5), st.integers(1, 32))
+@settings(max_examples=30, deadline=None)
+def test_gradient_tamper_is_involution(b, d):
+    g = jnp.asarray(np.random.default_rng(0).normal(0, 1, (b, d)))
+    a = Attack(GRADIENT)
+    assert bool(jnp.all(tamper_gradient(a, tamper_gradient(a, g)) == g))
+    assert bool(jnp.all(tamper_gradient(a, g) == -g))
+
+
+# ---------------------------------------------------------------------------
+# MoE capacity arithmetic
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4096), st.integers(1, 64).filter(lambda e: e <= 64),
+       st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_moe_capacity_covers_perfect_balance(tokens, n_experts, top_k):
+    top_k = min(top_k, n_experts)
+    cfg = MoEConfig(d_model=8, d_expert=8, n_experts=n_experts, top_k=top_k,
+                    capacity_factor=1.0)
+    c = capacity(tokens, cfg)
+    assert c * n_experts >= tokens * top_k       # perfectly balanced fits
+    assert c % 8 == 0                            # TPU-aligned slots
+
+
+# ---------------------------------------------------------------------------
+# HLO type parsing
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(["f32", "bf16", "s32", "pred", "f16"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_hlo_type_bytes(dtype, dims):
+    bytes_per = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1, "f16": 2}[dtype]
+    n = int(np.prod(dims)) if dims else 1
+    s = f"{dtype}[{','.join(map(str, dims))}]"
+    assert _type_bytes(s) == n * bytes_per
+    assert _shape_dims(s) == dims
+
+
+def test_hlo_tuple_type_bytes():
+    s = "(f32[2,3]{1,0}, bf16[4]{0}, s32[])"
+    assert _type_bytes(s) == 24 + 8 + 4
+
+
+# ---------------------------------------------------------------------------
+# checkpoint roundtrip over random pytrees
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_roundtrip(seed, depth):
+    import tempfile, os
+    from repro.checkpoint import restore_pytree, save_checkpoint
+    rng = np.random.default_rng(seed)
+
+    def rand_tree(d):
+        if d == 0:
+            return jnp.asarray(rng.normal(0, 1, rng.integers(1, 5, size=2)))
+        return {f"k{i}": rand_tree(d - 1) for i in range(2)}
+
+    tree = rand_tree(depth)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ckpt")
+        save_checkpoint(path, tree, {"seed": seed})
+        back = restore_pytree(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

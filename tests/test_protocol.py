@@ -1,0 +1,217 @@
+"""Pigeon-SL protocol behaviour: selection, attacks, tamper detection,
+Pigeon-SL+ throughput and the Table I communication accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ACTIVATION, GRADIENT, HONEST, LABEL_FLIP, PARAM_TAMPER,
+                        Attack, ClientData, ProtocolConfig, from_cnn,
+                        run_pigeon, run_splitfed, run_vanilla_sl)
+from repro.core import attacks as atk
+from repro.core.protocol import _count_params, cut_width
+from repro.core.split import client_update, sl_minibatch_grads
+from repro.core.validation import check_handoff
+from repro.data import build_image_task
+from repro.models.cnn import MNIST_CNN
+
+
+@pytest.fixture(scope="module")
+def task():
+    data, cfg = build_image_task("mnist", m_clients=4, d_m=200, d_o=100,
+                                 n_test=400, seed=0)
+    return data, from_cnn(cfg)
+
+
+PCFG = ProtocolConfig(M=4, N=1, T=4, E=4, B=32, lr=0.05, seed=0)
+
+
+def test_pigeon_honest_learns(task):
+    data, module = task
+    hist = run_pigeon(module, data, PCFG, malicious=set())
+    accs = [r["test_acc"] for r in hist.rounds]
+    assert accs[-1] > 0.3, accs
+    assert all(r["honest_cluster_exists"] for r in hist.rounds)
+
+
+@pytest.mark.parametrize("attack", [Attack(LABEL_FLIP), Attack(GRADIENT),
+                                    Attack(ACTIVATION)],
+                         ids=lambda a: a.kind)
+def test_pigeon_resists_attacks(task, attack):
+    data, module = task
+    pcfg = dataclasses.replace(PCFG, T=4)
+    hist = run_pigeon(module, data, pcfg, malicious={1}, attack=attack, plus=True)
+    accs = [r["test_acc"] for r in hist.rounds]
+    assert accs[-1] > 0.3, accs
+
+
+def test_pigeon_selects_honest_under_label_flip(task):
+    data, module = task
+    hist = run_pigeon(module, data, PCFG, malicious={1}, attack=Attack(LABEL_FLIP))
+    # the malicious cluster should essentially never win selection
+    honest_sel = [r["selected_honest"] for r in hist.rounds]
+    assert sum(honest_sel) >= len(honest_sel) - 1
+
+
+def test_param_tamper_detected_and_rolled_back(task):
+    """Force the III-C scenario: a malicious last client hands off tampered
+    params; the handoff check must catch it."""
+    data, module = task
+    gamma, phi = module.init(jax.random.PRNGKey(0))
+    x0 = jnp.asarray(data.x0)
+    ref_acts = module.client_forward(gamma, x0)
+    tampered = atk.tamper_params(Attack(PARAM_TAMPER), gamma, jax.random.PRNGKey(1))
+    recv = module.client_forward(tampered, x0)
+    ok, dist = check_handoff(ref_acts, [recv], tol=1e-4)
+    assert not ok and dist > 1e-2
+    ok2, dist2 = check_handoff(ref_acts, [module.client_forward(gamma, x0)])
+    assert ok2 and dist2 < 1e-6
+
+
+def test_param_tamper_protocol_end_to_end(task):
+    """With every client malicious-last possible (M=4, N=1 -> R=2 clusters of
+    2), run with all-but-one malicious param-tamperers: detections must fire
+    whenever a tampered cluster would be selected, and training still works."""
+    data, module = task
+    pcfg = dataclasses.replace(PCFG, T=4)
+    hist = run_pigeon(module, data, pcfg, malicious={0, 1, 3},
+                      attack=Attack(PARAM_TAMPER))
+    # pigeonhole violated here (3 > N=1) on purpose: but detection still
+    # fires whenever a tampered handoff happens
+    total_detections = sum(r["detections"] for r in hist.rounds)
+    assert total_detections >= 1
+
+
+def test_pigeon_plus_update_throughput(task):
+    """Pigeon-SL+ must perform M client updates per round (matching vanilla
+    SL), Pigeon-SL only M_bar = M/R."""
+    data, module = task
+    pcfg = dataclasses.replace(PCFG, T=1)
+    d_c = cut_width(module, module.init(jax.random.PRNGKey(0))[0], data.x0)
+    h_plain = run_pigeon(module, data, pcfg, malicious=set())
+    h_plus = run_pigeon(module, data, pcfg, malicious=set(), plus=True)
+    per_sample = pcfg.E * pcfg.B * d_c
+    # selected-cluster training activations: R*Mbar*E*B*d_c for the selection
+    # phase; + (R-1)*Mbar*E*B*d_c extra for plus
+    act_plain = h_plain.rounds[0]["comm"]["activation_floats"]
+    act_plus = h_plus.rounds[0]["comm"]["activation_floats"]
+    m_bar = pcfg.M // pcfg.R
+    assert act_plain == pcfg.M * per_sample            # R clusters x Mbar
+    assert act_plus == (2 * pcfg.M - m_bar) * per_sample
+
+
+def test_comm_accounting_matches_table1(task):
+    """Measured float counts must reproduce Table I's formulas."""
+    data, module = task
+    pcfg = dataclasses.replace(PCFG, T=1)
+    gamma0, _ = module.init(jax.random.PRNGKey(0))
+    d_cl = _count_params(gamma0)
+    d_c = cut_width(module, gamma0, data.x0)
+    d_o = data.x0.shape[0]
+    d_tilde = pcfg.E * pcfg.B
+
+    hist = run_pigeon(module, data, pcfg, malicious=set())
+    comm = hist.rounds[0]["comm"]
+    # Table I total clients (Pigeon-SL): (M*D + 2R*Do)*d_c + M*d_CL
+    assert comm["activation_floats"] == pcfg.M * d_tilde * d_c
+    assert comm["validation_floats"] == 2 * pcfg.R * d_o * d_c
+    assert comm["param_floats"] == pcfg.M * d_cl
+
+    hist_v = run_vanilla_sl(module, data, pcfg, malicious=set())
+    comm_v = hist_v.rounds[0]["comm"]
+    assert comm_v["activation_floats"] == pcfg.M * d_tilde * d_c
+    assert comm_v["param_floats"] == pcfg.M * d_cl
+    assert comm_v["validation_floats"] == 0
+
+    hist_p = run_pigeon(module, data, pcfg, malicious=set(), plus=True)
+    comm_p = hist_p.rounds[0]["comm"]
+    m_bar = pcfg.M // pcfg.R
+    assert comm_p["activation_floats"] == (2 * pcfg.M - m_bar) * d_tilde * d_c
+    assert comm_p["param_floats"] == (2 * pcfg.M - m_bar) * d_cl
+    assert comm_p["validation_floats"] == 2 * pcfg.R * d_o * d_c
+
+
+def test_vanilla_sl_degrades_under_gradient_attack(task):
+    """The paper's core motivation: one malicious client hurts vanilla SL
+    more than Pigeon-SL+ (accuracy after the same number of rounds)."""
+    data, module = task
+    pcfg = dataclasses.replace(PCFG, T=4, seed=3)
+    mal = {1}
+    h_v = run_vanilla_sl(module, data, pcfg, malicious=mal, attack=Attack(ACTIVATION))
+    h_p = run_pigeon(module, data, pcfg, malicious=mal, attack=Attack(ACTIVATION),
+                     plus=True)
+    assert h_p.rounds[-1]["test_acc"] >= h_v.rounds[-1]["test_acc"] - 0.05
+
+
+def test_splitfed_baseline_runs(task):
+    data, module = task
+    pcfg = dataclasses.replace(PCFG, T=2, lr=0.5)   # paper: 10x SL lr
+    hist = run_splitfed(module, data, pcfg, malicious={1}, attack=Attack(LABEL_FLIP))
+    assert len(hist.rounds) == 2
+    assert all("test_acc" in r for r in hist.rounds)
+
+
+def test_attack_hooks_change_the_right_messages(task):
+    """Label flip changes labels only; activation tamper changes the forward
+    message; gradient tamper reverses the cut gradient."""
+    data, module = task
+    gamma, phi = module.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(data.x[0][:8])
+    y = jnp.asarray(data.y[0][:8])
+    key = jax.random.PRNGKey(0)
+
+    g_h, p_h, l_h = sl_minibatch_grads(module, HONEST, gamma, phi, x, y, key)
+    g_g, p_g, l_g = sl_minibatch_grads(module, Attack(GRADIENT), gamma, phi, x, y, key)
+    # gradient attack reverses the client-side gradient exactly
+    for a, b in zip(jax.tree.leaves(g_h), jax.tree.leaves(g_g)):
+        np.testing.assert_allclose(np.asarray(a), -np.asarray(b), atol=1e-6)
+    # ... but leaves the AP-side gradient untouched
+    for a, b in zip(jax.tree.leaves(p_h), jax.tree.leaves(p_g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+    # label flipping changes the loss (at random init the magnitude ordering
+    # is not determined, so assert difference rather than direction)
+    _, _, l_f = sl_minibatch_grads(module, Attack(LABEL_FLIP), gamma, phi, x, y, key)
+    assert abs(float(l_f) - float(l_h)) > 1e-4
+
+
+def test_noniid_selection_degrades_gracefully(task):
+    """Beyond-paper finding (see benchmarks/ablation_shared_set.py): under
+    *mild* heterogeneity (alpha=2) the shared-set selection still mostly
+    identifies honest clusters; under *harsh* skew (alpha=0.2) an
+    honest-but-skewed cluster can lose the argmin to the poisoned one —
+    the paper's i.i.d. assumption is load-bearing for the selection rule."""
+    from repro.data import build_image_task, dirichlet_relabel
+    data, cfg = build_image_task("mnist", m_clients=4, d_m=200, d_o=120,
+                                 n_test=300, seed=4)
+    data_mild = dirichlet_relabel(data, alpha=2.0, seed=4)
+    # shards became skewed: per-client label diversity dropped
+    data_harsh = dirichlet_relabel(data, alpha=0.2, seed=4)
+    def mean_class_count(d):
+        return np.mean([len(np.unique(d.y[i])) for i in range(4)])
+    assert mean_class_count(data_harsh) < mean_class_count(data)
+    module = from_cnn(cfg)
+    pcfg = dataclasses.replace(PCFG, T=4)
+    h_mild = run_pigeon(module, data_mild, pcfg, malicious={1},
+                        attack=Attack(LABEL_FLIP))
+    honest_mild = sum(r["selected_honest"] for r in h_mild.rounds)
+    assert honest_mild >= 2, [r["selected_honest"] for r in h_mild.rounds]
+
+
+def test_pigeon_checkpoint_resume(task, tmp_path):
+    """Protocol checkpoint/resume: resuming after round k reproduces the
+    same final parameters trajectory (same cluster RNG stream)."""
+    data, module = task
+    path = str(tmp_path / "pigeon_ckpt")
+    pcfg = dataclasses.replace(PCFG, T=3)
+    h_full = run_pigeon(module, data, pcfg, malicious=set(),
+                        checkpoint_path=path)
+    # wipe nothing; resume from the saved round-2 checkpoint with T=4
+    pcfg4 = dataclasses.replace(PCFG, T=4)
+    h_res = run_pigeon(module, data, pcfg4, malicious=set(),
+                       checkpoint_path=path, resume=True)
+    # only the missing round runs
+    assert len(h_res.rounds) == 1
+    assert h_res.rounds[0]["round"] == 3

@@ -1,0 +1,131 @@
+"""Data pipeline, optimizer, checkpoint and HLO-analysis unit tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_pytree, save_checkpoint
+from repro.data import build_image_task, build_lm_task, make_markov_tokens
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.optim import adamw, clip_by_global_norm, sgd, warmup_cosine
+
+
+def test_image_task_shapes():
+    data, cfg = build_image_task("mnist", m_clients=3, d_m=50, d_o=20,
+                                 n_test=40)
+    assert data.x.shape == (3, 50, 28, 28, 1)
+    assert data.y.shape == (3, 50)
+    assert data.x0.shape == (20, 28, 28, 1)
+    assert data.x_test.shape == (40, 28, 28, 1)
+    assert set(np.unique(data.y)) <= set(range(10))
+
+
+def test_image_task_is_learnable_and_consistent():
+    d1, _ = build_image_task("mnist", m_clients=2, d_m=30, d_o=10, n_test=10,
+                             seed=7)
+    d2, _ = build_image_task("mnist", m_clients=2, d_m=30, d_o=10, n_test=10,
+                             seed=7)
+    np.testing.assert_array_equal(d1.x, d2.x)     # deterministic
+    # same-class samples are closer than cross-class (templates dominate)
+    y = d1.y[0]
+    x = d1.x[0].reshape(30, -1)
+    same, diff = [], []
+    for i in range(20):
+        for j in range(i + 1, 20):
+            d = np.linalg.norm(x[i] - x[j])
+            (same if y[i] == y[j] else diff).append(d)
+    if same and diff:
+        assert np.mean(same) < np.mean(diff)
+
+
+def test_lm_task_shapes_and_shift():
+    data = build_lm_task(vocab=32, seq_len=16, m_clients=2, d_m=8, d_o=4,
+                         n_test=4)
+    assert data.x.shape == (2, 8, 16)
+    # labels are next-token shifted inputs
+    np.testing.assert_array_equal(data.x[0, 0, 1:], data.y[0, 0, :-1])
+
+
+def test_markov_tokens_are_predictable():
+    """A strongly-peaked chain: repeated bigrams far above uniform chance."""
+    from collections import Counter
+    toks = make_markov_tokens(0, vocab=16, n_seqs=64, seq_len=32)
+    total = toks.shape[0] * (toks.shape[1] - 1)
+    bigrams = Counter(zip(toks[:, :-1].ravel(), toks[:, 1:].ravel()))
+    top = bigrams.most_common(1)[0][1]
+    assert top > total / (16 * 16) * 3
+
+
+def test_sgd_and_adamw_minimize_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for opt in (sgd(0.1), sgd(0.05, momentum=0.9), adamw(0.2)):
+        params = {"w": jnp.zeros(3)}
+        state = opt.init(params)
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            upd, state = opt.update(g, state, params)
+            params = jax.tree.map(lambda p, u: p + u, params, upd)
+        assert float(loss(params)) < 1e-2
+
+
+def test_warmup_cosine_schedule():
+    sched = warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1.0, abs=1e-5)
+    assert float(sched(60)) < 1.0
+    assert float(sched(200)) <= float(sched(60))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_checkpoint_roundtrip_nested():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.int32), "d": (jnp.zeros(2), jnp.ones(1))}}
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "ck")
+        save_checkpoint(p, tree, {"round": 3})
+        back = restore_pytree(p, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hlo_analysis_multiplies_scan_bodies():
+    """The analyzer must count while-loop bodies trip_count times (XLA's own
+    cost_analysis counts them once — the reason this module exists)."""
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    flops = {}
+    for layers in (2, 8):
+        ws = jax.ShapeDtypeStruct((layers, 64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+        compiled = jax.jit(f).lower(ws, x).compile()
+        flops[layers] = analyze_hlo(compiled.as_text()).flops
+    assert flops[8] == pytest.approx(4 * flops[2], rel=0.05), flops
+    # absolute: 2*M*N*K per layer
+    assert flops[8] == pytest.approx(8 * 2 * 8 * 64 * 64, rel=0.2)
+
+
+def test_hlo_analysis_counts_collectives():
+    # single-device programs have no collectives
+    compiled = jax.jit(lambda x: x @ x).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    a = analyze_hlo(compiled.as_text())
+    assert a.coll_bytes == 0
+    assert a.flops == pytest.approx(2 * 32 * 32 * 32, rel=0.1)

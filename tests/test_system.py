@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claims, at reduced scale:
+  1. Pigeon-SL(+) trains to high accuracy with a malicious client present,
+     where vanilla SL degrades or destabilises (Figs. 3-4).
+  2. The protocol also works over a transformer LM (the framework
+     integration: any splittable model runs the same protocol).
+  3. More malicious clients (larger N) slow convergence (Figs. 5-6).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Attack, LABEL_FLIP, ACTIVATION, ProtocolConfig,
+                        from_cnn, from_lm, run_pigeon, run_vanilla_sl)
+from repro.data import build_image_task, build_lm_task
+from repro.models import build_model
+from repro.models.config import ModelConfig
+
+
+def test_e2e_pigeon_beats_vanilla_under_attack():
+    data, cnn_cfg = build_image_task("mnist", m_clients=4, d_m=250, d_o=120,
+                                     n_test=600, seed=1)
+    module = from_cnn(cnn_cfg)
+    pcfg = ProtocolConfig(M=4, N=1, T=5, E=5, B=32, lr=0.05, seed=1)
+    mal = {2}
+    attack = Attack(ACTIVATION)
+    h_pigeon = run_pigeon(module, data, pcfg, malicious=mal, attack=attack,
+                          plus=True)
+    h_vanilla = run_vanilla_sl(module, data, pcfg, malicious=mal, attack=attack)
+    acc_p = h_pigeon.rounds[-1]["test_acc"]
+    acc_v = h_vanilla.rounds[-1]["test_acc"]
+    assert acc_p > 0.5, f"pigeon failed to learn: {acc_p}"
+    assert acc_p >= acc_v - 0.02, (acc_p, acc_v)
+
+
+def test_e2e_protocol_over_transformer_lm():
+    """The same protocol drives a (tiny) transformer LM split at its cut
+    layer — the framework's integration point for the assigned archs."""
+    vocab = 64
+    cfg = ModelConfig(name="tiny-lm", arch_type="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=vocab,
+                      cut_layer=1)
+    model = build_model(cfg)
+    module = from_lm(model)
+    data = build_lm_task(vocab=vocab, seq_len=32, m_clients=2, d_m=64, d_o=32,
+                         n_test=32, seed=0)
+    pcfg = ProtocolConfig(M=2, N=1, T=2, E=3, B=8, lr=5e-2, seed=0)
+    hist = run_pigeon(module, data, pcfg, malicious={1},
+                      attack=Attack(LABEL_FLIP))
+    assert len(hist.rounds) == 2
+    accs = [r["test_acc"] for r in hist.rounds]
+    assert all(np.isfinite(a) for a in accs)
+    # markov data is learnable: accuracy should be above uniform 1/64
+    assert accs[-1] > 1.5 / vocab, accs
+
+
+def test_e2e_larger_n_converges_slower():
+    data, cnn_cfg = build_image_task("mnist", m_clients=6, d_m=200, d_o=100,
+                                     n_test=500, seed=2)
+    module = from_cnn(cnn_cfg)
+    base = dict(M=6, T=4, E=4, B=32, lr=0.05, seed=2)
+    accs = {}
+    for n in (1, 2):
+        pcfg = ProtocolConfig(N=n, **base)
+        mal = set(range(n))
+        hist = run_pigeon(module, data, pcfg, malicious=mal,
+                          attack=Attack(LABEL_FLIP))
+        accs[n] = [r["test_acc"] for r in hist.rounds]
+    # with more clusters, fewer updates survive per round -> slower early curve
+    assert np.mean(accs[2]) <= np.mean(accs[1]) + 0.05, accs
