@@ -1,6 +1,6 @@
 """Checkpointing: pytree <-> .npz + JSON treedef (no orbax dependency).
 
-Arrays are flattened with ``jax.tree.flatten_with_path`` so the archive keys
+Arrays are flattened with ``jax.tree_util.tree_flatten_with_path`` so the archive keys
 are stable, human-readable paths; restore rebuilds the exact pytree
 structure.  Works for params, optimizer states and protocol state alike.
 """
@@ -30,7 +30,7 @@ def _path_str(path) -> str:
 
 
 def save_checkpoint(path: str, tree: Pytree, metadata: Optional[Dict] = None) -> None:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     arrays = {f"a{i}": np.asarray(v) for i, (_, v) in enumerate(flat)}
     names = [_path_str(p) for p, _ in flat]
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
@@ -52,7 +52,7 @@ def load_checkpoint(path: str) -> Tuple[Dict[str, np.ndarray], Dict]:
 def restore_pytree(path: str, like: Pytree) -> Pytree:
     """Restore into the structure of ``like`` (shapes must match)."""
     arrays, _ = load_checkpoint(path)
-    flat, treedef = jax.tree.flatten_with_path(like)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for p, v in flat:
         name = _path_str(p)

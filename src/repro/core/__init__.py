@@ -5,19 +5,26 @@ shared-dataset validation selection, tamper-resilient parameter handoff and
 the throughput-matched Pigeon-SL+ variant.
 """
 from .attacks import (ACTIVATION, GRADIENT, HONEST, KINDS, LABEL_FLIP, NONE,
-                      PARAM_TAMPER, Attack)
+                      PARAM_TAMPER, Attack, AttackVec, attack_vec,
+                      attack_vec_for_clusters)
 from .clustering import cluster_is_honest, has_honest_cluster, make_clusters
-from .protocol import (ClientData, CommMeter, History, ProtocolConfig,
-                       run_pigeon, run_splitfed, run_vanilla_sl)
-from .split import SplitModule, client_update, from_cnn, from_lm, sl_minibatch_grads
+from .engine import (batched_round, onehot_select, run_pigeon_sweep,
+                     train_round_batched)
+from .protocol import (ENGINES, ClientData, CommMeter, History, ProtocolConfig,
+                       run_pigeon, run_pigeon_plus, run_splitfed,
+                       run_vanilla_sl)
+from .split import (SplitModule, client_update, client_update_vec, from_cnn,
+                    from_lm, sl_minibatch_grads, sl_minibatch_grads_vec)
 from .validation import check_handoff, select_cluster, validation_loss
 
 __all__ = [
     "Attack", "HONEST", "NONE", "LABEL_FLIP", "ACTIVATION", "GRADIENT",
-    "PARAM_TAMPER", "KINDS",
+    "PARAM_TAMPER", "KINDS", "AttackVec", "attack_vec", "attack_vec_for_clusters",
     "make_clusters", "has_honest_cluster", "cluster_is_honest",
-    "ClientData", "CommMeter", "History", "ProtocolConfig",
-    "run_pigeon", "run_splitfed", "run_vanilla_sl",
-    "SplitModule", "client_update", "from_cnn", "from_lm", "sl_minibatch_grads",
+    "ClientData", "CommMeter", "History", "ProtocolConfig", "ENGINES",
+    "run_pigeon", "run_pigeon_plus", "run_splitfed", "run_vanilla_sl",
+    "run_pigeon_sweep", "batched_round", "train_round_batched", "onehot_select",
+    "SplitModule", "client_update", "client_update_vec", "from_cnn", "from_lm",
+    "sl_minibatch_grads", "sl_minibatch_grads_vec",
     "check_handoff", "select_cluster", "validation_loss",
 ]

@@ -15,10 +15,11 @@ that honest and malicious clients run different computations.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NONE = "none"
 LABEL_FLIP = "label_flip"
@@ -49,23 +50,86 @@ def flip_labels(attack: Attack, y: jnp.ndarray, n_classes: int) -> jnp.ndarray:
     return (y + attack.label_shift) % n_classes
 
 
-def tamper_activation(attack: Attack, acts: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
-    if attack.kind != ACTIVATION:
-        return acts
+def _noise_blend(acts: jnp.ndarray, key: jax.Array, keep) -> jnp.ndarray:
+    """Keep a ``keep`` fraction of the true cut activation and replace the
+    rest with Gaussian noise norm-matched per sample (leading axis = batch).
+    Shared by the static and vectorised tamper transforms so the blend
+    arithmetic has a single source of truth."""
     n = jax.random.normal(key, acts.shape, jnp.float32)
-    # norm-match per sample (leading axis = batch)
     axes = tuple(range(1, acts.ndim))
     g_norm = jnp.sqrt(jnp.sum(jnp.square(acts.astype(jnp.float32)), axis=axes, keepdims=True))
     n_norm = jnp.sqrt(jnp.sum(jnp.square(n), axis=axes, keepdims=True))
     n_scaled = n * (g_norm / jnp.maximum(n_norm, 1e-12))
-    out = attack.act_keep * acts.astype(jnp.float32) + (1.0 - attack.act_keep) * n_scaled
+    out = keep * acts.astype(jnp.float32) + (1.0 - keep) * n_scaled
     return out.astype(acts.dtype)
+
+
+def tamper_activation(attack: Attack, acts: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    if attack.kind != ACTIVATION:
+        return acts
+    return _noise_blend(acts, key, attack.act_keep)
 
 
 def tamper_gradient(attack: Attack, g: jnp.ndarray) -> jnp.ndarray:
     if attack.kind != GRADIENT:
         return g
     return -g
+
+
+# ---------------------------------------------------------------------------
+# vmappable attack state
+# ---------------------------------------------------------------------------
+#
+# ``Attack`` is static (one compiled program per kind).  The batched engine
+# instead runs every (cluster, client) slot through ONE program, so the attack
+# configuration must be *data*: ``AttackVec`` is a pytree of arrays whose
+# leaves carry arbitrary leading batch axes — (M_bar,) per cluster, (R, M_bar)
+# per round, (S, R, M_bar) per seed sweep — and the transforms below select
+# between the honest and tampered message with ``jnp.where`` so honest slots
+# reproduce the un-attacked values exactly (bit-for-bit).
+
+class AttackVec(NamedTuple):
+    flip: jnp.ndarray        # bool   — label flipping active
+    shift: jnp.ndarray       # int32  — label shift amount
+    act: jnp.ndarray         # bool   — activation tampering active
+    act_keep: jnp.ndarray    # float32 — fraction of the true activation kept
+    grad: jnp.ndarray        # bool   — gradient (sign-reversal) tampering active
+
+
+def attack_vec(attack: Attack, active) -> AttackVec:
+    """Per-client attack state.  ``active`` may be a bool or a bool array;
+    param-tampering clients train honestly (Section III-C), so only the three
+    message-level attacks ever raise a flag here."""
+    on = np.asarray(active, bool)
+    return AttackVec(
+        flip=jnp.asarray(on & (attack.kind == LABEL_FLIP)),
+        shift=jnp.broadcast_to(jnp.int32(attack.label_shift), on.shape)
+        if on.shape else jnp.int32(attack.label_shift),
+        act=jnp.asarray(on & (attack.kind == ACTIVATION)),
+        act_keep=jnp.broadcast_to(jnp.float32(attack.act_keep), on.shape)
+        if on.shape else jnp.float32(attack.act_keep),
+        grad=jnp.asarray(on & (attack.kind == GRADIENT)),
+    )
+
+
+def attack_vec_for_clusters(attack: Attack, clusters: Sequence[Sequence[int]],
+                            malicious: Set[int]) -> AttackVec:
+    """(R, M_bar)-leaved AttackVec for one round's cluster partition."""
+    active = np.array([[c in malicious for c in cluster] for cluster in clusters])
+    return attack_vec(attack, active)
+
+
+def flip_labels_vec(av: AttackVec, y: jnp.ndarray, n_classes: int) -> jnp.ndarray:
+    return jnp.where(av.flip, (y + av.shift) % n_classes, y)
+
+
+def tamper_activation_vec(av: AttackVec, acts: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    out = _noise_blend(acts, key, av.act_keep.astype(jnp.float32))
+    return jnp.where(av.act, out, acts)
+
+
+def tamper_gradient_vec(av: AttackVec, g: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(av.grad, -g, g)
 
 
 def tamper_params(attack: Attack, params, key: jax.Array):

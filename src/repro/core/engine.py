@@ -1,0 +1,394 @@
+"""Batched cluster-parallel protocol engine.
+
+Pigeon-SL's global round trains R = N+1 clusters independently from the same
+theta^t — embarrassingly parallel work that the sequential driver in
+``protocol.py`` dispatches one ``client_update`` at a time.  This module
+stacks the R clusters' sampled batches, per-client attack state and RNG keys
+into leading-axis arrays and runs the whole round as ONE jitted program:
+``jax.vmap`` over clusters, ``jax.lax.scan`` over the within-cluster client
+chain, with the shared-set validation forward (and the tamper-check
+activations it produces) vmapped alongside.  A second level of ``vmap`` turns
+the round program into a multi-seed sweep that advances S whole protocol
+replicas in lockstep.
+
+Equivalence contract with the sequential engine (tested in
+``tests/test_engine.py``): both engines consume the numpy batch-sampling RNG
+and the JAX key stream in exactly the same order, the attack transforms are
+``jnp.where``-masked versions of the same arithmetic, and the CommMeter
+accounting goes through the same ``account_client_turn`` helper — so seeded
+runs select the same clusters, produce validation losses equal within float
+tolerance, and report bit-identical message counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+from typing import Any, Dict, List, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attacks import HONEST, PARAM_TAMPER, Attack, attack_vec_for_clusters
+from .clustering import cluster_is_honest, make_clusters
+from .protocol import (ClientData, CommMeter, History, ProtocolConfig,
+                       _count_params, account_client_turn, account_validation,
+                       cut_width, sample_batch_idx)
+from .split import SplitModule, client_update_vec_impl
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# host-side assembly: batches, keys and attack state for one round
+# ---------------------------------------------------------------------------
+
+def assemble_round_batches(rng: np.random.Generator, data: ClientData,
+                           clusters: Sequence[Sequence[int]],
+                           pcfg: ProtocolConfig
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample every client's (E, B) mini-batches for the round, consuming the
+    numpy RNG in the sequential engine's order (cluster-major, then client),
+    and stack them to (R, M_bar, E, B, ...)."""
+    xs_all, ys_all = [], []
+    for cluster in clusters:
+        xs_c, ys_c = [], []
+        for client in cluster:
+            idx = sample_batch_idx(rng, data.x[client].shape[0], pcfg.E, pcfg.B)
+            xs_c.append(data.x[client][idx])
+            ys_c.append(data.y[client][idx])
+        xs_all.append(np.stack(xs_c))
+        ys_all.append(np.stack(ys_c))
+    return jnp.asarray(np.stack(xs_all)), jnp.asarray(np.stack(ys_all))
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _round_client_keys(key: jax.Array, r: int, m_bar: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    rows = []
+    for _ in range(r):
+        key, sub = jax.random.split(key)
+        row = []
+        for _ in range(m_bar):
+            sub, k_j = jax.random.split(sub)
+            row.append(k_j)
+        rows.append(jnp.stack(row))
+    return key, jnp.stack(rows)
+
+
+def round_client_keys(key: jax.Array, clusters: Sequence[Sequence[int]]
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Replicate the sequential engine's key discipline — per cluster
+    ``key, sub = split(key)``, then per client ``sub, k_j = split(sub)`` —
+    and stack the per-client keys to (R, M_bar, key).  Returns the advanced
+    protocol key so both engines stay on the same stream.  The whole split
+    chain runs as one jitted call instead of R + M host dispatches."""
+    return _round_client_keys(key, len(clusters), len(clusters[0]))
+
+
+# ---------------------------------------------------------------------------
+# the compiled round program
+# ---------------------------------------------------------------------------
+
+def _round_body(module: SplitModule, lr: float, gamma: Pytree, phi: Pytree,
+                xs, ys, avec, keys, x0, y0):
+    """All R clusters' client chains + shared-set validation, vmapped.
+
+    xs/ys: (R, M_bar, E, B, ...); avec leaves and keys: (R, M_bar, ...).
+    Returns (gammas, phis, train_losses (R, M_bar), val_losses (R,),
+    val_acts (R, D_o, d_c)) — the R candidate round outcomes.
+    """
+
+    def one_cluster(xs_c, ys_c, av_c, keys_c):
+        def per_client(carry, inp):
+            g, p = carry
+            x, y, av, k = inp
+            g, p, loss = client_update_vec_impl(module, av, g, p, (x, y), lr, k)
+            return (g, p), loss
+
+        (g, p), losses = jax.lax.scan(per_client, (gamma, phi),
+                                      (xs_c, ys_c, av_c, keys_c))
+        acts = module.client_forward(g, x0)
+        vloss = module.ap_loss(p, acts, y0)
+        return g, p, losses, vloss, acts
+
+    return jax.vmap(one_cluster)(xs, ys, avec, keys)
+
+
+batched_round = partial(jax.jit, static_argnums=(0, 1))(_round_body)
+
+
+def onehot_select(stacked: Pytree, sel: jnp.ndarray) -> Pytree:
+    """Pick index ``sel`` along each leaf's leading axis via a one-hot
+    contraction: lowers to one masked reduction per leaf instead of the
+    gather+full-replicate path GSPMD emits for dynamic indexing.  The mask is
+    applied with ``jnp.where`` rather than multiplication so Inf/NaN in
+    *unselected* slots (e.g. a diverged malicious cluster) cannot poison the
+    selected values through ``0 * inf = nan``."""
+
+    def pick(x):
+        mask = (jnp.arange(x.shape[0]) == sel).reshape((-1,) + (1,) * (x.ndim - 1))
+        masked = jnp.where(mask, x.astype(jnp.float32), 0.0)
+        return jnp.sum(masked, axis=0).astype(x.dtype)
+
+    return jax.tree.map(pick, stacked)
+
+
+# ---------------------------------------------------------------------------
+# protocol-facing drivers (same result structure as the sequential loops)
+# ---------------------------------------------------------------------------
+
+def train_round_batched(module: SplitModule, theta, clusters, data: ClientData,
+                        pcfg: ProtocolConfig, malicious: Set[int], attack: Attack,
+                        rng: np.random.Generator, key: jax.Array, meter: CommMeter,
+                        d_c: int, x0, y0) -> Tuple[jax.Array, List[Dict[str, Any]]]:
+    """Batched replacement for the sequential per-cluster loop of
+    ``run_pigeon``: one compiled call produces all R candidate
+    (gamma, phi, val_loss, val_acts) tuples."""
+    xs, ys = assemble_round_batches(rng, data, clusters, pcfg)
+    key, keys = round_client_keys(key, clusters)
+    avec = attack_vec_for_clusters(attack, clusters, malicious)
+    gs, ps, losses, vlosses, vacts = batched_round(
+        module, pcfg.lr, theta[0], theta[1], xs, ys, avec, keys, x0, y0)
+
+    d_cl = _count_params(theta[0])
+    for cluster in clusters:
+        for j in range(len(cluster)):
+            account_client_turn(meter, pcfg, d_c, d_cl, handoff=j < len(cluster) - 1)
+
+    losses = np.asarray(losses)
+    vlosses = np.asarray(vlosses)
+    results = []
+    for r, cluster in enumerate(clusters):
+        # gamma/phi/vacts stay as views into the stacked arrays; the
+        # selection loop materialises only the candidates it inspects
+        # (protocol.res_params / res_vacts).
+        results.append(dict(vloss=float(vlosses[r]), cluster=cluster,
+                            train_loss=float(np.mean(losses[r])),
+                            _stacked=(gs, ps, vacts, r)))
+    return key, results
+
+
+def train_cluster_batched(module: SplitModule, theta, cluster, data: ClientData,
+                          pcfg: ProtocolConfig, malicious: Set[int], attack: Attack,
+                          rng: np.random.Generator, key: jax.Array,
+                          meter: CommMeter, d_c: int
+                          ) -> Tuple[jax.Array, Pytree, Pytree, float]:
+    """One cluster's client chain as a single compiled call (used for the
+    Pigeon-SL+ sub-rounds).  Key/RNG consumption matches the sequential
+    ``split(key)`` + ``train_cluster`` pair exactly."""
+    xs, ys = assemble_round_batches(rng, data, [cluster], pcfg)
+    key, keys = round_client_keys(key, [cluster])
+    avec = attack_vec_for_clusters(attack, [cluster], malicious)
+    gs, ps, losses, _, _ = batched_round(
+        module, pcfg.lr, theta[0], theta[1], xs, ys, avec, keys,
+        jnp.asarray(data.x0[:1]), jnp.asarray(data.y0[:1]))
+    d_cl = _count_params(theta[0])
+    for j in range(len(cluster)):
+        account_client_turn(meter, pcfg, d_c, d_cl, handoff=j < len(cluster) - 1)
+    g = jax.tree.map(lambda a: a[0], gs)
+    p = jax.tree.map(lambda a: a[0], ps)
+    return key, g, p, float(np.mean(np.asarray(losses)))
+
+
+# ---------------------------------------------------------------------------
+# SplitFed: all M clients update in parallel (no within-cluster chain)
+# ---------------------------------------------------------------------------
+
+def _splitfed_round_body(module: SplitModule, lr: float, gamma, phi,
+                         xs, ys, avec, keys, x0, y0):
+    def one_client(x, y, av, k):
+        return client_update_vec_impl(module, av, gamma, phi, (x, y), lr, k)
+
+    gs, ps, _ = jax.vmap(jax.vmap(one_client))(xs, ys, avec, keys)
+    g_avg = jax.tree.map(lambda a: jnp.mean(a, axis=1), gs)
+    p_avg = jax.tree.map(lambda a: jnp.mean(a, axis=1), ps)
+
+    def validate(g, p):
+        acts = module.client_forward(g, x0)
+        return module.ap_loss(p, acts, y0)
+
+    vlosses = jax.vmap(validate)(g_avg, p_avg)
+    return g_avg, p_avg, vlosses
+
+
+splitfed_round = partial(jax.jit, static_argnums=(0, 1))(_splitfed_round_body)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _splitfed_keys(key: jax.Array, r: int, m_bar: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    rows = []
+    for _ in range(r):
+        row = []
+        for _ in range(m_bar):
+            key, sub = jax.random.split(key)
+            row.append(sub)
+        rows.append(jnp.stack(row))
+    return key, jnp.stack(rows)
+
+
+def splitfed_keys(key: jax.Array, clusters: Sequence[Sequence[int]]
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """SplitFed's sequential loop splits the running protocol key once per
+    client (cluster-major order) with no per-cluster sub-stream."""
+    return _splitfed_keys(key, len(clusters), len(clusters[0]))
+
+
+def splitfed_round_batched(module: SplitModule, theta, clusters, data: ClientData,
+                           pcfg: ProtocolConfig, malicious: Set[int],
+                           attack: Attack, rng: np.random.Generator,
+                           key: jax.Array, x0, y0
+                           ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
+    xs, ys = assemble_round_batches(rng, data, clusters, pcfg)
+    key, keys = splitfed_keys(key, clusters)
+    avec = attack_vec_for_clusters(attack, clusters, malicious)
+    g_avg, p_avg, vlosses = splitfed_round(
+        module, pcfg.lr, theta[0], theta[1], xs, ys, avec, keys, x0, y0)
+    vlosses = np.asarray(vlosses)
+    results = []
+    for r, cluster in enumerate(clusters):
+        results.append(dict(vloss=float(vlosses[r]), cluster=cluster,
+                            _stacked=(g_avg, p_avg, None, r)))
+    return key, results
+
+
+# ---------------------------------------------------------------------------
+# multi-seed sweep: vmap whole protocol replicas
+# ---------------------------------------------------------------------------
+
+def _sweep_round_body(module: SplitModule, lr: float, gammas, phis,
+                      xs, ys, avec, keys, x0, y0):
+    """One global round for S independent protocol replicas: per seed, run
+    the cluster-vmapped round, select by argmin validation loss and broadcast
+    the winner into the replica's carried parameters."""
+
+    def one_seed(gamma, phi, xs_s, ys_s, av_s, k_s):
+        gs, ps, losses, vlosses, _ = _round_body(
+            module, lr, gamma, phi, xs_s, ys_s, av_s, k_s, x0, y0)
+        sel = jnp.argmin(vlosses)
+        g = onehot_select(gs, sel)
+        p = onehot_select(ps, sel)
+        return g, p, vlosses, sel, jnp.mean(losses, axis=1)
+
+    return jax.vmap(one_seed)(gammas, phis, xs, ys, avec, keys)
+
+
+sweep_round = partial(jax.jit, static_argnums=(0, 1))(_sweep_round_body)
+
+
+@lru_cache(maxsize=None)
+def _sweep_predict(module: SplitModule):
+    """Jitted seed-vmapped predict, cached per module so every evaluation
+    round reuses one compiled program instead of retracing a fresh wrapper."""
+    return jax.jit(jax.vmap(module.predict, in_axes=(0, 0, None)))
+
+
+def evaluate_sweep(module: SplitModule, gammas, phis, x_test: np.ndarray,
+                   y_test: np.ndarray, batch: int = 500) -> np.ndarray:
+    """Per-seed test accuracy: ``module.predict`` vmapped over the seed axis,
+    batched over the test set exactly like ``protocol.evaluate``."""
+    n_seeds = jax.tree.leaves(gammas)[0].shape[0]
+    correct = np.zeros(n_seeds)
+    total = 0
+    predict = _sweep_predict(module)
+    for i in range(0, x_test.shape[0], batch):
+        xb = jnp.asarray(x_test[i : i + batch])
+        yb = y_test[i : i + batch]
+        logits = np.asarray(predict(gammas, phis, xb))     # (S, b, ...)
+        pred = logits.argmax(-1)
+        correct += (pred == yb[None]).reshape(n_seeds, -1).sum(axis=1)
+        total += int(np.prod(yb.shape))
+    return correct / float(total)
+
+
+def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
+                     malicious: Set[int], attack: Attack = HONEST,
+                     seeds: Sequence[int] = (0, 1, 2),
+                     verbose: bool = False) -> List[History]:
+    """S whole Pigeon-SL replicas (different seeds) advanced in lockstep: one
+    compiled call per global round trains S x R clusters and performs the
+    per-seed argmin selection on device.
+
+    Selection happens inside the compiled program, so the host-side
+    param-tamper handoff check is not modelled — the sweep supports the
+    honest case and the three message-level attacks.  Returns one
+    ``History`` per seed (CommMeter accounting is analytic and identical
+    across seeds).
+    """
+    if attack.kind == PARAM_TAMPER:
+        raise ValueError("run_pigeon_sweep does not model the param-tamper "
+                         "handoff check; use run_pigeon(engine=...) per seed")
+    seeds = tuple(int(s) for s in seeds)
+    rngs = [np.random.default_rng(s) for s in seeds]
+    keys, k0s = [], []
+    for s in seeds:
+        k, k0 = jax.random.split(jax.random.PRNGKey(s))
+        keys.append(k)
+        k0s.append(k0)
+    thetas = jax.vmap(module.init)(jnp.stack(k0s))
+    x0, y0 = jnp.asarray(data.x0), jnp.asarray(data.y0)
+    d_o = data.x0.shape[0]
+    d_cl = _count_params(jax.tree.map(lambda a: a[0], thetas[0]))
+    d_c = cut_width(module, jax.tree.map(lambda a: a[0], thetas[0]), data.x0)
+    hists = [History() for _ in seeds]
+
+    for t in range(pcfg.T):
+        clusters_s = [make_clusters(rngs[i], pcfg.M, pcfg.R)
+                      for i in range(len(seeds))]
+        xs, ys, key_rows, avecs = [], [], [], []
+        for i in range(len(seeds)):
+            x_i, y_i = assemble_round_batches(rngs[i], data, clusters_s[i], pcfg)
+            keys[i], krow = round_client_keys(keys[i], clusters_s[i])
+            xs.append(x_i)
+            ys.append(y_i)
+            key_rows.append(krow)
+            avecs.append(attack_vec_for_clusters(attack, clusters_s[i], malicious))
+        avec = jax.tree.map(lambda *ls: jnp.stack(ls), *avecs)
+        gammas, phis, vlosses, sels, tlosses = sweep_round(
+            module, pcfg.lr, thetas[0], thetas[1],
+            jnp.stack(xs), jnp.stack(ys), avec, jnp.stack(key_rows), x0, y0)
+        thetas = (gammas, phis)
+
+        meter = CommMeter()
+        for cluster in clusters_s[0]:
+            for j in range(len(cluster)):
+                account_client_turn(meter, pcfg, d_c, d_cl,
+                                    handoff=j < len(cluster) - 1)
+            account_validation(meter, d_o, d_c)
+        if pcfg.tamper_check:
+            # run_pigeon inspects exactly one candidate per round in the
+            # honest/message-attack cases the sweep supports: the next-round
+            # first clients' re-transmission of its handoff activations.
+            meter.validation_floats += pcfg.R * d_o * d_c
+            meter.client_passes += pcfg.R * d_o
+        meter.param_floats += pcfg.R * d_cl
+
+        vlosses = np.asarray(vlosses)
+        sels = np.asarray(sels)
+        tlosses = np.asarray(tlosses)
+        accs = None
+        if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+            accs = evaluate_sweep(module, gammas, phis, data.x_test, data.y_test,
+                                  pcfg.eval_batch)
+        for i in range(len(seeds)):
+            sel = int(sels[i])
+            rec = dict(
+                round=t,
+                clusters=clusters_s[i],
+                val_losses=[float(v) for v in vlosses[i]],
+                train_losses=[float(v) for v in tlosses[i]],
+                selected=sel,
+                selected_honest=cluster_is_honest(clusters_s[i][sel], malicious),
+                honest_cluster_exists=any(cluster_is_honest(c, malicious)
+                                          for c in clusters_s[i]),
+                comm=dataclasses.asdict(meter),
+            )
+            if accs is not None:
+                rec["test_acc"] = float(accs[i])
+            hists[i].rounds.append(rec)
+        if verbose:
+            acc_str = ("" if accs is None
+                       else " acc=" + "/".join(f"{a:.3f}" for a in accs))
+            print(f"[sweep] t={t:3d} sel={sels.tolist()}{acc_str}")
+    return hists

@@ -87,10 +87,46 @@ def _count_params(tree) -> int:
     return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
 
 
+def sample_batch_idx(rng: np.random.Generator, n: int, e: int, b: int) -> np.ndarray:
+    """(E, B) mini-batch indices for one client turn.  The single batch-
+    sampling primitive shared by both engines: the sequential/batched
+    equivalence contract requires them to consume the numpy RNG identically,
+    so any change to the sampling scheme must go through here."""
+    return rng.integers(0, n, size=(e, b))
+
+
 def _sample_batches(rng: np.random.Generator, x: np.ndarray, y: np.ndarray,
                     e: int, b: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    idx = rng.integers(0, x.shape[0], size=(e, b))
+    idx = sample_batch_idx(rng, x.shape[0], e, b)
     return jnp.asarray(x[idx]), jnp.asarray(y[idx])
+
+
+ENGINES = ("sequential", "batched")
+
+
+def _check_engine(engine: str) -> None:
+    if engine not in ENGINES:
+        raise ValueError(f"engine={engine!r} must be one of {ENGINES}")
+
+
+def account_client_turn(meter: CommMeter, pcfg: ProtocolConfig, d_c: int,
+                        d_cl: int, handoff: bool) -> None:
+    """Table I accounting for one client's turn (E batches of B samples:
+    activations up, cut gradients down, plus the intra-cluster parameter
+    handoff).  Shared by the sequential and batched engines so their
+    CommMeter counts are bit-identical by construction."""
+    n_samples = pcfg.E * pcfg.B
+    meter.client_passes += n_samples
+    meter.activation_floats += n_samples * d_c
+    meter.gradient_floats += n_samples * d_c
+    if handoff:
+        meter.param_floats += d_cl
+
+
+def account_validation(meter: CommMeter, d_o: int, d_c: int) -> None:
+    """One cluster's shared-set validation push (Section III-C)."""
+    meter.validation_floats += d_o * d_c
+    meter.client_passes += d_o
 
 
 def _attack_for(client: int, malicious: Set[int], attack: Attack) -> Attack:
@@ -101,6 +137,27 @@ def _attack_for(client: int, malicious: Set[int], attack: Attack) -> Attack:
     if attack.kind == atk.PARAM_TAMPER:
         return HONEST
     return attack
+
+
+def res_params(res: Dict[str, Any]) -> Tuple[Pytree, Pytree]:
+    """(gamma, phi) of one cluster result.  The batched engine returns its R
+    candidates as views into stacked arrays and only the clusters the
+    selection loop actually inspects (usually one) get sliced out — R x
+    n_leaves tiny slice dispatches per round would otherwise erase much of
+    the batching win."""
+    if "gamma" not in res:
+        gs, ps, _, r = res["_stacked"]
+        res["gamma"] = jax.tree.map(lambda a: a[r], gs)
+        res["phi"] = jax.tree.map(lambda a: a[r], ps)
+    return res["gamma"], res["phi"]
+
+
+def res_vacts(res: Dict[str, Any]):
+    """The cluster's validation-time cut activations (for the handoff check)."""
+    if "vacts" not in res:
+        _, _, vacts, r = res["_stacked"]
+        res["vacts"] = vacts[r]
+    return res["vacts"]
 
 
 def evaluate(module: SplitModule, gamma, phi, x_test: np.ndarray, y_test: np.ndarray,
@@ -136,13 +193,7 @@ def train_cluster(module: SplitModule, gamma, phi, cluster: Sequence[int],
         a = _attack_for(client, malicious, attack)
         gamma, phi, loss = client_update(module, a, gamma, phi, (xs, ys), pcfg.lr, sub)
         losses.append(float(loss))
-        # accounting: E batches of B samples — activations up, cut grads down
-        n_samples = pcfg.E * pcfg.B
-        meter.client_passes += n_samples
-        meter.activation_floats += n_samples * d_c
-        meter.gradient_floats += n_samples * d_c
-        if j < len(cluster) - 1:
-            meter.param_floats += d_cl           # hand gamma to the next client
+        account_client_turn(meter, pcfg, d_c, d_cl, handoff=j < len(cluster) - 1)
     return gamma, phi, float(np.mean(losses))
 
 
@@ -157,10 +208,35 @@ def cut_width(module: SplitModule, gamma, x0) -> int:
 # Pigeon-SL / Pigeon-SL+
 # ---------------------------------------------------------------------------
 
+def _train_round(module: SplitModule, theta, clusters, data: ClientData,
+                 pcfg: ProtocolConfig, malicious: Set[int], attack: Attack,
+                 rng: np.random.Generator, key: jax.Array, meter: CommMeter,
+                 d_c: int, x0, y0, engine: str):
+    """Train all R clusters of one round from the same theta^t.  Returns
+    (key', results) where results[r] holds gamma/phi/vloss/vacts/cluster/
+    train_loss for cluster r.  Both engines consume the numpy RNG and the JAX
+    key stream in the same order, so they are swappable mid-trajectory."""
+    if engine == "batched":
+        from .engine import train_round_batched
+        return train_round_batched(module, theta, clusters, data, pcfg,
+                                   malicious, attack, rng, key, meter, d_c,
+                                   x0, y0)
+    results = []
+    for cluster in clusters:
+        key, sub = jax.random.split(key)
+        g, p, train_loss = train_cluster(module, theta[0], theta[1], cluster, data,
+                                         pcfg, malicious, attack, rng, sub, meter, d_c)
+        vloss, vacts = validation_loss(module, g, p, x0, y0)
+        results.append(dict(gamma=g, phi=p, vloss=float(vloss), vacts=vacts,
+                            cluster=cluster, train_loss=train_loss))
+    return key, results
+
+
 def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                malicious: Set[int], attack: Attack = HONEST, plus: bool = False,
                verbose: bool = False, checkpoint_path: Optional[str] = None,
-               resume: bool = False) -> History:
+               resume: bool = False, engine: str = "sequential") -> History:
+    _check_engine(engine)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
     key, k0 = jax.random.split(key)
@@ -187,16 +263,10 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     for t in range(start_round, pcfg.T):
         meter = CommMeter()
         clusters = make_clusters(rng, pcfg.M, pcfg.R)
-        results = []           # (gamma, phi, val_loss, val_acts, cluster)
-        for r, cluster in enumerate(clusters):
-            key, sub = jax.random.split(key)
-            g, p, train_loss = train_cluster(module, theta[0], theta[1], cluster, data,
-                                             pcfg, malicious, attack, rng, sub, meter, d_c)
-            vloss, vacts = validation_loss(module, g, p, x0, y0)
-            meter.validation_floats += d_o * d_c
-            meter.client_passes += d_o
-            results.append(dict(gamma=g, phi=p, vloss=float(vloss), vacts=vacts,
-                                cluster=cluster, train_loss=train_loss))
+        key, results = _train_round(module, theta, clusters, data, pcfg, malicious,
+                                    attack, rng, key, meter, d_c, x0, y0, engine)
+        for _ in results:
+            account_validation(meter, d_o, d_c)
 
         order = np.argsort([res["vloss"] for res in results])
         detection_events = 0
@@ -204,7 +274,7 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
         for cand in order:
             res = results[cand]
             last_client = res["cluster"][-1]
-            g_sel = res["gamma"]
+            g_sel, p_sel = res_params(res)
             handed = g_sel
             if attack.kind == atk.PARAM_TAMPER and last_client in malicious:
                 key, sub = jax.random.split(key)
@@ -216,12 +286,12 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                 recv = handoff_activations(module, handed, x0)
                 meter.validation_floats += pcfg.R * d_o * d_c
                 meter.client_passes += pcfg.R * d_o
-                ok, dist = check_handoff(res["vacts"], [recv], pcfg.tamper_tol)
+                ok, dist = check_handoff(res_vacts(res), [recv], pcfg.tamper_tol)
                 if not ok:
                     detection_events += 1
                     continue      # discard tampered cluster, reselect
             selected = cand
-            theta = (handed, res["phi"])
+            theta = (handed, p_sel)
             break
         if selected is None:      # every cluster tampered: keep theta^t
             selected = int(order[0])
@@ -232,9 +302,16 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
         # Pigeon-SL+: R-1 extra sub-rounds on the selected cluster
         if plus:
             for _ in range(pcfg.R - 1):
-                key, sub = jax.random.split(key)
-                g, p, _ = train_cluster(module, theta[0], theta[1], sel_res["cluster"],
-                                        data, pcfg, malicious, attack, rng, sub, meter, d_c)
+                if engine == "batched":
+                    from .engine import train_cluster_batched
+                    key, g, p, _ = train_cluster_batched(
+                        module, theta, sel_res["cluster"], data, pcfg, malicious,
+                        attack, rng, key, meter, d_c)
+                else:
+                    key, sub = jax.random.split(key)
+                    g, p, _ = train_cluster(module, theta[0], theta[1],
+                                            sel_res["cluster"], data, pcfg,
+                                            malicious, attack, rng, sub, meter, d_c)
                 theta = (g, p)
                 meter.param_floats += _count_params(g)   # subround handoff to 1st client
 
@@ -262,6 +339,17 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                   f"sel={selected} honest={rec['selected_honest']} "
                   f"vloss={rec['val_losses']}")
     return hist
+
+
+def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
+                    malicious: Set[int], attack: Attack = HONEST,
+                    verbose: bool = False, checkpoint_path: Optional[str] = None,
+                    resume: bool = False, engine: str = "sequential") -> History:
+    """Pigeon-SL+ (throughput-matched variant): ``run_pigeon`` with the R-1
+    extra selected-cluster sub-rounds enabled."""
+    return run_pigeon(module, data, pcfg, malicious, attack, plus=True,
+                      verbose=verbose, checkpoint_path=checkpoint_path,
+                      resume=resume, engine=engine)
 
 
 # ---------------------------------------------------------------------------
@@ -300,10 +388,11 @@ def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
 
 def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                  malicious: Set[int], attack: Attack = HONEST,
-                 verbose: bool = False) -> History:
+                 verbose: bool = False, engine: str = "sequential") -> History:
     """Clients inside a cluster train *in parallel* from the same incoming
     params; the cluster model is the FedAvg of its clients.  Cluster
     selection by shared-set validation loss, as the paper's adapted SFL."""
+    _check_engine(engine)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
     key, k0 = jax.random.split(key)
@@ -313,25 +402,31 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
 
     for t in range(pcfg.T):
         clusters = make_clusters(rng, pcfg.M, pcfg.R)
-        results = []
-        for cluster in clusters:
-            gs, ps = [], []
-            for client in cluster:
-                xs, ys = _sample_batches(rng, data.x[client], data.y[client],
-                                         pcfg.E, pcfg.B)
-                key, sub = jax.random.split(key)
-                a = _attack_for(client, malicious, attack)
-                g, p, _ = client_update(module, a, theta[0], theta[1], (xs, ys),
-                                        pcfg.lr, sub)
-                gs.append(g)
-                ps.append(p)
-            g_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *gs)
-            p_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *ps)
-            vloss, _ = validation_loss(module, g_avg, p_avg, x0, y0)
-            results.append(dict(gamma=g_avg, phi=p_avg, vloss=float(vloss),
-                                cluster=cluster))
+        if engine == "batched":
+            from .engine import splitfed_round_batched
+            key, results = splitfed_round_batched(module, theta, clusters, data,
+                                                  pcfg, malicious, attack, rng,
+                                                  key, x0, y0)
+        else:
+            results = []
+            for cluster in clusters:
+                gs, ps = [], []
+                for client in cluster:
+                    xs, ys = _sample_batches(rng, data.x[client], data.y[client],
+                                             pcfg.E, pcfg.B)
+                    key, sub = jax.random.split(key)
+                    a = _attack_for(client, malicious, attack)
+                    g, p, _ = client_update(module, a, theta[0], theta[1], (xs, ys),
+                                            pcfg.lr, sub)
+                    gs.append(g)
+                    ps.append(p)
+                g_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *gs)
+                p_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *ps)
+                vloss, _ = validation_loss(module, g_avg, p_avg, x0, y0)
+                results.append(dict(gamma=g_avg, phi=p_avg, vloss=float(vloss),
+                                    cluster=cluster))
         selected = select_cluster([res["vloss"] for res in results])
-        theta = (results[selected]["gamma"], results[selected]["phi"])
+        theta = res_params(results[selected])
         rec = dict(round=t, selected=selected,
                    val_losses=[res["vloss"] for res in results],
                    selected_honest=cluster_is_honest(results[selected]["cluster"],

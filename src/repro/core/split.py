@@ -24,7 +24,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attacks import Attack, flip_labels, tamper_activation, tamper_gradient
+from .attacks import (Attack, AttackVec, flip_labels, flip_labels_vec,
+                      tamper_activation, tamper_activation_vec, tamper_gradient,
+                      tamper_gradient_vec)
 
 Pytree = Any
 
@@ -87,20 +89,27 @@ def _xent(logits, y):
 # the SL mini-batch exchange with attack hooks
 # ---------------------------------------------------------------------------
 
-def sl_minibatch_grads(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytree,
-                       x: jnp.ndarray, y: jnp.ndarray, key: jax.Array
-                       ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+def _sl_exchange(module: SplitModule, gamma: Pytree, phi: Pytree,
+                 x: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
+                 send_labels, send_acts, recv_grad
+                 ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
     """One FwdProp/BackProp exchange.  Returns (g_gamma, g_phi, loss).
 
     The attack hooks sit exactly where the paper places them:
-      * labels tampered before transmission            (label flipping)
-      * cut activations tampered before transmission   (activation tampering)
-      * cut gradient tampered after reception          (gradient tampering)
+      * ``send_labels``: labels tampered before transmission    (label flipping)
+      * ``send_acts``: cut activations tampered before transmission
+                                                           (activation tampering)
+      * ``recv_grad``: cut gradient tampered after reception (gradient tampering)
+
+    Single source of truth for the four-message exchange: the static
+    (per-``Attack``) and vectorised (per-``AttackVec``) entry points below
+    differ only in which hook implementations they bind, so the engines'
+    bit-for-bit equivalence contract cannot drift between two copies.
     """
-    y_sent = flip_labels(attack, y, module.n_classes)
+    y_sent = send_labels(y)
 
     acts, client_vjp = jax.vjp(lambda g: module.client_forward(g, x), gamma)
-    acts_sent = tamper_activation(attack, acts, key)
+    acts_sent = send_acts(acts, key)
 
     def ap_fn(phi_, acts_):
         return module.ap_loss(phi_, acts_, y_sent)
@@ -108,20 +117,31 @@ def sl_minibatch_grads(module: SplitModule, attack: Attack, gamma: Pytree, phi: 
     loss, ap_grads = jax.value_and_grad(ap_fn, argnums=(0, 1))(phi, acts_sent)
     g_phi, g_acts = ap_grads
 
-    g_acts_recv = tamper_gradient(attack, g_acts)
+    g_acts_recv = recv_grad(g_acts)
     (g_gamma,) = client_vjp(g_acts_recv.astype(acts.dtype))
     return g_gamma, g_phi, loss
+
+
+def sl_minibatch_grads(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytree,
+                       x: jnp.ndarray, y: jnp.ndarray, key: jax.Array
+                       ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+    """The exchange with a static ``Attack`` (one compiled program per kind)."""
+    return _sl_exchange(
+        module, gamma, phi, x, y, key,
+        lambda y_: flip_labels(attack, y_, module.n_classes),
+        lambda a, k: tamper_activation(attack, a, k),
+        lambda g: tamper_gradient(attack, g))
 
 
 def sgd_update(params: Pytree, grads: Pytree, lr: float) -> Pytree:
     return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
 
 
-@partial(jax.jit, static_argnums=(0, 1, 5))
-def client_update(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytree,
-                  data: Tuple[jnp.ndarray, jnp.ndarray], lr: float, key: jax.Array
-                  ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
-    """E mini-batch updates for one client (lines 10-18 of Algorithm 1).
+def _client_update(grads_fn, gamma: Pytree, phi: Pytree,
+                   data: Tuple[jnp.ndarray, jnp.ndarray], lr: float,
+                   key: jax.Array) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+    """E mini-batch SGD updates for one client (lines 10-18 of Algorithm 1),
+    generic over the exchange implementation.
 
     data = (xs, ys) with xs: (E, B, ...), ys: (E, B, ...).
     """
@@ -131,8 +151,48 @@ def client_update(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytre
         gamma, phi, k = carry
         x, y = inputs
         k, sub = jax.random.split(k)
-        g_gamma, g_phi, loss = sl_minibatch_grads(module, attack, gamma, phi, x, y, sub)
+        g_gamma, g_phi, loss = grads_fn(gamma, phi, x, y, sub)
         return (sgd_update(gamma, g_gamma, lr), sgd_update(phi, g_phi, lr), k), loss
 
     (gamma, phi, _), losses = jax.lax.scan(step, (gamma, phi, key), (xs, ys))
     return gamma, phi, jnp.mean(losses)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 5))
+def client_update(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytree,
+                  data: Tuple[jnp.ndarray, jnp.ndarray], lr: float, key: jax.Array
+                  ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+    return _client_update(partial(sl_minibatch_grads, module, attack),
+                          gamma, phi, data, lr, key)
+
+
+# ---------------------------------------------------------------------------
+# vectorised (vmappable) variants — the same exchange with the attack
+# configuration as traced data instead of a static jit argument, so one
+# compiled program serves every (cluster, client, attack) slot of the batched
+# engine.  Honest slots reproduce ``client_update`` bit-for-bit: every tamper
+# site is a ``jnp.where`` whose false branch is the untouched message.
+# ---------------------------------------------------------------------------
+
+def sl_minibatch_grads_vec(module: SplitModule, av: AttackVec, gamma: Pytree,
+                           phi: Pytree, x: jnp.ndarray, y: jnp.ndarray,
+                           key: jax.Array) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+    return _sl_exchange(
+        module, gamma, phi, x, y, key,
+        lambda y_: flip_labels_vec(av, y_, module.n_classes),
+        lambda a, k: tamper_activation_vec(av, a, k),
+        lambda g: tamper_gradient_vec(av, g))
+
+
+def client_update_vec_impl(module: SplitModule, av: AttackVec, gamma: Pytree,
+                           phi: Pytree, data: Tuple[jnp.ndarray, jnp.ndarray],
+                           lr: float, key: jax.Array
+                           ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+    """Un-jitted body of :func:`client_update_vec` — the batched engine embeds
+    it inside its own jitted round program (vmap over clusters, scan over the
+    within-cluster client chain)."""
+    return _client_update(partial(sl_minibatch_grads_vec, module, av),
+                          gamma, phi, data, lr, key)
+
+
+client_update_vec = partial(jax.jit, static_argnums=(0, 5))(client_update_vec_impl)

@@ -219,12 +219,12 @@ def make_pigeon_round_step(model: Model, lr: float = 1e-3, n_clusters: int = 2,
             # one-hot contraction over the cluster axis: lowers to a single
             # masked all-reduce per leaf instead of the gather+full-replicate
             # path GSPMD emits for dynamic indexing (§Perf hillclimb C).
-            onehot = (jnp.arange(n_clusters) == sel)
-            def pick(x):
-                oh = onehot.astype(jnp.float32).reshape((-1,) + (1,) * (x.ndim - 1))
-                s = jnp.sum(x.astype(jnp.float32) * oh, axis=0)
-                return jnp.broadcast_to(s[None], x.shape).astype(x.dtype)
-            rebro = jax.tree.map(pick, new_stacked)
+            # Shared with the protocol-level batched engine's sweep selection.
+            from ..core.engine import onehot_select
+            selected = onehot_select(new_stacked, sel)
+            rebro = jax.tree.map(
+                lambda s, full: jnp.broadcast_to(s[None], full.shape).astype(full.dtype),
+                selected, new_stacked)
         else:
             selected = jax.tree.map(lambda x: jnp.take(x, sel, axis=0), new_stacked)
             rebro = jax.tree.map(

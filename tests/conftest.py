@@ -5,5 +5,28 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def tiny_task():
+    """Shared tiny MNIST split-CNN task for the fast tier: 4 clients, small
+    shards, T-trimmed protocol configs — protocol behaviour is identical to
+    the larger fixtures, just cheap enough to keep tier-1 under its 60 s
+    budget."""
+    from repro.core import from_cnn
+    from repro.data import build_image_task
+
+    data, cfg = build_image_task("mnist", m_clients=4, d_m=120, d_o=60,
+                                 n_test=200, seed=0)
+    return data, from_cnn(cfg)
+
+
+@pytest.fixture(scope="session")
+def tiny_pcfg():
+    """Round-count-trimmed ProtocolConfig matching ``tiny_task``."""
+    from repro.core import ProtocolConfig
+
+    return ProtocolConfig(M=4, N=1, T=2, E=2, B=16, lr=0.05, seed=0)

@@ -11,6 +11,9 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.launch.steps import make_train_step
 from repro.models import build_model
 
+# multi-config / multi-round end-to-end coverage: full-suite tier only
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 
 

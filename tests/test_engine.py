@@ -1,0 +1,202 @@
+"""Batched cluster-parallel engine: equivalence with the sequential
+reference oracle.
+
+The contract (see ``core/engine.py``): on seeded runs the two engines must
+select the same cluster every round, produce validation losses equal within
+float tolerance, and report bit-identical CommMeter message counts — across
+the honest case and all three message-level attacks, plus the param-tamper
+handoff scenario and the SplitFed baseline.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ACTIVATION, GRADIENT, HONEST, LABEL_FLIP, PARAM_TAMPER,
+                        Attack, AttackVec, ProtocolConfig, attack_vec,
+                        run_pigeon, run_pigeon_plus, run_pigeon_sweep,
+                        run_splitfed)
+from repro.core.attacks import (attack_vec_for_clusters, flip_labels,
+                                flip_labels_vec, tamper_activation,
+                                tamper_activation_vec, tamper_gradient,
+                                tamper_gradient_vec)
+from repro.core.engine import onehot_select
+from repro.core.split import client_update, client_update_vec
+
+
+def assert_histories_equivalent(h_seq, h_bat, check_comm=True):
+    assert len(h_seq.rounds) == len(h_bat.rounds)
+    for rs, rb in zip(h_seq.rounds, h_bat.rounds):
+        assert rs["clusters"] == rb["clusters"]
+        assert rs["selected"] == rb["selected"], (rs["round"], rs, rb)
+        assert rs["selected_honest"] == rb["selected_honest"]
+        np.testing.assert_allclose(rs["val_losses"], rb["val_losses"],
+                                   rtol=2e-5, atol=1e-6)
+        if check_comm:
+            assert rs["comm"] == rb["comm"]      # bit-identical float counts
+        if "detections" in rs:
+            assert rs["detections"] == rb["detections"]
+
+
+ATTACK_CASES = [
+    ("honest", set(), HONEST),
+    ("label_flip", {1}, Attack(LABEL_FLIP)),
+    ("activation", {1}, Attack(ACTIVATION)),
+    ("gradient", {1}, Attack(GRADIENT)),
+]
+
+
+@pytest.mark.parametrize("name,malicious,attack", ATTACK_CASES,
+                         ids=[c[0] for c in ATTACK_CASES])
+def test_batched_matches_sequential_pigeon(tiny_task, tiny_pcfg, name,
+                                           malicious, attack):
+    data, module = tiny_task
+    h_seq = run_pigeon(module, data, tiny_pcfg, malicious=malicious,
+                       attack=attack, engine="sequential")
+    h_bat = run_pigeon(module, data, tiny_pcfg, malicious=malicious,
+                       attack=attack, engine="batched")
+    assert_histories_equivalent(h_seq, h_bat)
+
+
+@pytest.mark.slow
+def test_batched_matches_sequential_pigeon_plus(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    h_seq = run_pigeon_plus(module, data, tiny_pcfg, malicious={1},
+                            attack=Attack(ACTIVATION), engine="sequential")
+    h_bat = run_pigeon_plus(module, data, tiny_pcfg, malicious={1},
+                            attack=Attack(ACTIVATION), engine="batched")
+    assert_histories_equivalent(h_seq, h_bat)
+
+
+@pytest.mark.slow
+def test_batched_matches_sequential_param_tamper(tiny_task, tiny_pcfg):
+    """The handoff tamper-check path (host-side in both engines) must see the
+    same validation-time activations and fire the same detections."""
+    data, module = tiny_task
+    h_seq = run_pigeon(module, data, tiny_pcfg, malicious={0, 1, 3},
+                       attack=Attack(PARAM_TAMPER), engine="sequential")
+    h_bat = run_pigeon(module, data, tiny_pcfg, malicious={0, 1, 3},
+                       attack=Attack(PARAM_TAMPER), engine="batched")
+    assert_histories_equivalent(h_seq, h_bat)
+    assert sum(r["detections"] for r in h_bat.rounds) >= 1
+
+
+@pytest.mark.slow
+def test_batched_matches_sequential_splitfed(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    pcfg = dataclasses.replace(tiny_pcfg, lr=0.5)
+    h_seq = run_splitfed(module, data, pcfg, malicious={1},
+                         attack=Attack(LABEL_FLIP), engine="sequential")
+    h_bat = run_splitfed(module, data, pcfg, malicious={1},
+                         attack=Attack(LABEL_FLIP), engine="batched")
+    for rs, rb in zip(h_seq.rounds, h_bat.rounds):
+        assert rs["selected"] == rb["selected"]
+        np.testing.assert_allclose(rs["val_losses"], rb["val_losses"],
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_engine_rejects_unknown_name(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    with pytest.raises(ValueError, match="engine"):
+        run_pigeon(module, data, tiny_pcfg, malicious=set(), engine="warp")
+
+
+@pytest.mark.slow
+def test_sweep_matches_per_seed_runs(tiny_task, tiny_pcfg):
+    """Each replica of the vmapped multi-seed sweep reproduces the
+    corresponding single-seed batched run (selection happens on device, so
+    only tamper_check-free trajectories are comparable)."""
+    data, module = tiny_task
+    hists = run_pigeon_sweep(module, data, tiny_pcfg, malicious={1},
+                             attack=Attack(LABEL_FLIP), seeds=(0, 1))
+    for i, seed in enumerate((0, 1)):
+        h_ref = run_pigeon(module, data, dataclasses.replace(tiny_pcfg, seed=seed),
+                           malicious={1}, attack=Attack(LABEL_FLIP),
+                           engine="batched")
+        for rr, rw in zip(h_ref.rounds, hists[i].rounds):
+            assert rr["clusters"] == rw["clusters"]
+            assert rr["selected"] == rw["selected"]
+            np.testing.assert_allclose(rr["val_losses"], rw["val_losses"],
+                                       rtol=2e-5, atol=1e-6)
+            assert rr["comm"] == rw["comm"]      # analytic meter matches exactly
+            if "test_acc" in rr:
+                assert abs(rr["test_acc"] - rw["test_acc"]) < 1e-6
+
+
+def test_sweep_rejects_param_tamper(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    with pytest.raises(ValueError, match="param-tamper"):
+        run_pigeon_sweep(module, data, tiny_pcfg, malicious={1},
+                         attack=Attack(PARAM_TAMPER))
+
+
+# ---------------------------------------------------------------------------
+# unit-level: vectorised attack transforms vs their static counterparts
+# ---------------------------------------------------------------------------
+
+def test_attack_vec_transforms_match_static():
+    key = jax.random.PRNGKey(7)
+    y = jnp.arange(16) % 10
+    acts = jax.random.normal(key, (8, 32))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (8, 32))
+
+    for kind, static_fn, vec_fn, args in [
+        (LABEL_FLIP, flip_labels, flip_labels_vec, (y, 10)),
+        (GRADIENT, tamper_gradient, tamper_gradient_vec, (g,)),
+    ]:
+        a = Attack(kind)
+        av_on = attack_vec(a, True)
+        av_off = attack_vec(a, False)
+        np.testing.assert_array_equal(static_fn(a, *args), vec_fn(av_on, *args))
+        np.testing.assert_array_equal(args[0], vec_fn(av_off, *args))
+
+    a = Attack(ACTIVATION)
+    k2 = jax.random.fold_in(key, 2)
+    np.testing.assert_array_equal(tamper_activation(a, acts, k2),
+                                  tamper_activation_vec(attack_vec(a, True), acts, k2))
+    np.testing.assert_array_equal(acts,
+                                  tamper_activation_vec(attack_vec(a, False), acts, k2))
+
+
+def test_client_update_vec_matches_static(tiny_task):
+    """One client's E-step chain: the vectorised update must be bit-identical
+    to the static-attack jit specialisation, honest and attacked."""
+    data, module = tiny_task
+    gamma, phi = module.init(jax.random.PRNGKey(0))
+    xs = jnp.asarray(data.x[0][:32]).reshape(2, 16, *data.x[0].shape[1:])
+    ys = jnp.asarray(data.y[0][:32]).reshape(2, 16)
+    key = jax.random.PRNGKey(3)
+    for attack, active in [(HONEST, False), (Attack(LABEL_FLIP), True),
+                           (Attack(ACTIVATION), True), (Attack(GRADIENT), True)]:
+        g_s, p_s, l_s = client_update(module, attack if active else HONEST,
+                                      gamma, phi, (xs, ys), 0.05, key)
+        g_v, p_v, l_v = client_update_vec(module, attack_vec(attack, active),
+                                          gamma, phi, (xs, ys), 0.05, key)
+        for a, b in zip(jax.tree.leaves((g_s, p_s)), jax.tree.leaves((g_v, p_v))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(float(l_s), float(l_v), rtol=1e-6)
+
+
+def test_attack_vec_for_clusters_shapes_and_param_tamper_trains_honestly():
+    clusters = [[0, 1], [2, 3]]
+    av = attack_vec_for_clusters(Attack(LABEL_FLIP), clusters, {1, 2})
+    assert av.flip.shape == (2, 2)
+    np.testing.assert_array_equal(np.asarray(av.flip),
+                                  [[False, True], [True, False]])
+    # Section III-C: param-tampering clients avoid raising validation loss,
+    # so their training-phase attack state is fully honest
+    av_pt = attack_vec_for_clusters(Attack(PARAM_TAMPER), clusters, {1, 2})
+    assert not np.asarray(av_pt.flip).any()
+    assert not np.asarray(av_pt.act).any()
+    assert not np.asarray(av_pt.grad).any()
+
+
+def test_onehot_select_picks_leading_index():
+    stacked = {"w": jnp.arange(12.0).reshape(4, 3),
+               "b": jnp.arange(8.0).reshape(4, 2)}
+    out = onehot_select(stacked, jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(out["w"]), [6.0, 7.0, 8.0])
+    np.testing.assert_array_equal(np.asarray(out["b"]), [4.0, 5.0])

@@ -20,12 +20,14 @@ def _mha_via_ref(q, k, v, window):
 
 @pytest.mark.parametrize("b,s,h,hkv,d,win", [
     (2, 128, 4, 2, 64, 0),
-    (1, 256, 2, 2, 32, 0),
-    (2, 128, 8, 1, 64, 0),     # MQA
-    (1, 256, 4, 4, 64, 64),    # sliding window
-    (1, 128, 4, 2, 128, 16),
+    pytest.param(1, 256, 2, 2, 32, 0, marks=pytest.mark.slow),
+    pytest.param(2, 128, 8, 1, 64, 0, marks=pytest.mark.slow),     # MQA
+    pytest.param(1, 256, 4, 4, 64, 64, marks=pytest.mark.slow),    # sliding window
+    pytest.param(1, 128, 4, 2, 128, 16, marks=pytest.mark.slow),
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32,
+                                   pytest.param(jnp.bfloat16,
+                                                marks=pytest.mark.slow)])
 def test_flash_attention_matches_reference(b, s, h, hkv, d, win, dtype):
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (b, s, h, d)).astype(dtype)
@@ -39,7 +41,11 @@ def test_flash_attention_matches_reference(b, s, h, hkv, d, win, dtype):
                                np.asarray(expect, np.float32), atol=tol, rtol=tol)
 
 
-@pytest.mark.parametrize("block_q,block_k", [(32, 64), (128, 32), (64, 64)])
+@pytest.mark.parametrize("block_q,block_k", [
+    (64, 64),
+    pytest.param(32, 64, marks=pytest.mark.slow),
+    pytest.param(128, 32, marks=pytest.mark.slow),
+])
 def test_flash_attention_block_shapes(block_q, block_k):
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
     q = jax.random.normal(ks[0], (1, 128, 2, 64))
@@ -53,10 +59,12 @@ def test_flash_attention_block_shapes(block_q, block_k):
 
 @pytest.mark.parametrize("t,d,v,bt,bv", [
     (256, 64, 512, 64, 128),
-    (128, 128, 1000, 128, 250),
-    (512, 32, 64, 256, 64),
+    pytest.param(128, 128, 1000, 128, 250, marks=pytest.mark.slow),
+    pytest.param(512, 32, 64, 256, 64, marks=pytest.mark.slow),
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32,
+                                   pytest.param(jnp.bfloat16,
+                                                marks=pytest.mark.slow)])
 def test_fused_xent_matches_reference(t, d, v, bt, bv, dtype):
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
     h = jax.random.normal(ks[0], (t, d)).astype(dtype)
@@ -84,8 +92,14 @@ def test_fused_xent_label_edge_cases():
     np.testing.assert_allclose(float(got), float(expect), rtol=1e-5)
 
 
-@pytest.mark.parametrize("n,d", [(256, 32), (512, 128), (64, 64)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d", [
+    (256, 32),
+    pytest.param(512, 128, marks=pytest.mark.slow),
+    pytest.param(64, 64, marks=pytest.mark.slow),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32,
+                                   pytest.param(jnp.bfloat16,
+                                                marks=pytest.mark.slow)])
 def test_tamper_distance_matches_reference(n, d, dtype):
     a = jax.random.normal(jax.random.PRNGKey(5), (n, d)).astype(dtype)
     b = a + 0.05 * jax.random.normal(jax.random.PRNGKey(6), (n, d)).astype(dtype)
@@ -106,9 +120,11 @@ def test_tamper_distance_identical_is_zero():
 
 @pytest.mark.parametrize("b,s,h,hkv,d,win,idx", [
     (2, 256, 4, 2, 64, 0, 255),
-    (1, 512, 4, 1, 64, 0, 100),      # partially-filled cache
-    (2, 256, 2, 2, 32, 64, 200),     # sliding window
-    (1, 1024, 8, 2, 128, 0, 1023),
+    pytest.param(1, 512, 4, 1, 64, 0, 100,
+                 marks=pytest.mark.slow),      # partially-filled cache
+    pytest.param(2, 256, 2, 2, 32, 64, 200,
+                 marks=pytest.mark.slow),      # sliding window
+    pytest.param(1, 1024, 8, 2, 128, 0, 1023, marks=pytest.mark.slow),
 ])
 def test_decode_attention_matches_reference(b, s, h, hkv, d, win, idx):
     ks = jax.random.split(jax.random.PRNGKey(8), 3)
@@ -149,6 +165,7 @@ def test_decode_attention_matches_model_gqa_decode():
 
 @pytest.mark.parametrize("t,b,d,h", [(16, 2, 32, 2), (32, 1, 64, 4),
                                      (8, 4, 16, 1)])
+@pytest.mark.slow
 def test_slstm_kernel_matches_reference(t, b, d, h):
     ks = jax.random.split(jax.random.PRNGKey(10), 2)
     pre = jax.random.normal(ks[0], (t, b, 4 * d)) * 0.5

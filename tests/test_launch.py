@@ -82,6 +82,7 @@ def test_roofline_terms_math():
     assert rl2.model_flops == 2 * 10 * 10
 
 
+@pytest.mark.slow
 def test_train_step_runs_on_one_device():
     cfg = get_smoke_config("qwen3-8b")
     model = build_model(cfg)
@@ -93,6 +94,7 @@ def test_train_step_runs_on_one_device():
     assert np.isfinite(float(loss))
 
 
+@pytest.mark.slow
 def test_pigeon_round_step_selects_argmin():
     """The multi-pod program must pick the lowest-validation-loss cluster and
     broadcast its params to every slot."""

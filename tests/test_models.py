@@ -24,6 +24,7 @@ def _batch():
 # attention
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_chunked_attention_matches_reference():
     cfg = attn.AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
                           q_chunk=8)
@@ -47,6 +48,7 @@ def test_sliding_window_masks_distant_tokens():
                                atol=1e-5)
 
 
+@pytest.mark.slow
 def test_mla_decode_matches_forward():
     cfg = attn.MLAConfig(d_model=64, n_heads=4, head_dim=16, kv_lora_rank=32,
                          rope_dim=16)
@@ -66,6 +68,7 @@ def test_mla_decode_matches_forward():
 # MoE
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_moe_matches_loop_reference_with_ample_capacity():
     cfg = moe_mod.MoEConfig(d_model=32, d_expert=16, n_experts=4, top_k=2,
                             n_shared=1, capacity_factor=8.0)
@@ -77,6 +80,7 @@ def test_moe_matches_loop_reference_with_ample_capacity():
     np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_moe_local_dispatch_matches_reference():
     """The shard-local dispatch formulation (§Perf) is numerically the same
     computation when capacity is ample."""
@@ -92,6 +96,7 @@ def test_moe_local_dispatch_matches_reference():
     np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_tokens_gracefully():
     cfg = moe_mod.MoEConfig(d_model=16, d_expert=8, n_experts=2, top_k=1,
                             capacity_factor=0.25)
@@ -115,6 +120,7 @@ def test_moe_router_weights_normalized():
 # SSM / xLSTM: chunked parallel form == step-by-step recurrence
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_mamba2_chunked_matches_recurrent():
     cfg = ssm_mod.SSMConfig(d_model=32, d_state=8, chunk=4)
     p = ssm_mod.mamba2_init(jax.random.PRNGKey(0), cfg)
@@ -124,6 +130,7 @@ def test_mamba2_chunked_matches_recurrent():
     np.testing.assert_allclose(np.asarray(par), np.asarray(rec), atol=1e-4)
 
 
+@pytest.mark.slow
 def test_mlstm_chunked_matches_recurrent():
     cfg = xlstm_mod.XLSTMConfig(d_model=32, n_heads=2, chunk=4)
     p = xlstm_mod.mlstm_init(jax.random.PRNGKey(0), cfg)
@@ -168,6 +175,7 @@ FAMILY_CFGS = [
 
 
 @pytest.mark.parametrize("cfg", FAMILY_CFGS, ids=lambda c: c.arch_type)
+@pytest.mark.slow
 def test_split_forward_equals_full_forward(cfg):
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
@@ -186,6 +194,7 @@ def test_split_forward_equals_full_forward(cfg):
 
 
 @pytest.mark.parametrize("cfg", FAMILY_CFGS, ids=lambda c: c.arch_type)
+@pytest.mark.slow
 def test_decode_matches_forward(cfg):
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
@@ -200,6 +209,7 @@ def test_decode_matches_forward(cfg):
     np.testing.assert_allclose(np.asarray(dec), np.asarray(logits), atol=2e-4)
 
 
+@pytest.mark.slow
 def test_loss_chunking_matches_full():
     cfg = FAMILY_CFGS[0]
     import dataclasses
@@ -211,6 +221,7 @@ def test_loss_chunking_matches_full():
     np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_encdec_decode_matches_forward():
     """seamless-family: decoder decode w/ self-attn cache + cross-attn over
     encoder memory must match the full forward."""

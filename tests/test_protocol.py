@@ -28,6 +28,7 @@ def task():
 PCFG = ProtocolConfig(M=4, N=1, T=4, E=4, B=32, lr=0.05, seed=0)
 
 
+@pytest.mark.slow
 def test_pigeon_honest_learns(task):
     data, module = task
     hist = run_pigeon(module, data, PCFG, malicious=set())
@@ -39,6 +40,7 @@ def test_pigeon_honest_learns(task):
 @pytest.mark.parametrize("attack", [Attack(LABEL_FLIP), Attack(GRADIENT),
                                     Attack(ACTIVATION)],
                          ids=lambda a: a.kind)
+@pytest.mark.slow
 def test_pigeon_resists_attacks(task, attack):
     data, module = task
     pcfg = dataclasses.replace(PCFG, T=4)
@@ -47,6 +49,7 @@ def test_pigeon_resists_attacks(task, attack):
     assert accs[-1] > 0.3, accs
 
 
+@pytest.mark.slow
 def test_pigeon_selects_honest_under_label_flip(task):
     data, module = task
     hist = run_pigeon(module, data, PCFG, malicious={1}, attack=Attack(LABEL_FLIP))
@@ -70,6 +73,7 @@ def test_param_tamper_detected_and_rolled_back(task):
     assert ok2 and dist2 < 1e-6
 
 
+@pytest.mark.slow
 def test_param_tamper_protocol_end_to_end(task):
     """With every client malicious-last possible (M=4, N=1 -> R=2 clusters of
     2), run with all-but-one malicious param-tamperers: detections must fire
@@ -133,6 +137,7 @@ def test_comm_accounting_matches_table1(task):
     assert comm_p["validation_floats"] == 2 * pcfg.R * d_o * d_c
 
 
+@pytest.mark.slow
 def test_vanilla_sl_degrades_under_gradient_attack(task):
     """The paper's core motivation: one malicious client hurts vanilla SL
     more than Pigeon-SL+ (accuracy after the same number of rounds)."""
@@ -177,6 +182,7 @@ def test_attack_hooks_change_the_right_messages(task):
     assert abs(float(l_f) - float(l_h)) > 1e-4
 
 
+@pytest.mark.slow
 def test_noniid_selection_degrades_gracefully(task):
     """Beyond-paper finding (see benchmarks/ablation_shared_set.py): under
     *mild* heterogeneity (alpha=2) the shared-set selection still mostly
@@ -200,6 +206,7 @@ def test_noniid_selection_degrades_gracefully(task):
     assert honest_mild >= 2, [r["selected_honest"] for r in h_mild.rounds]
 
 
+@pytest.mark.slow
 def test_pigeon_checkpoint_resume(task, tmp_path):
     """Protocol checkpoint/resume: resuming after round k reproduces the
     same final parameters trajectory (same cluster RNG stream)."""

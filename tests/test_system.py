@@ -20,6 +20,9 @@ from repro.data import build_image_task, build_lm_task
 from repro.models import build_model
 from repro.models.config import ModelConfig
 
+# multi-config / multi-round end-to-end coverage: full-suite tier only
+pytestmark = pytest.mark.slow
+
 
 def test_e2e_pigeon_beats_vanilla_under_attack():
     data, cnn_cfg = build_image_task("mnist", m_clients=4, d_m=250, d_o=120,
