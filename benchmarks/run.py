@@ -15,11 +15,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale Table II parameters (hours on CPU)")
     ap.add_argument("--only", default=None,
-                    help="fig3|fig4|fig5|table1|roofline")
+                    help="table1|fig3|fig4|fig5|ablation|roofline|robustness")
     args = ap.parse_args()
 
     from . import (ablation_shared_set, fig3_mnist_attacks, fig4_cifar_attacks,
-                   fig5_fig6_vary_n, roofline_report, table1_overhead)
+                   fig5_fig6_vary_n, robustness_matrix, roofline_report,
+                   table1_overhead)
 
     benches = {
         "table1": lambda: table1_overhead.run(args.full),
@@ -28,7 +29,12 @@ def main() -> None:
         "fig5": lambda: fig5_fig6_vary_n.run(args.full),
         "ablation": lambda: ablation_shared_set.run(args.full),
         "roofline": lambda: roofline_report.run(markdown=False),
+        "robustness": lambda: robustness_matrix.run(args.full),
     }
+    if args.only and args.only not in benches:
+        # an unknown name used to silently skip every benchmark and exit 0
+        ap.error(f"--only {args.only!r} matches no benchmark; "
+                 f"choose from {'|'.join(benches)}")
     print("name,us_per_call,derived")
     failures = []
     for name, fn in benches.items():

@@ -1,11 +1,18 @@
-"""Attack sweep: all three paper attacks x {vanilla SL, Pigeon-SL,
-Pigeon-SL+}, printing a compact result matrix (a fast, reduced version of
-the Fig. 3 benchmark).
+"""Attack sweep: the three paper attacks plus a heterogeneous mixed
+population x {vanilla SL, Pigeon-SL, Pigeon-SL+}, printing a compact result
+matrix (a fast, reduced version of the Fig. 3 / robustness-matrix
+benchmarks).  The Pigeon rows run through the batched cluster-parallel
+engine; the mixed row exercises the adversary subsystem's ``ThreatModel``
+with one label flipper plus one Byzantine gradient scaler.  Note that any
+two malicious clients exceed this config's tolerance budget (M=4, N=1), so
+the pigeonhole honest-cluster guarantee does NOT hold for the mixed row —
+it shows how selection degrades gracefully beyond the budget.
 
     PYTHONPATH=src python examples/attack_sweep.py
 """
-from repro.core import (ACTIVATION, GRADIENT, LABEL_FLIP, Attack,
-                        ProtocolConfig, from_cnn, run_pigeon, run_vanilla_sl)
+from repro.core import (ACTIVATION, GRAD_SCALE, GRADIENT, LABEL_FLIP, Attack,
+                        ProtocolConfig, ThreatModel, from_cnn, run_pigeon,
+                        run_vanilla_sl)
 from repro.data import build_image_task
 
 
@@ -14,18 +21,24 @@ def main():
                                      n_test=800, seed=0)
     module = from_cnn(cnn_cfg)
     pcfg = ProtocolConfig(M=4, N=1, T=5, E=5, B=32, lr=0.05, seed=0)
-    malicious = {1}
 
-    print(f"{'attack':12s} {'vanilla':>8s} {'pigeon':>8s} {'pigeon+':>8s}")
-    for name, kind in [("label_flip", LABEL_FLIP), ("activation", ACTIVATION),
-                       ("gradient", GRADIENT)]:
-        attack = Attack(kind)
-        a_v = run_vanilla_sl(module, data, pcfg, malicious, attack
+    rows = [(name, ThreatModel.build({1: Attack(kind)}))
+            for name, kind in [("label_flip", LABEL_FLIP),
+                               ("activation", ACTIVATION),
+                               ("gradient", GRADIENT)]]
+    rows.append(("mixed", ThreatModel.build({
+        1: Attack(LABEL_FLIP),
+        3: Attack(GRAD_SCALE, grad_scale=6.0),
+    })))
+
+    print(f"{'threat':12s} {'vanilla':>8s} {'pigeon':>8s} {'pigeon+':>8s}")
+    for name, tm in rows:
+        a_v = run_vanilla_sl(module, data, pcfg, threat_model=tm
                              ).rounds[-1]["test_acc"]
-        a_p = run_pigeon(module, data, pcfg, malicious, attack
-                         ).rounds[-1]["test_acc"]
-        a_pp = run_pigeon(module, data, pcfg, malicious, attack, plus=True
-                          ).rounds[-1]["test_acc"]
+        a_p = run_pigeon(module, data, pcfg, threat_model=tm,
+                         engine="batched").rounds[-1]["test_acc"]
+        a_pp = run_pigeon(module, data, pcfg, threat_model=tm, plus=True,
+                          engine="batched").rounds[-1]["test_acc"]
         print(f"{name:12s} {a_v:8.3f} {a_p:8.3f} {a_pp:8.3f}")
 
 

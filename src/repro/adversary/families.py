@@ -1,0 +1,192 @@
+"""Built-in attack families.
+
+Each family is registered with its static reference transforms (the
+sequential oracle's ground truth) and its AttackVec compilation (kind code +
+parameter lanes read by the shared vec kernels).  Static and vec forms of a
+family share one arithmetic helper wherever the math is non-trivial, so the
+engines' bit-for-bit equivalence contract cannot drift between two copies.
+
+Importing this module populates ``repro.adversary.registry.REGISTRY``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import specs
+from .registry import (CODE_ACTIVATION, CODE_BACKDOOR, CODE_GRAD_NOISE,
+                       CODE_GRAD_SCALE, CODE_LABEL_FLIP, CODE_REPLAY,
+                       AttackFamily, register)
+from .specs import Attack
+
+
+# ---------------------------------------------------------------------------
+# shared arithmetic helpers
+# ---------------------------------------------------------------------------
+
+def _noise_blend(acts: jnp.ndarray, key: jax.Array, keep) -> jnp.ndarray:
+    """Keep a ``keep`` fraction of the true cut activation and replace the
+    rest with Gaussian noise norm-matched per sample (leading axis = batch).
+    ``keep`` is coerced to f32 up front so the static (python-float) and vec
+    (f32-lane) paths run bit-identical arithmetic — 1 - keep in float64
+    rounds differently."""
+    keep = jnp.float32(keep)
+    n = jax.random.normal(key, acts.shape, jnp.float32)
+    axes = tuple(range(1, acts.ndim))
+    g_norm = jnp.sqrt(jnp.sum(jnp.square(acts.astype(jnp.float32)), axis=axes, keepdims=True))
+    n_norm = jnp.sqrt(jnp.sum(jnp.square(n), axis=axes, keepdims=True))
+    n_scaled = n * (g_norm / jnp.maximum(n_norm, 1e-12))
+    out = keep * acts.astype(jnp.float32) + (1.0 - keep) * n_scaled
+    return out.astype(acts.dtype)
+
+
+def _replay_acts(acts: jnp.ndarray) -> jnp.ndarray:
+    """Stale/replay: re-transmit the first sample's captured cut-activation
+    message for every sample of the batch."""
+    return jnp.broadcast_to(acts[:1], acts.shape).astype(acts.dtype)
+
+
+def _stamp_trigger(x: jnp.ndarray, frac, value) -> jnp.ndarray:
+    """Backdoor trigger: overwrite the first ``round(frac * d)`` features of
+    each flattened sample with ``value``.  ``frac``/``value`` may be python
+    floats (static path) or traced f32 lanes (vec path) — the feature count d
+    is static either way, so both paths lower to the same masked write."""
+    flat = x.reshape(x.shape[0], -1)
+    d = flat.shape[1]
+    k = jnp.maximum(1, jnp.round(jnp.float32(frac) * d)).astype(jnp.int32)
+    mask = jnp.arange(d) < k
+    flat = jnp.where(mask[None, :], jnp.float32(value).astype(x.dtype), flat)
+    return flat.reshape(x.shape)
+
+
+def _grad_noise(g: jnp.ndarray, key, std) -> jnp.ndarray:
+    assert key is not None, "the grad_noise family needs the gradient-side key"
+    return (g.astype(jnp.float32)
+            + std * jax.random.normal(key, g.shape, jnp.float32)).astype(g.dtype)
+
+
+# ---------------------------------------------------------------------------
+# continuous-parameter ramp rules
+# ---------------------------------------------------------------------------
+
+def _scale_keep(a: Attack, s: float) -> Attack:
+    return dataclasses.replace(a, act_keep=1.0 - (1.0 - a.act_keep) * s)
+
+
+def _scale_grad(a: Attack, s: float) -> Attack:
+    return dataclasses.replace(a, grad_scale=1.0 + (a.grad_scale - 1.0) * s)
+
+
+def _scale_noise(a: Attack, s: float) -> Attack:
+    return dataclasses.replace(a, noise_std=a.noise_std * s)
+
+
+def _scale_param(a: Attack, s: float) -> Attack:
+    return dataclasses.replace(a, param_scale=a.param_scale * s)
+
+
+# ---------------------------------------------------------------------------
+# the families
+# ---------------------------------------------------------------------------
+
+register(AttackFamily(
+    name=specs.NONE, code=0, doc="honest client"))
+
+
+register(AttackFamily(
+    name=specs.LABEL_FLIP, code=CODE_LABEL_FLIP,
+    doc="y -> (y + shift) mod n_classes on the transmitted labels",
+    static_labels=lambda a, y, n: (y + a.label_shift) % n,
+    vec_labels=lambda av, y, n: (y + av.shift) % n,
+    lanes=lambda a: dict(shift=a.label_shift),
+))
+
+
+def _act_family(name: str, doc: str) -> AttackFamily:
+    return AttackFamily(
+        name=name, code=CODE_ACTIVATION, doc=doc,
+        static_acts=lambda a, acts, k: _noise_blend(acts, k, a.act_keep),
+        vec_acts=lambda av, acts, k: _noise_blend(acts, k, av.act_keep.astype(jnp.float32)),
+        lanes=lambda a: dict(act_keep=a.act_keep),
+        scale=_scale_keep,
+    )
+
+
+register(_act_family(
+    specs.ACTIVATION,
+    "norm-matched Gaussian blend of the cut-activation message (paper V-A)"))
+
+# Stealth compiles onto the activation kernel: same arithmetic, but a spec
+# whose default keep (see specs.stealth) sits near the selection threshold.
+register(_act_family(
+    specs.STEALTH,
+    "activation blend with keep near 1 — hovers at the validation-selection "
+    "threshold instead of announcing itself"))
+
+
+def _grad_family(name: str, doc: str) -> AttackFamily:
+    return AttackFamily(
+        name=name, code=CODE_GRAD_SCALE, doc=doc,
+        static_grads=lambda a, g, k: (a.grad_scale * g.astype(jnp.float32)).astype(g.dtype),
+        vec_grads=lambda av, g, k: (av.grad_scale * g.astype(jnp.float32)).astype(g.dtype),
+        lanes=lambda a: dict(grad_scale=a.grad_scale),
+        scale=_scale_grad,
+    )
+
+
+# The paper's gradient tampering (grad_scale defaults to -1: sign reversal)
+# and its Byzantine generalisation share one kernel; the separate names keep
+# sweep manifests honest about which threat was meant.
+register(_grad_family(
+    specs.GRADIENT, "grad_c -> grad_scale * grad_c (paper: -1, sign flip)"))
+register(_grad_family(
+    specs.GRAD_SCALE, "Byzantine gradient scaling (arbitrary multiplier)"))
+
+
+register(AttackFamily(
+    name=specs.GRAD_NOISE, code=CODE_GRAD_NOISE,
+    doc="grad_c += noise_std * N(0, I) on the received cut gradient",
+    static_grads=lambda a, g, k: _grad_noise(g, k, a.noise_std),
+    vec_grads=lambda av, g, k: _grad_noise(g, k, av.noise_std),
+    grads_need_key=True,
+    lanes=lambda a: dict(noise_std=a.noise_std),
+    scale=_scale_noise,
+))
+
+
+register(AttackFamily(
+    name=specs.BACKDOOR, code=CODE_BACKDOOR,
+    doc="stamp a trigger patch on the inputs and relabel them to the target",
+    static_poison=lambda a, x: _stamp_trigger(x, a.trigger_frac, a.trigger_value),
+    static_labels=lambda a, y, n: jnp.full_like(y, a.target % n),
+    vec_poison=lambda av, x: _stamp_trigger(x, av.trig_frac, av.trig_value),
+    vec_labels=lambda av, y, n: jnp.broadcast_to(av.target % n, y.shape).astype(y.dtype),
+    lanes=lambda a: dict(target=a.target, trig_frac=a.trigger_frac,
+                         trig_value=a.trigger_value),
+))
+
+
+register(AttackFamily(
+    name=specs.REPLAY, code=CODE_REPLAY,
+    doc="replay one captured cut-activation message for the whole batch",
+    static_acts=lambda a, acts, k: _replay_acts(acts),
+    vec_acts=lambda av, acts, k: _replay_acts(acts),
+))
+
+
+def _tamper_params(a: Attack, params, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    tampered = [l + a.param_scale * jax.random.normal(k, l.shape, l.dtype)
+                for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, tampered)
+
+
+register(AttackFamily(
+    name=specs.PARAM_TAMPER, code=0, trains_honestly=True,
+    doc="train honestly, hand off gamma += param_scale * N(0, I) (III-C)",
+    static_params=_tamper_params,
+    scale=_scale_param,
+))

@@ -1,0 +1,265 @@
+"""The attack-family registry and the two execution forms of every family.
+
+Each registered :class:`AttackFamily` declares
+
+  (a) **static reference transforms** — one hook per tampering point of the
+      SL message exchange, taking the frozen :class:`~repro.adversary.specs.
+      Attack` spec.  The sequential oracle jit-specialises on the spec, so
+      these are the ground truth the batched engine is tested against; and
+
+  (b) **a compilation into the extended** :class:`AttackVec` — a per-slot
+      integer *kind code* plus float/int *parameter lanes*.  The vectorised
+      transforms below select each family's arithmetic with
+      ``jnp.where(code == ...)``, so an arbitrary heterogeneous per-client
+      mixture of families (and per-round schedule strengths) runs as ONE
+      jitted batched program; honest slots (code 0) reproduce the untouched
+      messages bit-for-bit.
+
+The four tampering points (``repro.core.split._sl_exchange``):
+
+  * ``poison``  — the client's own training inputs, before the forward pass
+  * ``labels``  — the label message sent to the AP
+  * ``acts``    — the cut-activation message sent to the AP
+  * ``grads``   — the cut-gradient message received from the AP
+
+plus the host-side ``params`` hook for handoff tampering (Section III-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .specs import Attack, HONEST
+
+Pytree = Any
+
+# -- vec kind codes (0 = honest / no message-level effect) ------------------
+CODE_NONE = 0
+CODE_LABEL_FLIP = 1
+CODE_ACTIVATION = 2
+CODE_GRAD_SCALE = 3
+CODE_GRAD_NOISE = 4
+CODE_BACKDOOR = 5
+CODE_REPLAY = 6
+
+
+class AttackVec(NamedTuple):
+    """Vmappable attack state: every leaf carries arbitrary leading batch
+    axes — (M_bar,) per cluster, (R, M_bar) per round, (S, R, M_bar) per
+    seed sweep.  ``code`` is the per-slot family kind code; the remaining
+    leaves are the parameter lanes the family kernels read."""
+    code: jnp.ndarray        # int32  — vec kind code (CODE_*)
+    shift: jnp.ndarray       # int32  — label-flip shift
+    act_keep: jnp.ndarray    # float32 — activation/stealth keep fraction
+    grad_scale: jnp.ndarray  # float32 — cut-gradient multiplier
+    noise_std: jnp.ndarray   # float32 — cut-gradient Gaussian std
+    target: jnp.ndarray      # int32  — backdoor target label
+    trig_frac: jnp.ndarray   # float32 — backdoor trigger size (input fraction)
+    trig_value: jnp.ndarray  # float32 — backdoor trigger stamp value
+
+    # Back-compat views of the pre-registry boolean lanes.
+    @property
+    def flip(self):
+        return self.code == CODE_LABEL_FLIP
+
+    @property
+    def act(self):
+        return self.code == CODE_ACTIVATION
+
+    @property
+    def grad(self):
+        return self.code == CODE_GRAD_SCALE
+
+
+_LANE_DEFAULTS = dict(code=0, shift=0, act_keep=1.0, grad_scale=1.0,
+                      noise_std=0.0, target=0, trig_frac=0.0, trig_value=0.0)
+_LANE_DTYPES = dict(code=np.int32, shift=np.int32, act_keep=np.float32,
+                    grad_scale=np.float32, noise_std=np.float32,
+                    target=np.int32, trig_frac=np.float32,
+                    trig_value=np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackFamily:
+    """One attack family: static reference hooks + AttackVec compilation.
+
+    ``static_*`` hooks take the frozen Attack spec; ``vec_*`` hooks take an
+    AttackVec whose lanes are per-slot scalars inside the batched engine's
+    vmap/scan.  ``lanes`` maps a spec to the parameter-lane values its vec
+    kernels read.  ``scale`` interpolates the spec toward honest for
+    fractional schedule strengths (continuous families only; discrete
+    families gate at strength > 0).  ``trains_honestly`` marks host-side
+    families (param_tamper) whose training-phase behaviour is honest."""
+    name: str
+    code: int
+    doc: str = ""
+    static_poison: Optional[Callable] = None   # (attack, x) -> x
+    static_labels: Optional[Callable] = None   # (attack, y, n_classes) -> y
+    static_acts: Optional[Callable] = None     # (attack, acts, key) -> acts
+    static_grads: Optional[Callable] = None    # (attack, g, key) -> g
+    static_params: Optional[Callable] = None   # (attack, params, key) -> params
+    vec_poison: Optional[Callable] = None      # (av, x) -> x
+    vec_labels: Optional[Callable] = None      # (av, y, n_classes) -> y
+    vec_acts: Optional[Callable] = None        # (av, acts, key) -> acts
+    vec_grads: Optional[Callable] = None       # (av, g, key) -> g
+    grads_need_key: bool = False               # vec_grads draws randomness from key
+    lanes: Callable[[Attack], Dict[str, float]] = lambda a: {}
+    scale: Callable[[Attack, float], Attack] = lambda a, s: a
+    trains_honestly: bool = False
+
+
+REGISTRY: Dict[str, AttackFamily] = {}
+
+
+def register(family: AttackFamily) -> AttackFamily:
+    assert family.name not in REGISTRY, f"duplicate attack family {family.name}"
+    REGISTRY[family.name] = family
+    return family
+
+
+def get(kind: str) -> AttackFamily:
+    try:
+        return REGISTRY[kind]
+    except KeyError:
+        raise KeyError(f"unknown attack family {kind!r}; registered: "
+                       f"{sorted(REGISTRY)}") from None
+
+
+def families() -> Dict[str, AttackFamily]:
+    return dict(REGISTRY)
+
+
+def scale_attack(attack: Attack, s: float) -> Attack:
+    """Schedule-strength interpolation toward honest.  s >= 1 returns the
+    spec unchanged (object-identical, so the sequential oracle's jit cache
+    sees one entry per base spec on always-on schedules); s <= 0 is fully
+    honest; fractional s delegates to the family's ``scale`` rule."""
+    if s >= 1.0:
+        return attack
+    if s <= 0.0:
+        return HONEST
+    return get(attack.kind).scale(attack, s)
+
+
+# ---------------------------------------------------------------------------
+# static dispatchers (the sequential oracle's reference transforms)
+# ---------------------------------------------------------------------------
+
+def poison_inputs(attack: Attack, x: jnp.ndarray) -> jnp.ndarray:
+    hook = get(attack.kind).static_poison
+    return hook(attack, x) if hook else x
+
+
+def flip_labels(attack: Attack, y: jnp.ndarray, n_classes: int) -> jnp.ndarray:
+    hook = get(attack.kind).static_labels
+    return hook(attack, y, n_classes) if hook else y
+
+
+def tamper_activation(attack: Attack, acts: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    hook = get(attack.kind).static_acts
+    return hook(attack, acts, key) if hook else acts
+
+
+def tamper_gradient(attack: Attack, g: jnp.ndarray,
+                    key: Optional[jax.Array] = None) -> jnp.ndarray:
+    hook = get(attack.kind).static_grads
+    return hook(attack, g, key) if hook else g
+
+
+def tamper_params(attack: Attack, params: Pytree, key: jax.Array) -> Pytree:
+    """Section III-C: the malicious *last* client of the selected cluster
+    hands off manipulated client-side parameters to the next round."""
+    hook = get(attack.kind).static_params
+    return hook(attack, params, key) if hook else params
+
+
+# ---------------------------------------------------------------------------
+# vectorised dispatchers: jnp.where chains over the registered kind codes
+# ---------------------------------------------------------------------------
+
+def _vec_stage(stage: str, skip_keyed: bool = False):
+    """Unique (code, kernel) pairs for one tampering point, in code order.
+    Families sharing a code (e.g. stealth compiles onto the activation
+    kernel) contribute it once — the chains are unrolled at trace time, so
+    the registry fully determines the single compiled program."""
+    seen: Dict[int, Callable] = {}
+    for fam in REGISTRY.values():
+        fn = getattr(fam, stage)
+        if skip_keyed and fam.grads_need_key:
+            continue
+        if fam.code and fn is not None and fam.code not in seen:
+            seen[fam.code] = fn
+    return sorted(seen.items())
+
+
+def poison_inputs_vec(av: AttackVec, x: jnp.ndarray) -> jnp.ndarray:
+    out = x
+    for code, fn in _vec_stage("vec_poison"):
+        out = jnp.where(av.code == code, fn(av, x), out)
+    return out
+
+
+def flip_labels_vec(av: AttackVec, y: jnp.ndarray, n_classes: int) -> jnp.ndarray:
+    out = y
+    for code, fn in _vec_stage("vec_labels"):
+        out = jnp.where(av.code == code, fn(av, y, n_classes), out)
+    return out
+
+
+def tamper_activation_vec(av: AttackVec, acts: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    out = acts
+    for code, fn in _vec_stage("vec_acts"):
+        out = jnp.where(av.code == code, fn(av, acts, key), out)
+    return out
+
+
+def tamper_gradient_vec(av: AttackVec, g: jnp.ndarray,
+                        key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """The jnp.where chain evaluates every kernel for every slot, so without
+    ``key`` (the legacy 2-arg signature) the stochastic gradient kernels are
+    skipped entirely — fine for key-free AttackVecs, but a grad_noise slot
+    would silently pass through; the engines always supply the key."""
+    out = g
+    for code, fn in _vec_stage("vec_grads", skip_keyed=key is None):
+        out = jnp.where(av.code == code, fn(av, g, key), out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AttackVec compilation
+# ---------------------------------------------------------------------------
+
+def _slot_lanes(attack: Attack) -> Dict[str, float]:
+    lanes = dict(_LANE_DEFAULTS)
+    fam = get(attack.kind)
+    if fam.code and not fam.trains_honestly:
+        lanes["code"] = fam.code
+        lanes.update(fam.lanes(attack))
+    return lanes
+
+
+def attack_vec_grid(grid: Sequence[Sequence[Attack]]) -> AttackVec:
+    """Compile an (R, M_bar) grid of per-slot specs (already
+    schedule-scaled; HONEST for honest slots) into one AttackVec."""
+    slots = [[_slot_lanes(a) for a in row] for row in grid]
+    return AttackVec(**{
+        name: jnp.asarray(np.array([[s[name] for s in row] for row in slots],
+                                   dtype=_LANE_DTYPES[name]))
+        for name in AttackVec._fields})
+
+
+def attack_vec(attack: Attack, active) -> AttackVec:
+    """Per-client attack state for a single spec.  ``active`` may be a bool
+    or a bool array; param-tampering clients train honestly (Section III-C),
+    so host-side families never raise a code here."""
+    on = np.asarray(active, bool)
+    a_lanes = _slot_lanes(attack)
+    h_lanes = _slot_lanes(HONEST)
+    return AttackVec(**{
+        name: jnp.asarray(np.where(on, a_lanes[name], h_lanes[name])
+                          .astype(_LANE_DTYPES[name]))
+        for name in AttackVec._fields})

@@ -2,8 +2,13 @@
 
 Clustered split learning with pigeonhole-guaranteed honest clusters,
 shared-dataset validation selection, tamper-resilient parameter handoff and
-the throughput-matched Pigeon-SL+ variant.
+the throughput-matched Pigeon-SL+ variant.  Adversaries — attack families,
+round-indexed schedules and heterogeneous per-client threat models — come
+from the pluggable ``repro.adversary`` subsystem.
 """
+from ..adversary import (ALWAYS, BACKDOOR, GRAD_NOISE, GRAD_SCALE, REPLAY,
+                         STEALTH, ClientThreat, Schedule, ThreatModel,
+                         after_warmup, every_k, ramp, stealth)
 from .attacks import (ACTIVATION, GRADIENT, HONEST, KINDS, LABEL_FLIP, NONE,
                       PARAM_TAMPER, Attack, AttackVec, attack_vec,
                       attack_vec_for_clusters)
@@ -19,7 +24,11 @@ from .validation import check_handoff, select_cluster, validation_loss
 
 __all__ = [
     "Attack", "HONEST", "NONE", "LABEL_FLIP", "ACTIVATION", "GRADIENT",
-    "PARAM_TAMPER", "KINDS", "AttackVec", "attack_vec", "attack_vec_for_clusters",
+    "PARAM_TAMPER", "BACKDOOR", "GRAD_SCALE", "GRAD_NOISE", "REPLAY",
+    "STEALTH", "stealth", "KINDS",
+    "AttackVec", "attack_vec", "attack_vec_for_clusters",
+    "ThreatModel", "ClientThreat", "Schedule", "ALWAYS", "every_k",
+    "after_warmup", "ramp",
     "make_clusters", "has_honest_cluster", "cluster_is_honest",
     "ClientData", "CommMeter", "History", "ProtocolConfig", "ENGINES",
     "run_pigeon", "run_pigeon_plus", "run_splitfed", "run_vanilla_sl",

@@ -1,144 +1,38 @@
-"""The three attack models of Section II (and the Section III-C parameter
-tampering used against the validation mechanism).
+"""Thin compatibility shim over ``repro.adversary``.
 
-All three are implemented exactly as parameterised in Section V-A:
-
-  * label flipping       y -> (y + 3) mod n_classes
-  * activation tampering g -> 0.1 * g + 0.9 * n~,  n~ = (|g|/|n|) n,
-                          n ~ N(0, I)  (norm-matched noise)
-  * gradient tampering   grad_c -> -grad_c  (sign reversal)
-
-``Attack`` is a frozen (hashable) dataclass so it can be a static jit arg —
-each attack kind compiles its own specialised update step, mirroring the fact
-that honest and malicious clients run different computations.
+The attack machinery — family registry, static reference transforms, the
+extended vmappable ``AttackVec`` and its compilation, schedules and threat
+models — lives in the :mod:`repro.adversary` package.  This module keeps the
+historical ``repro.core.attacks`` import surface (and the legacy
+``attack_vec_for_clusters(attack, clusters, malicious)`` helper) working.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple, Optional, Sequence, Set
+from typing import Sequence, Set
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from ..adversary import (ACTIVATION, BACKDOOR, GRAD_NOISE, GRAD_SCALE,
+                         GRADIENT, HONEST, KINDS, LABEL_FLIP, NONE,
+                         PARAM_TAMPER, REPLAY, STEALTH, Attack, AttackVec,
+                         attack_vec, attack_vec_grid, flip_labels,
+                         flip_labels_vec, poison_inputs, poison_inputs_vec,
+                         stealth, tamper_activation, tamper_activation_vec,
+                         tamper_gradient, tamper_gradient_vec, tamper_params)
+from ..adversary.threat_model import ThreatModel
 
-NONE = "none"
-LABEL_FLIP = "label_flip"
-ACTIVATION = "activation"
-GRADIENT = "gradient"
-PARAM_TAMPER = "param_tamper"       # Section III-C: tampering the handed-off params
-
-KINDS = (NONE, LABEL_FLIP, ACTIVATION, GRADIENT, PARAM_TAMPER)
-
-
-@dataclasses.dataclass(frozen=True)
-class Attack:
-    kind: str = NONE
-    label_shift: int = 3
-    act_keep: float = 0.1            # fraction of the true activation kept
-    param_scale: float = 5.0         # multiplier used by the param-tamper attack
-
-    def __post_init__(self):
-        assert self.kind in KINDS, self.kind
-
-
-HONEST = Attack(NONE)
-
-
-def flip_labels(attack: Attack, y: jnp.ndarray, n_classes: int) -> jnp.ndarray:
-    if attack.kind != LABEL_FLIP:
-        return y
-    return (y + attack.label_shift) % n_classes
-
-
-def _noise_blend(acts: jnp.ndarray, key: jax.Array, keep) -> jnp.ndarray:
-    """Keep a ``keep`` fraction of the true cut activation and replace the
-    rest with Gaussian noise norm-matched per sample (leading axis = batch).
-    Shared by the static and vectorised tamper transforms so the blend
-    arithmetic has a single source of truth."""
-    n = jax.random.normal(key, acts.shape, jnp.float32)
-    axes = tuple(range(1, acts.ndim))
-    g_norm = jnp.sqrt(jnp.sum(jnp.square(acts.astype(jnp.float32)), axis=axes, keepdims=True))
-    n_norm = jnp.sqrt(jnp.sum(jnp.square(n), axis=axes, keepdims=True))
-    n_scaled = n * (g_norm / jnp.maximum(n_norm, 1e-12))
-    out = keep * acts.astype(jnp.float32) + (1.0 - keep) * n_scaled
-    return out.astype(acts.dtype)
-
-
-def tamper_activation(attack: Attack, acts: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
-    if attack.kind != ACTIVATION:
-        return acts
-    return _noise_blend(acts, key, attack.act_keep)
-
-
-def tamper_gradient(attack: Attack, g: jnp.ndarray) -> jnp.ndarray:
-    if attack.kind != GRADIENT:
-        return g
-    return -g
-
-
-# ---------------------------------------------------------------------------
-# vmappable attack state
-# ---------------------------------------------------------------------------
-#
-# ``Attack`` is static (one compiled program per kind).  The batched engine
-# instead runs every (cluster, client) slot through ONE program, so the attack
-# configuration must be *data*: ``AttackVec`` is a pytree of arrays whose
-# leaves carry arbitrary leading batch axes — (M_bar,) per cluster, (R, M_bar)
-# per round, (S, R, M_bar) per seed sweep — and the transforms below select
-# between the honest and tampered message with ``jnp.where`` so honest slots
-# reproduce the un-attacked values exactly (bit-for-bit).
-
-class AttackVec(NamedTuple):
-    flip: jnp.ndarray        # bool   — label flipping active
-    shift: jnp.ndarray       # int32  — label shift amount
-    act: jnp.ndarray         # bool   — activation tampering active
-    act_keep: jnp.ndarray    # float32 — fraction of the true activation kept
-    grad: jnp.ndarray        # bool   — gradient (sign-reversal) tampering active
-
-
-def attack_vec(attack: Attack, active) -> AttackVec:
-    """Per-client attack state.  ``active`` may be a bool or a bool array;
-    param-tampering clients train honestly (Section III-C), so only the three
-    message-level attacks ever raise a flag here."""
-    on = np.asarray(active, bool)
-    return AttackVec(
-        flip=jnp.asarray(on & (attack.kind == LABEL_FLIP)),
-        shift=jnp.broadcast_to(jnp.int32(attack.label_shift), on.shape)
-        if on.shape else jnp.int32(attack.label_shift),
-        act=jnp.asarray(on & (attack.kind == ACTIVATION)),
-        act_keep=jnp.broadcast_to(jnp.float32(attack.act_keep), on.shape)
-        if on.shape else jnp.float32(attack.act_keep),
-        grad=jnp.asarray(on & (attack.kind == GRADIENT)),
-    )
+__all__ = [
+    "NONE", "LABEL_FLIP", "ACTIVATION", "GRADIENT", "PARAM_TAMPER",
+    "BACKDOOR", "GRAD_SCALE", "GRAD_NOISE", "REPLAY", "STEALTH", "KINDS",
+    "Attack", "HONEST", "stealth", "AttackVec", "attack_vec",
+    "attack_vec_grid", "attack_vec_for_clusters",
+    "poison_inputs", "flip_labels", "tamper_activation", "tamper_gradient",
+    "tamper_params", "poison_inputs_vec", "flip_labels_vec",
+    "tamper_activation_vec", "tamper_gradient_vec",
+]
 
 
 def attack_vec_for_clusters(attack: Attack, clusters: Sequence[Sequence[int]],
                             malicious: Set[int]) -> AttackVec:
-    """(R, M_bar)-leaved AttackVec for one round's cluster partition."""
-    active = np.array([[c in malicious for c in cluster] for cluster in clusters])
-    return attack_vec(attack, active)
-
-
-def flip_labels_vec(av: AttackVec, y: jnp.ndarray, n_classes: int) -> jnp.ndarray:
-    return jnp.where(av.flip, (y + av.shift) % n_classes, y)
-
-
-def tamper_activation_vec(av: AttackVec, acts: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
-    out = _noise_blend(acts, key, av.act_keep.astype(jnp.float32))
-    return jnp.where(av.act, out, acts)
-
-
-def tamper_gradient_vec(av: AttackVec, g: jnp.ndarray) -> jnp.ndarray:
-    return jnp.where(av.grad, -g, g)
-
-
-def tamper_params(attack: Attack, params, key: jax.Array):
-    """Section III-C: the malicious *last* client of the selected cluster
-    hands off manipulated client-side parameters to the next round."""
-    if attack.kind != PARAM_TAMPER:
-        return params
-    leaves, treedef = jax.tree.flatten(params)
-    keys = jax.random.split(key, len(leaves))
-    tampered = [l + attack.param_scale * jax.random.normal(k, l.shape, l.dtype)
-                for l, k in zip(leaves, keys)]
-    return jax.tree.unflatten(treedef, tampered)
+    """(R, M_bar)-leaved AttackVec for one round's cluster partition — the
+    legacy homogeneous-population entry point (always-on schedule)."""
+    return ThreatModel.from_legacy(set(malicious), attack) \
+        .attack_vec_for_clusters(clusters, 0)

@@ -23,13 +23,14 @@ from __future__ import annotations
 
 import dataclasses
 from functools import lru_cache, partial
-from typing import Any, Dict, List, Sequence, Set, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .attacks import HONEST, PARAM_TAMPER, Attack, attack_vec_for_clusters
+from ..adversary import ThreatModel, resolve_threat_model
+from .attacks import HONEST, Attack
 from .clustering import cluster_is_honest, make_clusters
 from .protocol import (ClientData, CommMeter, History, ProtocolConfig,
                        _count_params, account_client_turn, account_validation,
@@ -139,15 +140,17 @@ def onehot_select(stacked: Pytree, sel: jnp.ndarray) -> Pytree:
 # ---------------------------------------------------------------------------
 
 def train_round_batched(module: SplitModule, theta, clusters, data: ClientData,
-                        pcfg: ProtocolConfig, malicious: Set[int], attack: Attack,
+                        pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                         rng: np.random.Generator, key: jax.Array, meter: CommMeter,
                         d_c: int, x0, y0) -> Tuple[jax.Array, List[Dict[str, Any]]]:
     """Batched replacement for the sequential per-cluster loop of
     ``run_pigeon``: one compiled call produces all R candidate
-    (gamma, phi, val_loss, val_acts) tuples."""
+    (gamma, phi, val_loss, val_acts) tuples.  The threat model's per-round
+    attack state arrives as AttackVec *data*, so heterogeneous mixtures and
+    schedule phases reuse the same compiled program."""
     xs, ys = assemble_round_batches(rng, data, clusters, pcfg)
     key, keys = round_client_keys(key, clusters)
-    avec = attack_vec_for_clusters(attack, clusters, malicious)
+    avec = tm.attack_vec_for_clusters(clusters, t)
     gs, ps, losses, vlosses, vacts = batched_round(
         module, pcfg.lr, theta[0], theta[1], xs, ys, avec, keys, x0, y0)
 
@@ -170,7 +173,7 @@ def train_round_batched(module: SplitModule, theta, clusters, data: ClientData,
 
 
 def train_cluster_batched(module: SplitModule, theta, cluster, data: ClientData,
-                          pcfg: ProtocolConfig, malicious: Set[int], attack: Attack,
+                          pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                           rng: np.random.Generator, key: jax.Array,
                           meter: CommMeter, d_c: int
                           ) -> Tuple[jax.Array, Pytree, Pytree, float]:
@@ -179,7 +182,7 @@ def train_cluster_batched(module: SplitModule, theta, cluster, data: ClientData,
     ``split(key)`` + ``train_cluster`` pair exactly."""
     xs, ys = assemble_round_batches(rng, data, [cluster], pcfg)
     key, keys = round_client_keys(key, [cluster])
-    avec = attack_vec_for_clusters(attack, [cluster], malicious)
+    avec = tm.attack_vec_for_clusters([cluster], t)
     gs, ps, losses, _, _ = batched_round(
         module, pcfg.lr, theta[0], theta[1], xs, ys, avec, keys,
         jnp.asarray(data.x0[:1]), jnp.asarray(data.y0[:1]))
@@ -236,13 +239,13 @@ def splitfed_keys(key: jax.Array, clusters: Sequence[Sequence[int]]
 
 
 def splitfed_round_batched(module: SplitModule, theta, clusters, data: ClientData,
-                           pcfg: ProtocolConfig, malicious: Set[int],
-                           attack: Attack, rng: np.random.Generator,
+                           pcfg: ProtocolConfig, tm: ThreatModel, t: int,
+                           rng: np.random.Generator,
                            key: jax.Array, x0, y0
                            ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
     xs, ys = assemble_round_batches(rng, data, clusters, pcfg)
     key, keys = splitfed_keys(key, clusters)
-    avec = attack_vec_for_clusters(attack, clusters, malicious)
+    avec = tm.attack_vec_for_clusters(clusters, t)
     g_avg, p_avg, vlosses = splitfed_round(
         module, pcfg.lr, theta[0], theta[1], xs, ys, avec, keys, x0, y0)
     vlosses = np.asarray(vlosses)
@@ -303,20 +306,22 @@ def evaluate_sweep(module: SplitModule, gammas, phis, x_test: np.ndarray,
 
 
 def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
-                     malicious: Set[int], attack: Attack = HONEST,
+                     malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                      seeds: Sequence[int] = (0, 1, 2),
-                     verbose: bool = False) -> List[History]:
+                     verbose: bool = False,
+                     threat_model: Optional[ThreatModel] = None) -> List[History]:
     """S whole Pigeon-SL replicas (different seeds) advanced in lockstep: one
     compiled call per global round trains S x R clusters and performs the
     per-seed argmin selection on device.
 
     Selection happens inside the compiled program, so the host-side
     param-tamper handoff check is not modelled — the sweep supports the
-    honest case and the three message-level attacks.  Returns one
-    ``History`` per seed (CommMeter accounting is analytic and identical
-    across seeds).
+    honest case and every message-level threat model (heterogeneous
+    mixtures and schedules included).  Returns one ``History`` per seed
+    (CommMeter accounting is analytic and identical across seeds).
     """
-    if attack.kind == PARAM_TAMPER:
+    tm = resolve_threat_model(malicious, attack, threat_model)
+    if tm.has_param_tamper:
         raise ValueError("run_pigeon_sweep does not model the param-tamper "
                          "handoff check; use run_pigeon(engine=...) per seed")
     seeds = tuple(int(s) for s in seeds)
@@ -343,7 +348,7 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
             xs.append(x_i)
             ys.append(y_i)
             key_rows.append(krow)
-            avecs.append(attack_vec_for_clusters(attack, clusters_s[i], malicious))
+            avecs.append(tm.attack_vec_for_clusters(clusters_s[i], t))
         avec = jax.tree.map(lambda *ls: jnp.stack(ls), *avecs)
         gammas, phis, vlosses, sels, tlosses = sweep_round(
             module, pcfg.lr, thetas[0], thetas[1],
@@ -379,8 +384,8 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
                 val_losses=[float(v) for v in vlosses[i]],
                 train_losses=[float(v) for v in tlosses[i]],
                 selected=sel,
-                selected_honest=cluster_is_honest(clusters_s[i][sel], malicious),
-                honest_cluster_exists=any(cluster_is_honest(c, malicious)
+                selected_honest=cluster_is_honest(clusters_s[i][sel], tm.malicious),
+                honest_cluster_exists=any(cluster_is_honest(c, tm.malicious)
                                           for c in clusters_s[i]),
                 comm=dataclasses.asdict(meter),
             )

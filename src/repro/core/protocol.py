@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import attacks as atk
+from ..adversary import ThreatModel, resolve_threat_model
 from .attacks import Attack, HONEST
 from .clustering import cluster_is_honest, make_clusters
 from .split import SplitModule, client_update
@@ -129,16 +130,6 @@ def account_validation(meter: CommMeter, d_o: int, d_c: int) -> None:
     meter.client_passes += d_o
 
 
-def _attack_for(client: int, malicious: Set[int], attack: Attack) -> Attack:
-    if client not in malicious:
-        return HONEST
-    # param-tampering clients train honestly (Section III-C: they avoid
-    # raising the validation loss so their cluster can get selected)
-    if attack.kind == atk.PARAM_TAMPER:
-        return HONEST
-    return attack
-
-
 def res_params(res: Dict[str, Any]) -> Tuple[Pytree, Pytree]:
     """(gamma, phi) of one cluster result.  The batched engine returns its R
     candidates as views into stacked arrays and only the clusters the
@@ -182,15 +173,15 @@ def evaluate(module: SplitModule, gamma, phi, x_test: np.ndarray, y_test: np.nda
 # ---------------------------------------------------------------------------
 
 def train_cluster(module: SplitModule, gamma, phi, cluster: Sequence[int],
-                  data: ClientData, pcfg: ProtocolConfig, malicious: Set[int],
-                  attack: Attack, rng: np.random.Generator, key: jax.Array,
+                  data: ClientData, pcfg: ProtocolConfig, tm: ThreatModel,
+                  t: int, rng: np.random.Generator, key: jax.Array,
                   meter: CommMeter, d_c: int) -> Tuple[Pytree, Pytree, float]:
     d_cl = _count_params(gamma)
     losses = []
     for j, client in enumerate(cluster):
         xs, ys = _sample_batches(rng, data.x[client], data.y[client], pcfg.E, pcfg.B)
         key, sub = jax.random.split(key)
-        a = _attack_for(client, malicious, attack)
+        a = tm.attack_for(client, t)
         gamma, phi, loss = client_update(module, a, gamma, phi, (xs, ys), pcfg.lr, sub)
         losses.append(float(loss))
         account_client_turn(meter, pcfg, d_c, d_cl, handoff=j < len(cluster) - 1)
@@ -209,23 +200,22 @@ def cut_width(module: SplitModule, gamma, x0) -> int:
 # ---------------------------------------------------------------------------
 
 def _train_round(module: SplitModule, theta, clusters, data: ClientData,
-                 pcfg: ProtocolConfig, malicious: Set[int], attack: Attack,
+                 pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                  rng: np.random.Generator, key: jax.Array, meter: CommMeter,
                  d_c: int, x0, y0, engine: str):
-    """Train all R clusters of one round from the same theta^t.  Returns
+    """Train all R clusters of round t from the same theta^t.  Returns
     (key', results) where results[r] holds gamma/phi/vloss/vacts/cluster/
     train_loss for cluster r.  Both engines consume the numpy RNG and the JAX
     key stream in the same order, so they are swappable mid-trajectory."""
     if engine == "batched":
         from .engine import train_round_batched
         return train_round_batched(module, theta, clusters, data, pcfg,
-                                   malicious, attack, rng, key, meter, d_c,
-                                   x0, y0)
+                                   tm, t, rng, key, meter, d_c, x0, y0)
     results = []
     for cluster in clusters:
         key, sub = jax.random.split(key)
         g, p, train_loss = train_cluster(module, theta[0], theta[1], cluster, data,
-                                         pcfg, malicious, attack, rng, sub, meter, d_c)
+                                         pcfg, tm, t, rng, sub, meter, d_c)
         vloss, vacts = validation_loss(module, g, p, x0, y0)
         results.append(dict(gamma=g, phi=p, vloss=float(vloss), vacts=vacts,
                             cluster=cluster, train_loss=train_loss))
@@ -233,10 +223,13 @@ def _train_round(module: SplitModule, theta, clusters, data: ClientData,
 
 
 def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
-               malicious: Set[int], attack: Attack = HONEST, plus: bool = False,
-               verbose: bool = False, checkpoint_path: Optional[str] = None,
-               resume: bool = False, engine: str = "sequential") -> History:
+               malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
+               plus: bool = False, verbose: bool = False,
+               checkpoint_path: Optional[str] = None, resume: bool = False,
+               engine: str = "sequential",
+               threat_model: Optional[ThreatModel] = None) -> History:
     _check_engine(engine)
+    tm = resolve_threat_model(malicious, attack, threat_model)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
     key, k0 = jax.random.split(key)
@@ -263,8 +256,8 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     for t in range(start_round, pcfg.T):
         meter = CommMeter()
         clusters = make_clusters(rng, pcfg.M, pcfg.R)
-        key, results = _train_round(module, theta, clusters, data, pcfg, malicious,
-                                    attack, rng, key, meter, d_c, x0, y0, engine)
+        key, results = _train_round(module, theta, clusters, data, pcfg, tm,
+                                    t, rng, key, meter, d_c, x0, y0, engine)
         for _ in results:
             account_validation(meter, d_o, d_c)
 
@@ -276,9 +269,10 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
             last_client = res["cluster"][-1]
             g_sel, p_sel = res_params(res)
             handed = g_sel
-            if attack.kind == atk.PARAM_TAMPER and last_client in malicious:
+            pt = tm.param_attack_for(last_client, t)
+            if pt is not None:
                 key, sub = jax.random.split(key)
-                handed = atk.tamper_params(attack, g_sel, sub)
+                handed = atk.tamper_params(pt, g_sel, sub)
             if pcfg.tamper_check:
                 # next-round first clients re-transmit g(x0, gamma_received);
                 # >=1 of the R recipients is honest, so a tampered handoff is
@@ -305,13 +299,13 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                 if engine == "batched":
                     from .engine import train_cluster_batched
                     key, g, p, _ = train_cluster_batched(
-                        module, theta, sel_res["cluster"], data, pcfg, malicious,
-                        attack, rng, key, meter, d_c)
+                        module, theta, sel_res["cluster"], data, pcfg, tm,
+                        t, rng, key, meter, d_c)
                 else:
                     key, sub = jax.random.split(key)
                     g, p, _ = train_cluster(module, theta[0], theta[1],
                                             sel_res["cluster"], data, pcfg,
-                                            malicious, attack, rng, sub, meter, d_c)
+                                            tm, t, rng, sub, meter, d_c)
                 theta = (g, p)
                 meter.param_floats += _count_params(g)   # subround handoff to 1st client
 
@@ -321,8 +315,9 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
             val_losses=[res["vloss"] for res in results],
             train_losses=[res["train_loss"] for res in results],
             selected=selected,
-            selected_honest=cluster_is_honest(sel_res["cluster"], malicious),
-            honest_cluster_exists=any(cluster_is_honest(c, malicious) for c in clusters),
+            selected_honest=cluster_is_honest(sel_res["cluster"], tm.malicious),
+            honest_cluster_exists=any(cluster_is_honest(c, tm.malicious)
+                                      for c in clusters),
             detections=detection_events,
             comm=dataclasses.asdict(meter),
         )
@@ -342,14 +337,15 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
 
 
 def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
-                    malicious: Set[int], attack: Attack = HONEST,
+                    malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                     verbose: bool = False, checkpoint_path: Optional[str] = None,
-                    resume: bool = False, engine: str = "sequential") -> History:
+                    resume: bool = False, engine: str = "sequential",
+                    threat_model: Optional[ThreatModel] = None) -> History:
     """Pigeon-SL+ (throughput-matched variant): ``run_pigeon`` with the R-1
     extra selected-cluster sub-rounds enabled."""
     return run_pigeon(module, data, pcfg, malicious, attack, plus=True,
                       verbose=verbose, checkpoint_path=checkpoint_path,
-                      resume=resume, engine=engine)
+                      resume=resume, engine=engine, threat_model=threat_model)
 
 
 # ---------------------------------------------------------------------------
@@ -357,8 +353,10 @@ def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
 # ---------------------------------------------------------------------------
 
 def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
-                   malicious: Set[int], attack: Attack = HONEST,
-                   verbose: bool = False) -> History:
+                   malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
+                   verbose: bool = False,
+                   threat_model: Optional[ThreatModel] = None) -> History:
+    tm = resolve_threat_model(malicious, attack, threat_model)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
     key, k0 = jax.random.split(key)
@@ -370,7 +368,7 @@ def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
         order = rng.permutation(pcfg.M).tolist()
         key, sub = jax.random.split(key)
         gamma, phi, train_loss = train_cluster(module, gamma, phi, order, data, pcfg,
-                                               malicious, attack, rng, sub, meter, d_c)
+                                               tm, t, rng, sub, meter, d_c)
         meter.param_floats += _count_params(gamma)   # hand-off into the next round
         rec = dict(round=t, train_loss=train_loss, comm=dataclasses.asdict(meter))
         if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
@@ -387,12 +385,14 @@ def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
 # ---------------------------------------------------------------------------
 
 def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
-                 malicious: Set[int], attack: Attack = HONEST,
-                 verbose: bool = False, engine: str = "sequential") -> History:
+                 malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
+                 verbose: bool = False, engine: str = "sequential",
+                 threat_model: Optional[ThreatModel] = None) -> History:
     """Clients inside a cluster train *in parallel* from the same incoming
     params; the cluster model is the FedAvg of its clients.  Cluster
     selection by shared-set validation loss, as the paper's adapted SFL."""
     _check_engine(engine)
+    tm = resolve_threat_model(malicious, attack, threat_model)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
     key, k0 = jax.random.split(key)
@@ -405,8 +405,7 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
         if engine == "batched":
             from .engine import splitfed_round_batched
             key, results = splitfed_round_batched(module, theta, clusters, data,
-                                                  pcfg, malicious, attack, rng,
-                                                  key, x0, y0)
+                                                  pcfg, tm, t, rng, key, x0, y0)
         else:
             results = []
             for cluster in clusters:
@@ -415,7 +414,7 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                     xs, ys = _sample_batches(rng, data.x[client], data.y[client],
                                              pcfg.E, pcfg.B)
                     key, sub = jax.random.split(key)
-                    a = _attack_for(client, malicious, attack)
+                    a = tm.attack_for(client, t)
                     g, p, _ = client_update(module, a, theta[0], theta[1], (xs, ys),
                                             pcfg.lr, sub)
                     gs.append(g)
@@ -430,7 +429,7 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
         rec = dict(round=t, selected=selected,
                    val_losses=[res["vloss"] for res in results],
                    selected_honest=cluster_is_honest(results[selected]["cluster"],
-                                                     malicious))
+                                                     tm.malicious))
         if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
             rec["test_acc"] = evaluate(module, theta[0], theta[1], data.x_test,
                                        data.y_test, pcfg.eval_batch)

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from .attacks import (Attack, AttackVec, flip_labels, flip_labels_vec,
-                      tamper_activation, tamper_activation_vec, tamper_gradient,
+                      poison_inputs, poison_inputs_vec, tamper_activation,
+                      tamper_activation_vec, tamper_gradient,
                       tamper_gradient_vec)
 
 Pytree = Any
@@ -91,25 +92,34 @@ def _xent(logits, y):
 
 def _sl_exchange(module: SplitModule, gamma: Pytree, phi: Pytree,
                  x: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
-                 send_labels, send_acts, recv_grad
+                 poison, send_labels, send_acts, recv_grad
                  ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
     """One FwdProp/BackProp exchange.  Returns (g_gamma, g_phi, loss).
 
-    The attack hooks sit exactly where the paper places them:
-      * ``send_labels``: labels tampered before transmission    (label flipping)
+    The attack hooks sit exactly where the taxonomy places them:
+      * ``poison``: the client's own training inputs, before the forward
+                                                    (backdoor trigger stamping)
+      * ``send_labels``: labels tampered before transmission
+                                                    (label flipping, backdoor)
       * ``send_acts``: cut activations tampered before transmission
-                                                           (activation tampering)
-      * ``recv_grad``: cut gradient tampered after reception (gradient tampering)
+                                                    (activation tampering, replay)
+      * ``recv_grad``: cut gradient tampered after reception
+                                                    (gradient scaling/noise)
+
+    The per-exchange key splits into an activation-side and a gradient-side
+    stream so stochastic attacks on either leg draw independent noise.
 
     Single source of truth for the four-message exchange: the static
     (per-``Attack``) and vectorised (per-``AttackVec``) entry points below
     differ only in which hook implementations they bind, so the engines'
     bit-for-bit equivalence contract cannot drift between two copies.
     """
+    k_act, k_grad = jax.random.split(key)
+    x_used = poison(x)
     y_sent = send_labels(y)
 
-    acts, client_vjp = jax.vjp(lambda g: module.client_forward(g, x), gamma)
-    acts_sent = send_acts(acts, key)
+    acts, client_vjp = jax.vjp(lambda g: module.client_forward(g, x_used), gamma)
+    acts_sent = send_acts(acts, k_act)
 
     def ap_fn(phi_, acts_):
         return module.ap_loss(phi_, acts_, y_sent)
@@ -117,7 +127,7 @@ def _sl_exchange(module: SplitModule, gamma: Pytree, phi: Pytree,
     loss, ap_grads = jax.value_and_grad(ap_fn, argnums=(0, 1))(phi, acts_sent)
     g_phi, g_acts = ap_grads
 
-    g_acts_recv = recv_grad(g_acts)
+    g_acts_recv = recv_grad(g_acts, k_grad)
     (g_gamma,) = client_vjp(g_acts_recv.astype(acts.dtype))
     return g_gamma, g_phi, loss
 
@@ -125,12 +135,13 @@ def _sl_exchange(module: SplitModule, gamma: Pytree, phi: Pytree,
 def sl_minibatch_grads(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytree,
                        x: jnp.ndarray, y: jnp.ndarray, key: jax.Array
                        ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
-    """The exchange with a static ``Attack`` (one compiled program per kind)."""
+    """The exchange with a static ``Attack`` (one compiled program per spec)."""
     return _sl_exchange(
         module, gamma, phi, x, y, key,
+        lambda x_: poison_inputs(attack, x_),
         lambda y_: flip_labels(attack, y_, module.n_classes),
         lambda a, k: tamper_activation(attack, a, k),
-        lambda g: tamper_gradient(attack, g))
+        lambda g, k: tamper_gradient(attack, g, k))
 
 
 def sgd_update(params: Pytree, grads: Pytree, lr: float) -> Pytree:
@@ -179,9 +190,10 @@ def sl_minibatch_grads_vec(module: SplitModule, av: AttackVec, gamma: Pytree,
                            key: jax.Array) -> Tuple[Pytree, Pytree, jnp.ndarray]:
     return _sl_exchange(
         module, gamma, phi, x, y, key,
+        lambda x_: poison_inputs_vec(av, x_),
         lambda y_: flip_labels_vec(av, y_, module.n_classes),
         lambda a, k: tamper_activation_vec(av, a, k),
-        lambda g: tamper_gradient_vec(av, g))
+        lambda g, k: tamper_gradient_vec(av, g, k))
 
 
 def client_update_vec_impl(module: SplitModule, av: AttackVec, gamma: Pytree,

@@ -1,0 +1,254 @@
+"""Unit tests for the pluggable adversary subsystem: registry contents,
+static-vs-vectorised transform agreement for the extended families, schedule
+arithmetic, strength scaling, and the ThreatModel API (including the legacy
+``(malicious, attack)`` bridge)."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adversary import (ACTIVATION, ALWAYS, BACKDOOR, GRAD_NOISE,
+                             GRAD_SCALE, GRADIENT, HONEST, KINDS, LABEL_FLIP,
+                             NONE, PARAM_TAMPER, REPLAY, STEALTH, Attack,
+                             AttackFamily, ClientThreat, Schedule,
+                             ThreatModel, after_warmup, attack_vec,
+                             attack_vec_grid, every_k, families, flip_labels,
+                             flip_labels_vec, get, poison_inputs,
+                             poison_inputs_vec, ramp, register,
+                             resolve_threat_model, scale_attack, stealth,
+                             tamper_activation, tamper_activation_vec,
+                             tamper_gradient, tamper_gradient_vec)
+from repro.core.attacks import attack_vec_for_clusters
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_every_spec_kind_has_a_registered_family():
+    assert set(KINDS) <= set(families())
+
+
+def test_unknown_family_raises_with_catalogue():
+    with pytest.raises(KeyError, match="registered"):
+        get("bit_rot")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(AssertionError, match="duplicate"):
+        register(AttackFamily(name=LABEL_FLIP, code=1))
+
+
+def test_stealth_compiles_onto_activation_kernel():
+    assert get(STEALTH).code == get(ACTIVATION).code
+    assert get(GRADIENT).code == get(GRAD_SCALE).code
+
+
+# ---------------------------------------------------------------------------
+# static vs vectorised transforms, new families
+# ---------------------------------------------------------------------------
+
+def test_backdoor_static_matches_vec_and_semantics():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (6, 4, 4, 1))
+    y = jnp.arange(6) % 10
+    a = Attack(BACKDOOR, target=7, trigger_frac=0.25, trigger_value=3.0)
+    av = attack_vec(a, True)
+
+    xs = poison_inputs(a, x)
+    np.testing.assert_array_equal(xs, poison_inputs_vec(av, x))
+    flat = np.asarray(xs).reshape(6, -1)
+    assert np.all(flat[:, :4] == 3.0)                 # round(0.25 * 16) stamped
+    np.testing.assert_array_equal(flat[:, 4:], np.asarray(x).reshape(6, -1)[:, 4:])
+
+    ys = flip_labels(a, y, 10)
+    np.testing.assert_array_equal(ys, flip_labels_vec(av, y, 10))
+    assert np.all(np.asarray(ys) == 7)
+
+    av_off = attack_vec(a, False)
+    np.testing.assert_array_equal(x, poison_inputs_vec(av_off, x))
+    np.testing.assert_array_equal(y, flip_labels_vec(av_off, y, 10))
+
+
+def test_replay_static_matches_vec_and_replays_first_sample():
+    acts = jax.random.normal(jax.random.PRNGKey(1), (5, 8))
+    a = Attack(REPLAY)
+    k = jax.random.PRNGKey(2)
+    out = tamper_activation(a, acts, k)
+    np.testing.assert_array_equal(out, tamper_activation_vec(attack_vec(a, True), acts, k))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.tile(np.asarray(acts)[:1], (5, 1)))
+
+
+def test_grad_scale_and_noise_static_match_vec():
+    g = jax.random.normal(jax.random.PRNGKey(3), (4, 16))
+    k = jax.random.PRNGKey(4)
+    a_scale = Attack(GRAD_SCALE, grad_scale=8.0)
+    np.testing.assert_array_equal(tamper_gradient(a_scale, g, k),
+                                  tamper_gradient_vec(attack_vec(a_scale, True), g, k))
+    np.testing.assert_allclose(np.asarray(tamper_gradient(a_scale, g, k)),
+                               8.0 * np.asarray(g), rtol=1e-6)
+
+    a_noise = Attack(GRAD_NOISE, noise_std=0.5)
+    out = tamper_gradient(a_noise, g, k)
+    np.testing.assert_array_equal(out,
+                                  tamper_gradient_vec(attack_vec(a_noise, True), g, k))
+    assert float(jnp.abs(out - g).max()) > 0
+    # honest slots pass the gradient through untouched
+    np.testing.assert_array_equal(g, tamper_gradient_vec(attack_vec(a_noise, False), g, k))
+
+
+def test_tamper_gradient_vec_keyless_legacy_signature():
+    """The pre-subsystem 2-arg call must keep working for key-free attack
+    state (stochastic gradient kernels are skipped when no key is given)."""
+    g = jax.random.normal(jax.random.PRNGKey(7), (4, 8))
+    av = attack_vec(Attack(LABEL_FLIP), True)
+    np.testing.assert_array_equal(g, tamper_gradient_vec(av, g))
+    av_scale = attack_vec(Attack(GRAD_SCALE, grad_scale=3.0), True)
+    np.testing.assert_allclose(np.asarray(tamper_gradient_vec(av_scale, g)),
+                               3.0 * np.asarray(g), rtol=1e-6)
+
+
+def test_stealth_is_a_gentle_activation_blend():
+    acts = jax.random.normal(jax.random.PRNGKey(5), (8, 32))
+    k = jax.random.PRNGKey(6)
+    gentle = tamper_activation(stealth(0.97), acts, k)
+    loud = tamper_activation(Attack(ACTIVATION), acts, k)
+    d_gentle = float(jnp.linalg.norm(gentle - acts))
+    d_loud = float(jnp.linalg.norm(loud - acts))
+    assert 0 < d_gentle < 0.2 * d_loud
+    np.testing.assert_array_equal(
+        gentle, tamper_activation_vec(attack_vec(stealth(0.97), True), acts, k))
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def test_schedule_strengths():
+    assert [ALWAYS.strength(t) for t in range(3)] == [1.0, 1.0, 1.0]
+    assert [every_k(3, offset=1).strength(t) for t in range(8)] == \
+        [0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0]
+    assert [after_warmup(2).strength(t) for t in range(5)] == \
+        [0.0, 0.0, 1.0, 1.0, 1.0]
+    assert [after_warmup(1, stop=3).strength(t) for t in range(5)] == \
+        [0.0, 1.0, 1.0, 0.0, 0.0]
+    assert [ramp(4, start=1).strength(t) for t in range(7)] == \
+        [0.0, 0.25, 0.5, 0.75, 1.0, 1.0, 1.0]
+    assert every_k(2).active(0) and not every_k(2).active(1)
+
+
+def test_schedule_rejects_unknown_kind_and_bad_params():
+    with pytest.raises(AssertionError):
+        Schedule("fortnightly")
+    with pytest.raises(AssertionError):
+        Schedule("every_k", k=0)
+
+
+# ---------------------------------------------------------------------------
+# strength scaling
+# ---------------------------------------------------------------------------
+
+def test_scale_attack_endpoints_and_interpolation():
+    a = Attack(ACTIVATION, act_keep=0.2)
+    assert scale_attack(a, 1.0) is a           # no spurious jit cache entries
+    assert scale_attack(a, 0.0) == HONEST
+    assert scale_attack(a, 0.5).act_keep == pytest.approx(0.6)
+
+    g = Attack(GRAD_SCALE, grad_scale=-1.0)
+    assert scale_attack(g, 0.5).grad_scale == pytest.approx(0.0)
+    assert scale_attack(Attack(GRAD_NOISE, noise_std=2.0), 0.25).noise_std == \
+        pytest.approx(0.5)
+    assert scale_attack(Attack(PARAM_TAMPER, param_scale=4.0), 0.5).param_scale == \
+        pytest.approx(2.0)
+    # discrete families gate rather than interpolate
+    assert scale_attack(Attack(LABEL_FLIP), 0.5) == Attack(LABEL_FLIP)
+
+
+# ---------------------------------------------------------------------------
+# ThreatModel
+# ---------------------------------------------------------------------------
+
+def test_from_legacy_matches_legacy_attack_vec_for_clusters():
+    clusters = [[0, 1], [2, 3]]
+    a = Attack(LABEL_FLIP, label_shift=4)
+    tm = ThreatModel.from_legacy({1, 2}, a)
+    av_new = tm.attack_vec_for_clusters(clusters, 0)
+    av_old = attack_vec_for_clusters(a, clusters, {1, 2})
+    for lane_new, lane_old in zip(av_new, av_old):
+        np.testing.assert_array_equal(np.asarray(lane_new), np.asarray(lane_old))
+    np.testing.assert_array_equal(np.asarray(av_new.flip),
+                                  [[False, True], [True, False]])
+
+
+def test_attack_for_respects_schedule_and_param_tamper():
+    tm = ThreatModel.build({
+        0: ClientThreat(Attack(LABEL_FLIP), every_k(2)),
+        1: Attack(PARAM_TAMPER),
+    })
+    assert tm.attack_for(0, 0).kind == LABEL_FLIP
+    assert tm.attack_for(0, 1) == HONEST               # off-phase round
+    assert tm.attack_for(1, 0) == HONEST               # trains honestly (III-C)
+    assert tm.param_attack_for(1, 0).kind == PARAM_TAMPER
+    assert tm.param_attack_for(0, 0) is None
+    assert tm.malicious == {0, 1}
+    assert tm.has_param_tamper
+
+
+def test_param_tamper_schedule_gates_the_handoff():
+    tm = ThreatModel.build({3: ClientThreat(Attack(PARAM_TAMPER),
+                                            after_warmup(2))})
+    assert tm.param_attack_for(3, 0) is None
+    assert tm.param_attack_for(3, 2).kind == PARAM_TAMPER
+
+
+def test_from_legacy_honest_attack_keeps_malicious_bookkeeping():
+    """Legacy drivers allowed malicious={...} with attack=HONEST: nobody
+    attacks, but History honesty accounting still counts those clients."""
+    tm = ThreatModel.from_legacy({1, 3}, HONEST)
+    assert tm.malicious == {1, 3}
+    assert tm.attack_for(1, 0) == HONEST
+    assert not tm.has_param_tamper
+    assert not np.asarray(tm.attack_vec_for_clusters([[0, 1], [2, 3]], 0).code).any()
+
+
+def test_build_drops_honest_entries_and_rejects_junk():
+    tm = ThreatModel.build({0: HONEST, 1: Attack(LABEL_FLIP)})
+    assert tm.malicious == {1}
+    with pytest.raises(TypeError, match="ClientThreat"):
+        ThreatModel.build({0: "label_flip"})
+
+
+def test_resolve_threat_model_exclusivity():
+    tm = ThreatModel.build({1: Attack(LABEL_FLIP)})
+    assert resolve_threat_model(None, HONEST, tm) is tm
+    legacy = resolve_threat_model({1}, Attack(LABEL_FLIP), None)
+    assert legacy.malicious == {1}
+    with pytest.raises(ValueError, match="not both"):
+        resolve_threat_model({1}, Attack(LABEL_FLIP), tm)
+
+
+def test_describe_is_json_serialisable():
+    tm = ThreatModel.build({
+        0: ClientThreat(Attack(BACKDOOR, target=3), ramp(4)),
+        2: Attack(GRAD_NOISE),
+    })
+    manifest = json.loads(json.dumps(tm.describe()))
+    assert manifest["0"]["attack"]["kind"] == BACKDOOR
+    assert manifest["0"]["schedule"]["kind"] == "ramp"
+    assert manifest["2"]["schedule"]["kind"] == "always"
+
+
+def test_heterogeneous_grid_codes_and_lanes():
+    grid = [[Attack(LABEL_FLIP, label_shift=2), HONEST],
+            [Attack(GRAD_SCALE, grad_scale=7.0), Attack(BACKDOOR, target=9)]]
+    av = attack_vec_grid(grid)
+    assert av.code.shape == (2, 2)
+    codes = np.asarray(av.code)
+    assert codes[0, 1] == 0 and len({int(c) for c in codes.ravel()}) == 4
+    assert np.asarray(av.shift)[0, 0] == 2
+    assert np.asarray(av.grad_scale)[1, 0] == 7.0
+    assert np.asarray(av.target)[1, 1] == 9

@@ -14,10 +14,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (ACTIVATION, GRADIENT, HONEST, LABEL_FLIP, PARAM_TAMPER,
-                        Attack, AttackVec, ProtocolConfig, attack_vec,
+from repro.core import (ACTIVATION, BACKDOOR, GRAD_NOISE, GRAD_SCALE,
+                        GRADIENT, HONEST, LABEL_FLIP, PARAM_TAMPER, REPLAY,
+                        Attack, AttackVec, ClientThreat, ProtocolConfig,
+                        ThreatModel, after_warmup, attack_vec, every_k, ramp,
                         run_pigeon, run_pigeon_plus, run_pigeon_sweep,
-                        run_splitfed)
+                        run_splitfed, run_vanilla_sl, stealth)
 from repro.core.attacks import (attack_vec_for_clusters, flip_labels,
                                 flip_labels_vec, tamper_activation,
                                 tamper_activation_vec, tamper_gradient,
@@ -103,6 +105,115 @@ def test_engine_rejects_unknown_name(tiny_task, tiny_pcfg):
         run_pigeon(module, data, tiny_pcfg, malicious=set(), engine="warp")
 
 
+# ---------------------------------------------------------------------------
+# heterogeneous threat models and schedules (the adversary subsystem)
+# ---------------------------------------------------------------------------
+
+def test_batched_matches_sequential_mixed_population(tiny_task, tiny_pcfg):
+    """A mixed malicious population — one label flipper, one Byzantine
+    gradient scaler, one gradient-noise client — must run as one batched
+    program and still match the per-client jit-specialised oracle."""
+    data, module = tiny_task
+    tm = ThreatModel.build({
+        0: Attack(LABEL_FLIP),
+        1: Attack(GRAD_SCALE, grad_scale=6.0),
+        3: Attack(GRAD_NOISE, noise_std=0.5),
+    })
+    h_seq = run_pigeon(module, data, tiny_pcfg, threat_model=tm,
+                       engine="sequential")
+    h_bat = run_pigeon(module, data, tiny_pcfg, threat_model=tm,
+                       engine="batched")
+    assert_histories_equivalent(h_seq, h_bat)
+
+
+def test_batched_matches_sequential_intermittent_schedule(tiny_task, tiny_pcfg):
+    """Round-indexed schedules: an every-2 flipper plus a post-warmup
+    activation tamperer change the AttackVec *data* each round; both engines
+    must gate the same rounds."""
+    data, module = tiny_task
+    pcfg = dataclasses.replace(tiny_pcfg, T=3)
+    tm = ThreatModel.build({
+        1: ClientThreat(Attack(LABEL_FLIP), every_k(2)),
+        2: ClientThreat(Attack(ACTIVATION), after_warmup(1)),
+    })
+    h_seq = run_pigeon(module, data, pcfg, threat_model=tm, engine="sequential")
+    h_bat = run_pigeon(module, data, pcfg, threat_model=tm, engine="batched")
+    assert_histories_equivalent(h_seq, h_bat)
+
+
+NEW_FAMILY_CASES = [
+    ("backdoor", ThreatModel.build({1: Attack(BACKDOOR, target=7)})),
+    ("replay", ThreatModel.build({1: Attack(REPLAY)})),
+    ("stealth", ThreatModel.build({1: stealth()})),
+    ("grad_noise", ThreatModel.build({1: Attack(GRAD_NOISE, noise_std=2.0)})),
+    ("ramp_grad_scale",
+     ThreatModel.build({1: ClientThreat(Attack(GRAD_SCALE, grad_scale=5.0),
+                                        ramp(3))})),
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name,tm", NEW_FAMILY_CASES,
+                         ids=[c[0] for c in NEW_FAMILY_CASES])
+def test_batched_matches_sequential_new_families(tiny_task, tiny_pcfg, name, tm):
+    data, module = tiny_task
+    pcfg = dataclasses.replace(tiny_pcfg, T=3)
+    h_seq = run_pigeon(module, data, pcfg, threat_model=tm, engine="sequential")
+    h_bat = run_pigeon(module, data, pcfg, threat_model=tm, engine="batched")
+    assert_histories_equivalent(h_seq, h_bat)
+
+
+@pytest.mark.slow
+def test_sweep_matches_per_seed_heterogeneous(tiny_task, tiny_pcfg):
+    """The multi-seed sweep accepts a heterogeneous scheduled threat model
+    and reproduces each single-seed batched trajectory."""
+    data, module = tiny_task
+    tm = ThreatModel.build({
+        0: ClientThreat(Attack(LABEL_FLIP), every_k(2)),
+        1: Attack(GRAD_SCALE, grad_scale=4.0),
+    })
+    hists = run_pigeon_sweep(module, data, tiny_pcfg, threat_model=tm,
+                             seeds=(0, 1))
+    for i, seed in enumerate((0, 1)):
+        h_ref = run_pigeon(module, data,
+                           dataclasses.replace(tiny_pcfg, seed=seed),
+                           threat_model=tm, engine="batched")
+        for rr, rw in zip(h_ref.rounds, hists[i].rounds):
+            assert rr["selected"] == rw["selected"]
+            np.testing.assert_allclose(rr["val_losses"], rw["val_losses"],
+                                       rtol=2e-5, atol=1e-6)
+
+
+def test_param_tamper_rollback_reselect_batched(tiny_task, tiny_pcfg):
+    """End-to-end III-C path under the batched engine: a detected tampered
+    handoff must be recorded in History AND trigger reselection — the
+    recorded winner deviates from the raw validation argmin, and the cluster
+    that ends up selected has an honest last client (its handoff passed)."""
+    data, module = tiny_task
+    pcfg = dataclasses.replace(tiny_pcfg, T=3)
+    h = run_pigeon(module, data, pcfg, malicious={0, 1, 3},
+                   attack=Attack(PARAM_TAMPER), engine="batched")
+    assert sum(r["detections"] for r in h.rounds) >= 1
+    reselected = [r for r in h.rounds
+                  if r["detections"] >= 1
+                  and r["selected"] != int(np.argmin(r["val_losses"]))]
+    assert reselected, [(r["detections"], r["selected"], r["val_losses"])
+                        for r in h.rounds]
+    for r in reselected:
+        assert r["clusters"][r["selected"]][-1] == 2   # the only honest client
+
+
+def test_threat_model_and_legacy_args_are_exclusive(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    tm = ThreatModel.build({1: Attack(LABEL_FLIP)})
+    with pytest.raises(ValueError, match="threat_model"):
+        run_pigeon(module, data, tiny_pcfg, malicious={1},
+                   attack=Attack(LABEL_FLIP), threat_model=tm)
+    with pytest.raises(ValueError, match="threat_model"):
+        run_vanilla_sl(module, data, tiny_pcfg, malicious={1},
+                       attack=Attack(LABEL_FLIP), threat_model=tm)
+
+
 @pytest.mark.slow
 def test_sweep_matches_per_seed_runs(tiny_task, tiny_pcfg):
     """Each replica of the vmapped multi-seed sweep reproduces the
@@ -144,7 +255,8 @@ def test_attack_vec_transforms_match_static():
 
     for kind, static_fn, vec_fn, args in [
         (LABEL_FLIP, flip_labels, flip_labels_vec, (y, 10)),
-        (GRADIENT, tamper_gradient, tamper_gradient_vec, (g,)),
+        (GRADIENT, tamper_gradient, tamper_gradient_vec,
+         (g, jax.random.fold_in(key, 3))),
     ]:
         a = Attack(kind)
         av_on = attack_vec(a, True)
