@@ -18,6 +18,8 @@ from .engine import (batched_round, onehot_select, run_pigeon_sweep,
 from .protocol import (ENGINES, ClientData, CommMeter, History, ProtocolConfig,
                        run_pigeon, run_pigeon_plus, run_splitfed,
                        run_vanilla_sl)
+from .runner import (PLACEMENTS, RoundRunner, RoundSpec, cluster_map,
+                     cluster_mesh, protocol_round_spec, protocol_runner)
 from .split import (SplitModule, client_update, client_update_vec, from_cnn,
                     from_lm, sl_minibatch_grads, sl_minibatch_grads_vec)
 from .validation import check_handoff, select_cluster, validation_loss
@@ -33,6 +35,8 @@ __all__ = [
     "ClientData", "CommMeter", "History", "ProtocolConfig", "ENGINES",
     "run_pigeon", "run_pigeon_plus", "run_splitfed", "run_vanilla_sl",
     "run_pigeon_sweep", "batched_round", "train_round_batched", "onehot_select",
+    "PLACEMENTS", "RoundRunner", "RoundSpec", "cluster_map", "cluster_mesh",
+    "protocol_round_spec", "protocol_runner",
     "SplitModule", "client_update", "client_update_vec", "from_cnn", "from_lm",
     "sl_minibatch_grads", "sl_minibatch_grads_vec",
     "check_handoff", "select_cluster", "validation_loss",

@@ -4,16 +4,19 @@ Pigeon-SL's global round trains R = N+1 clusters independently from the same
 theta^t — embarrassingly parallel work that the sequential driver in
 ``protocol.py`` dispatches one ``client_update`` at a time.  This module
 stacks the R clusters' sampled batches, per-client attack state and RNG keys
-into leading-axis arrays and runs the whole round as ONE jitted program:
-``jax.vmap`` over clusters, ``jax.lax.scan`` over the within-cluster client
-chain, with the shared-set validation forward (and the tamper-check
-activations it produces) vmapped alongside.  A second level of ``vmap`` turns
-the round program into a multi-seed sweep that advances S whole protocol
-replicas in lockstep.
+into leading-axis arrays and runs the whole round as ONE compiled program via
+the placement-aware :class:`~repro.core.runner.RoundRunner` — ``jax.vmap``
+over clusters on one device (``placement="vmap"``) or the cluster axis laid
+over a device mesh (``placement="sharded"``), with ``jax.lax.scan`` over each
+within-cluster client chain and the shared-set validation forward (plus the
+tamper-check activations it produces) mapped alongside.  A second level of
+``vmap`` turns the round program into a multi-seed sweep that advances S
+whole protocol replicas in lockstep.
 
 Equivalence contract with the sequential engine (tested in
-``tests/test_engine.py``): both engines consume the numpy batch-sampling RNG
-and the JAX key stream in exactly the same order, the attack transforms are
+``tests/test_engine.py`` / ``tests/test_runner.py``): both engines — under
+either placement — consume the numpy batch-sampling RNG and the JAX key
+stream in exactly the same order, the attack transforms are
 ``jnp.where``-masked versions of the same arithmetic, and the CommMeter
 accounting goes through the same ``account_client_turn`` helper — so seeded
 runs select the same clusters, produce validation losses equal within float
@@ -35,6 +38,8 @@ from .clustering import cluster_is_honest, make_clusters
 from .protocol import (ClientData, CommMeter, History, ProtocolConfig,
                        _count_params, account_client_turn, account_validation,
                        cut_width, sample_batch_idx)
+from .runner import (cluster_map, onehot_select, protocol_round_spec,
+                     protocol_runner)
 from .split import SplitModule, client_update_vec_impl
 
 Pytree = Any
@@ -50,17 +55,21 @@ def assemble_round_batches(rng: np.random.Generator, data: ClientData,
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sample every client's (E, B) mini-batches for the round, consuming the
     numpy RNG in the sequential engine's order (cluster-major, then client),
-    and stack them to (R, M_bar, E, B, ...)."""
-    xs_all, ys_all = [], []
-    for cluster in clusters:
-        xs_c, ys_c = [], []
-        for client in cluster:
+    stacked to (R, M_bar, E, B, ...).  Each gather writes straight into one
+    preallocated per-round buffer (``np.take(..., out=...)``), so the host
+    pays a single copy per sample instead of the old per-cluster
+    ``np.stack`` followed by another stack + device conversion."""
+    r, m_bar = len(clusters), len(clusters[0])
+    xs = np.empty((r, m_bar, pcfg.E, pcfg.B) + data.x.shape[2:],
+                  dtype=data.x.dtype)
+    ys = np.empty((r, m_bar, pcfg.E, pcfg.B) + data.y.shape[2:],
+                  dtype=data.y.dtype)
+    for i, cluster in enumerate(clusters):
+        for j, client in enumerate(cluster):
             idx = sample_batch_idx(rng, data.x[client].shape[0], pcfg.E, pcfg.B)
-            xs_c.append(data.x[client][idx])
-            ys_c.append(data.y[client][idx])
-        xs_all.append(np.stack(xs_c))
-        ys_all.append(np.stack(ys_c))
-    return jnp.asarray(np.stack(xs_all)), jnp.asarray(np.stack(ys_all))
+            np.take(data.x[client], idx, axis=0, out=xs[i, j])
+            np.take(data.y[client], idx, axis=0, out=ys[i, j])
+    return jnp.asarray(xs), jnp.asarray(ys)
 
 
 @partial(jax.jit, static_argnums=(1, 2))
@@ -87,52 +96,42 @@ def round_client_keys(key: jax.Array, clusters: Sequence[Sequence[int]]
     return _round_client_keys(key, len(clusters), len(clusters[0]))
 
 
+def assemble_round(rng: np.random.Generator, key: jax.Array, data: ClientData,
+                   clusters: Sequence[Sequence[int]], pcfg: ProtocolConfig,
+                   tm: ThreatModel, t: int):
+    """One round's complete host-side payload: stacked batches, derived
+    per-client keys and the round's AttackVec.  THE single copy of the
+    RNG/key consumption order — both the synchronous path and the
+    RoundFeeder's background thread call this, so the bit-identical
+    prefetch-on/off contract is structural rather than test-enforced.
+    Returns (advanced_key, (xs, ys, avec, keys))."""
+    xs, ys = assemble_round_batches(rng, data, clusters, pcfg)
+    key, keys = round_client_keys(key, clusters)
+    avec = tm.attack_vec_for_clusters(clusters, t)
+    return key, (xs, ys, avec, keys)
+
+
 # ---------------------------------------------------------------------------
-# the compiled round program
+# the compiled round program (single source of truth: core/runner.py)
 # ---------------------------------------------------------------------------
 
 def _round_body(module: SplitModule, lr: float, gamma: Pytree, phi: Pytree,
                 xs, ys, avec, keys, x0, y0):
-    """All R clusters' client chains + shared-set validation, vmapped.
+    """All R clusters' client chains + shared-set validation — a thin adapter
+    over the RoundRunner's :func:`~repro.core.runner.cluster_map` (the one
+    copy of the round math) keeping the historical flat signature.
 
     xs/ys: (R, M_bar, E, B, ...); avec leaves and keys: (R, M_bar, ...).
     Returns (gammas, phis, train_losses (R, M_bar), val_losses (R,),
     val_acts (R, D_o, d_c)) — the R candidate round outcomes.
     """
-
-    def one_cluster(xs_c, ys_c, av_c, keys_c):
-        def per_client(carry, inp):
-            g, p = carry
-            x, y, av, k = inp
-            g, p, loss = client_update_vec_impl(module, av, g, p, (x, y), lr, k)
-            return (g, p), loss
-
-        (g, p), losses = jax.lax.scan(per_client, (gamma, phi),
-                                      (xs_c, ys_c, av_c, keys_c))
-        acts = module.client_forward(g, x0)
-        vloss = module.ap_loss(p, acts, y0)
-        return g, p, losses, vloss, acts
-
-    return jax.vmap(one_cluster)(xs, ys, avec, keys)
+    (gs, ps), losses, vlosses, vacts = cluster_map(
+        protocol_round_spec(module, lr), (gamma, phi),
+        (xs, ys, avec, keys), (x0, y0))
+    return gs, ps, losses, vlosses, vacts
 
 
 batched_round = partial(jax.jit, static_argnums=(0, 1))(_round_body)
-
-
-def onehot_select(stacked: Pytree, sel: jnp.ndarray) -> Pytree:
-    """Pick index ``sel`` along each leaf's leading axis via a one-hot
-    contraction: lowers to one masked reduction per leaf instead of the
-    gather+full-replicate path GSPMD emits for dynamic indexing.  The mask is
-    applied with ``jnp.where`` rather than multiplication so Inf/NaN in
-    *unselected* slots (e.g. a diverged malicious cluster) cannot poison the
-    selected values through ``0 * inf = nan``."""
-
-    def pick(x):
-        mask = (jnp.arange(x.shape[0]) == sel).reshape((-1,) + (1,) * (x.ndim - 1))
-        masked = jnp.where(mask, x.astype(jnp.float32), 0.0)
-        return jnp.sum(masked, axis=0).astype(x.dtype)
-
-    return jax.tree.map(pick, stacked)
 
 
 # ---------------------------------------------------------------------------
@@ -142,17 +141,24 @@ def onehot_select(stacked: Pytree, sel: jnp.ndarray) -> Pytree:
 def train_round_batched(module: SplitModule, theta, clusters, data: ClientData,
                         pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                         rng: np.random.Generator, key: jax.Array, meter: CommMeter,
-                        d_c: int, x0, y0) -> Tuple[jax.Array, List[Dict[str, Any]]]:
+                        d_c: int, x0, y0, placement: str = "vmap",
+                        prefetched=None) -> Tuple[jax.Array, List[Dict[str, Any]]]:
     """Batched replacement for the sequential per-cluster loop of
     ``run_pigeon``: one compiled call produces all R candidate
     (gamma, phi, val_loss, val_acts) tuples.  The threat model's per-round
     attack state arrives as AttackVec *data*, so heterogeneous mixtures and
-    schedule phases reuse the same compiled program."""
-    xs, ys = assemble_round_batches(rng, data, clusters, pcfg)
-    key, keys = round_client_keys(key, clusters)
-    avec = tm.attack_vec_for_clusters(clusters, t)
-    gs, ps, losses, vlosses, vacts = batched_round(
-        module, pcfg.lr, theta[0], theta[1], xs, ys, avec, keys, x0, y0)
+    schedule phases reuse the same compiled program; ``placement`` picks the
+    RoundRunner's device mapping (single-device vmap or the cluster axis
+    sharded over a host/pod mesh).  ``prefetched`` carries a round payload
+    assembled ahead of time by the RoundFeeder (``data/pipeline.py``) —
+    when given, the RNG/key streams were already consumed by the feeder
+    thread in this exact order."""
+    if prefetched is None:
+        key, prefetched = assemble_round(rng, key, data, clusters, pcfg, tm, t)
+    xs, ys, avec, keys = prefetched
+    (gs, ps), losses, vlosses, vacts = protocol_runner(
+        module, pcfg.lr, placement).candidates(
+        theta, (xs, ys, avec, keys), (x0, y0))
 
     d_cl = _count_params(theta[0])
     for cluster in clusters:
@@ -178,14 +184,13 @@ def train_cluster_batched(module: SplitModule, theta, cluster, data: ClientData,
                           meter: CommMeter, d_c: int
                           ) -> Tuple[jax.Array, Pytree, Pytree, float]:
     """One cluster's client chain as a single compiled call (used for the
-    Pigeon-SL+ sub-rounds).  Key/RNG consumption matches the sequential
+    Pigeon-SL+ sub-rounds; always the vmap placement — a single cluster has
+    no cluster axis to shard).  Key/RNG consumption matches the sequential
     ``split(key)`` + ``train_cluster`` pair exactly."""
-    xs, ys = assemble_round_batches(rng, data, [cluster], pcfg)
-    key, keys = round_client_keys(key, [cluster])
-    avec = tm.attack_vec_for_clusters([cluster], t)
-    gs, ps, losses, _, _ = batched_round(
-        module, pcfg.lr, theta[0], theta[1], xs, ys, avec, keys,
-        jnp.asarray(data.x0[:1]), jnp.asarray(data.y0[:1]))
+    key, payload = assemble_round(rng, key, data, [cluster], pcfg, tm, t)
+    (gs, ps), losses, _, _ = protocol_runner(module, pcfg.lr, "vmap").candidates(
+        theta, payload,
+        (jnp.asarray(data.x0[:1]), jnp.asarray(data.y0[:1])))
     d_cl = _count_params(theta[0])
     for j in range(len(cluster)):
         account_client_turn(meter, pcfg, d_c, d_cl, handoff=j < len(cluster) - 1)
@@ -343,12 +348,12 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
                       for i in range(len(seeds))]
         xs, ys, key_rows, avecs = [], [], [], []
         for i in range(len(seeds)):
-            x_i, y_i = assemble_round_batches(rngs[i], data, clusters_s[i], pcfg)
-            keys[i], krow = round_client_keys(keys[i], clusters_s[i])
+            keys[i], (x_i, y_i, avec_i, krow) = assemble_round(
+                rngs[i], keys[i], data, clusters_s[i], pcfg, tm, t)
             xs.append(x_i)
             ys.append(y_i)
             key_rows.append(krow)
-            avecs.append(tm.attack_vec_for_clusters(clusters_s[i], t))
+            avecs.append(avec_i)
         avec = jax.tree.map(lambda *ls: jnp.stack(ls), *avecs)
         gammas, phis, vlosses, sels, tlosses = sweep_round(
             module, pcfg.lr, thetas[0], thetas[1],

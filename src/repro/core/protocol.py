@@ -105,9 +105,18 @@ def _sample_batches(rng: np.random.Generator, x: np.ndarray, y: np.ndarray,
 ENGINES = ("sequential", "batched")
 
 
-def _check_engine(engine: str) -> None:
+def _check_engine(engine: str, placement: str = "vmap",
+                  prefetch: int = 0) -> None:
     if engine not in ENGINES:
         raise ValueError(f"engine={engine!r} must be one of {ENGINES}")
+    from .runner import check_placement
+    check_placement(placement)
+    if placement != "vmap" and engine != "batched":
+        raise ValueError(f"placement={placement!r} requires engine='batched' "
+                         f"(the sequential oracle has no cluster axis to place)")
+    if prefetch > 0 and engine != "batched":
+        raise ValueError(f"prefetch={prefetch} requires engine='batched' "
+                         f"(the sequential oracle assembles per client turn)")
 
 
 def account_client_turn(meter: CommMeter, pcfg: ProtocolConfig, d_c: int,
@@ -202,7 +211,8 @@ def cut_width(module: SplitModule, gamma, x0) -> int:
 def _train_round(module: SplitModule, theta, clusters, data: ClientData,
                  pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                  rng: np.random.Generator, key: jax.Array, meter: CommMeter,
-                 d_c: int, x0, y0, engine: str):
+                 d_c: int, x0, y0, engine: str, placement: str = "vmap",
+                 prefetched=None):
     """Train all R clusters of round t from the same theta^t.  Returns
     (key', results) where results[r] holds gamma/phi/vloss/vacts/cluster/
     train_loss for cluster r.  Both engines consume the numpy RNG and the JAX
@@ -210,7 +220,8 @@ def _train_round(module: SplitModule, theta, clusters, data: ClientData,
     if engine == "batched":
         from .engine import train_round_batched
         return train_round_batched(module, theta, clusters, data, pcfg,
-                                   tm, t, rng, key, meter, d_c, x0, y0)
+                                   tm, t, rng, key, meter, d_c, x0, y0,
+                                   placement=placement, prefetched=prefetched)
     results = []
     for cluster in clusters:
         key, sub = jax.random.split(key)
@@ -226,9 +237,26 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                plus: bool = False, verbose: bool = False,
                checkpoint_path: Optional[str] = None, resume: bool = False,
-               engine: str = "sequential",
+               engine: str = "sequential", placement: str = "vmap",
+               prefetch: int = 0,
                threat_model: Optional[ThreatModel] = None) -> History:
-    _check_engine(engine)
+    """Pigeon-SL (Algorithm 1).  Execution knobs beyond the paper:
+
+    * ``engine`` — ``"sequential"`` (reference oracle) or ``"batched"`` (one
+      compiled program per round via the RoundRunner).
+    * ``placement`` — batched engine only: ``"vmap"`` (cluster axis vmapped
+      on one device) or ``"sharded"`` (cluster axis laid over a device mesh).
+    * ``prefetch`` — batched engine only: double-buffer host-side round
+      assembly (batch gathering, key derivation, device transfer) ``prefetch``
+      rounds ahead on a background thread (``data/pipeline.py::RoundFeeder``).
+      The RNG/key consumption order is preserved exactly, so the trajectory
+      is bit-identical to ``prefetch=0``.  The feeder bounds its depth to
+      zero — synchronous assembly — whenever sampling depends on the previous
+      round's outcome: Pigeon-SL+ sub-rounds sample the *selected* cluster,
+      and param-tamper threat models consume the key stream at selection
+      time, so both fall back transparently.
+    """
+    _check_engine(engine, placement, prefetch)
     tm = resolve_threat_model(malicious, attack, threat_model)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
@@ -253,86 +281,114 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     d_cl = _count_params(gamma0)
     d_c = cut_width(module, gamma0, data.x0)
 
-    for t in range(start_round, pcfg.T):
-        meter = CommMeter()
-        clusters = make_clusters(rng, pcfg.M, pcfg.R)
-        key, results = _train_round(module, theta, clusters, data, pcfg, tm,
-                                    t, rng, key, meter, d_c, x0, y0, engine)
-        for _ in results:
-            account_validation(meter, d_o, d_c)
+    # Double-buffered host pipeline: assembly of round t+1 overlaps device
+    # execution of round t.  Depth is bounded to zero (synchronous) at the
+    # phase boundaries where sampling depends on round t's outcome — the
+    # Pigeon-SL+ sub-rounds resample the selected cluster, and param-tamper
+    # threat models split the protocol key during selection.
+    feeder = None
+    if engine == "batched" and prefetch > 0 and not plus \
+            and not tm.has_param_tamper:
+        from ..data.pipeline import RoundFeeder
+        from .engine import assemble_round
 
-        order = np.argsort([res["vloss"] for res in results])
-        detection_events = 0
-        selected = None
-        for cand in order:
-            res = results[cand]
-            last_client = res["cluster"][-1]
-            g_sel, p_sel = res_params(res)
-            handed = g_sel
-            pt = tm.param_attack_for(last_client, t)
-            if pt is not None:
-                key, sub = jax.random.split(key)
-                handed = atk.tamper_params(pt, g_sel, sub)
-            if pcfg.tamper_check:
-                # next-round first clients re-transmit g(x0, gamma_received);
-                # >=1 of the R recipients is honest, so a tampered handoff is
-                # always visible against the validation-time activations.
-                recv = handoff_activations(module, handed, x0)
-                meter.validation_floats += pcfg.R * d_o * d_c
-                meter.client_passes += pcfg.R * d_o
-                ok, dist = check_handoff(res_vacts(res), [recv], pcfg.tamper_tol)
-                if not ok:
-                    detection_events += 1
-                    continue      # discard tampered cluster, reselect
-            selected = cand
-            theta = (handed, p_sel)
-            break
-        if selected is None:      # every cluster tampered: keep theta^t
-            selected = int(order[0])
+        def _make_round(t, _state={"key": key}):
+            clusters = make_clusters(rng, pcfg.M, pcfg.R)
+            _state["key"], payload = assemble_round(
+                rng, _state["key"], data, clusters, pcfg, tm, t)
+            return clusters, payload
 
-        sel_res = results[selected]
-        meter.param_floats += pcfg.R * d_cl      # broadcast to next first clients
+        feeder = RoundFeeder(_make_round, start_round, pcfg.T, depth=prefetch)
 
-        # Pigeon-SL+: R-1 extra sub-rounds on the selected cluster
-        if plus:
-            for _ in range(pcfg.R - 1):
-                if engine == "batched":
-                    from .engine import train_cluster_batched
-                    key, g, p, _ = train_cluster_batched(
-                        module, theta, sel_res["cluster"], data, pcfg, tm,
-                        t, rng, key, meter, d_c)
-                else:
+    try:
+        for t in range(start_round, pcfg.T):
+            meter = CommMeter()
+            if feeder is not None:
+                clusters, prefetched = feeder.get(t)
+            else:
+                clusters = make_clusters(rng, pcfg.M, pcfg.R)
+                prefetched = None
+            key, results = _train_round(module, theta, clusters, data, pcfg,
+                                        tm, t, rng, key, meter, d_c, x0, y0,
+                                        engine, placement, prefetched)
+            for _ in results:
+                account_validation(meter, d_o, d_c)
+
+            order = np.argsort([res["vloss"] for res in results])
+            detection_events = 0
+            selected = None
+            for cand in order:
+                res = results[cand]
+                last_client = res["cluster"][-1]
+                g_sel, p_sel = res_params(res)
+                handed = g_sel
+                pt = tm.param_attack_for(last_client, t)
+                if pt is not None:
                     key, sub = jax.random.split(key)
-                    g, p, _ = train_cluster(module, theta[0], theta[1],
-                                            sel_res["cluster"], data, pcfg,
-                                            tm, t, rng, sub, meter, d_c)
-                theta = (g, p)
-                meter.param_floats += _count_params(g)   # subround handoff to 1st client
+                    handed = atk.tamper_params(pt, g_sel, sub)
+                if pcfg.tamper_check:
+                    # next-round first clients re-transmit g(x0, gamma_received);
+                    # >=1 of the R recipients is honest, so a tampered handoff is
+                    # always visible against the validation-time activations.
+                    recv = handoff_activations(module, handed, x0)
+                    meter.validation_floats += pcfg.R * d_o * d_c
+                    meter.client_passes += pcfg.R * d_o
+                    ok, dist = check_handoff(res_vacts(res), [recv], pcfg.tamper_tol)
+                    if not ok:
+                        detection_events += 1
+                        continue      # discard tampered cluster, reselect
+                selected = cand
+                theta = (handed, p_sel)
+                break
+            if selected is None:      # every cluster tampered: keep theta^t
+                selected = int(order[0])
 
-        rec = dict(
-            round=t,
-            clusters=clusters,
-            val_losses=[res["vloss"] for res in results],
-            train_losses=[res["train_loss"] for res in results],
-            selected=selected,
-            selected_honest=cluster_is_honest(sel_res["cluster"], tm.malicious),
-            honest_cluster_exists=any(cluster_is_honest(c, tm.malicious)
-                                      for c in clusters),
-            detections=detection_events,
-            comm=dataclasses.asdict(meter),
-        )
-        if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
-            rec["test_acc"] = evaluate(module, theta[0], theta[1],
-                                       data.x_test, data.y_test, pcfg.eval_batch)
-        hist.rounds.append(rec)
-        if checkpoint_path is not None:
-            from ..checkpoint import save_checkpoint
-            save_checkpoint(checkpoint_path, theta, {"round": t})
-        if verbose:
-            acc = rec.get("test_acc", float("nan"))
-            print(f"[pigeon{'+' if plus else ''}] t={t:3d} acc={acc:.4f} "
-                  f"sel={selected} honest={rec['selected_honest']} "
-                  f"vloss={rec['val_losses']}")
+            sel_res = results[selected]
+            meter.param_floats += pcfg.R * d_cl      # broadcast to next first clients
+
+            # Pigeon-SL+: R-1 extra sub-rounds on the selected cluster
+            if plus:
+                for _ in range(pcfg.R - 1):
+                    if engine == "batched":
+                        from .engine import train_cluster_batched
+                        key, g, p, _ = train_cluster_batched(
+                            module, theta, sel_res["cluster"], data, pcfg, tm,
+                            t, rng, key, meter, d_c)
+                    else:
+                        key, sub = jax.random.split(key)
+                        g, p, _ = train_cluster(module, theta[0], theta[1],
+                                                sel_res["cluster"], data, pcfg,
+                                                tm, t, rng, sub, meter, d_c)
+                    theta = (g, p)
+                    meter.param_floats += _count_params(g)   # subround handoff to 1st client
+
+            rec = dict(
+                round=t,
+                clusters=clusters,
+                val_losses=[res["vloss"] for res in results],
+                train_losses=[res["train_loss"] for res in results],
+                selected=selected,
+                selected_honest=cluster_is_honest(sel_res["cluster"], tm.malicious),
+                honest_cluster_exists=any(cluster_is_honest(c, tm.malicious)
+                                          for c in clusters),
+                detections=detection_events,
+                comm=dataclasses.asdict(meter),
+            )
+            if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+                rec["test_acc"] = evaluate(module, theta[0], theta[1],
+                                           data.x_test, data.y_test, pcfg.eval_batch)
+            hist.rounds.append(rec)
+            if checkpoint_path is not None:
+                from ..checkpoint import save_checkpoint
+                save_checkpoint(checkpoint_path, theta, {"round": t})
+            if verbose:
+                acc = rec.get("test_acc", float("nan"))
+                print(f"[pigeon{'+' if plus else ''}] t={t:3d} acc={acc:.4f} "
+                      f"sel={selected} honest={rec['selected_honest']} "
+                      f"vloss={rec['val_losses']}")
+    finally:
+        if feeder is not None:
+            feeder.close()
     return hist
 
 
@@ -340,12 +396,17 @@ def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                     malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                     verbose: bool = False, checkpoint_path: Optional[str] = None,
                     resume: bool = False, engine: str = "sequential",
+                    placement: str = "vmap", prefetch: int = 0,
                     threat_model: Optional[ThreatModel] = None) -> History:
     """Pigeon-SL+ (throughput-matched variant): ``run_pigeon`` with the R-1
-    extra selected-cluster sub-rounds enabled."""
+    extra selected-cluster sub-rounds enabled.  ``prefetch`` is accepted for
+    API symmetry but bounded to synchronous assembly — the sub-rounds sample
+    the selected cluster, so round t+1's host work cannot start before round
+    t's selection."""
     return run_pigeon(module, data, pcfg, malicious, attack, plus=True,
                       verbose=verbose, checkpoint_path=checkpoint_path,
-                      resume=resume, engine=engine, threat_model=threat_model)
+                      resume=resume, engine=engine, placement=placement,
+                      prefetch=prefetch, threat_model=threat_model)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,312 @@
+"""Device-placement-aware Pigeon round runner.
+
+Pigeon-SL's global round is embarrassingly parallel across the R = N + 1
+clusters: every cluster trains from the same theta^t, validates on the shared
+set D_o, and only the argmin-loss winner survives.  Before this module the
+repo carried the round in two divergent places — the protocol-level batched
+engine (``core/engine.py``, vmap over clusters on one device) and the
+launch-level pod-sharded step (``launch/steps.py``, shard_map over the "pod"
+mesh axis) — which duplicated the train + validate + argmin + broadcast
+program and could not share fixes.
+
+:class:`RoundRunner` is the single source of truth.  A :class:`RoundSpec`
+supplies the two pure per-cluster programs (``train_cluster`` and
+``validate``); the runner compiles the cluster-parallel round under a
+pluggable *placement policy*:
+
+  * ``placement="vmap"``    — ``jax.vmap`` over the cluster axis, one device
+                              (the protocol engine's historical strategy);
+  * ``placement="sharded"`` — the cluster axis laid over a mesh axis
+                              (default ``"pod"``) via ``shard_map``; each
+                              shard runs a vmap over its local cluster slice,
+                              so R need not equal the device count (any mesh
+                              whose cluster-axis size divides R works).
+
+Both placements run the *same* ``cluster_map`` body, so they are numerically
+equivalent by construction — the CPU equivalence suite
+(``tests/test_runner.py``) checks selection, losses and CommMeter history
+against the sequential oracle under a forced 8-virtual-device host mesh.
+
+Consumers:
+
+  * ``core/engine.py`` binds :func:`protocol_round_spec` (client-chain scan +
+    ``AttackVec`` threat-model lanes + shared-set validation) and uses
+    :meth:`RoundRunner.candidates` — selection stays on the host because the
+    tamper-resilient handoff check (Section III-C) may reject the argmin.
+  * ``launch/steps.py`` binds a ``Model``-level spec and uses
+    :meth:`RoundRunner.round_fn` — the full round (selection + winner
+    broadcast inside the compiled program), lowered under GSPMD/manual pod
+    sharding by the dry-run driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:                                    # jax >= 0.5: public API, new kwargs
+    _shard_map = jax.shard_map          # type: ignore[attr-defined]
+    _SHARD_MAP_LEGACY = False
+except AttributeError:                  # jax 0.4.x: experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_LEGACY = True
+
+Pytree = Any
+
+PLACEMENTS = ("vmap", "sharded")
+
+
+def check_placement(placement: str) -> None:
+    if placement not in PLACEMENTS:
+        raise ValueError(f"placement={placement!r} must be one of {PLACEMENTS}")
+
+
+# ---------------------------------------------------------------------------
+# shared primitives
+# ---------------------------------------------------------------------------
+
+def onehot_select(stacked: Pytree, sel: jnp.ndarray) -> Pytree:
+    """Pick index ``sel`` along each leaf's leading axis via a one-hot
+    contraction: lowers to one masked reduction per leaf instead of the
+    gather+full-replicate path GSPMD emits for dynamic indexing.  The mask is
+    applied with ``jnp.where`` rather than multiplication so Inf/NaN in
+    *unselected* slots (e.g. a diverged malicious cluster) cannot poison the
+    selected values through ``0 * inf = nan``."""
+
+    def pick(x):
+        mask = (jnp.arange(x.shape[0]) == sel).reshape((-1,) + (1,) * (x.ndim - 1))
+        masked = jnp.where(mask, x.astype(jnp.float32), 0.0)
+        return jnp.sum(masked, axis=0).astype(x.dtype)
+
+    return jax.tree.map(pick, stacked)
+
+
+def broadcast_winner(winner: Pytree, stacked: Pytree) -> Pytree:
+    """The paper's winner hand-off: every cluster slot of the next round
+    starts from the selected cluster's parameters."""
+    return jax.tree.map(
+        lambda w, full: jnp.broadcast_to(w[None], full.shape).astype(full.dtype),
+        winner, stacked)
+
+
+@lru_cache(maxsize=None)
+def cluster_mesh(r: int, max_devices: Optional[int] = None) -> Mesh:
+    """1-D ("pod",) mesh over the largest divisor of R that fits the
+    available devices — every shard then carries an equal R_local slice of
+    the cluster axis (R_local = 1 when R <= device count)."""
+    devs = jax.devices()
+    n = min(len(devs), max_devices if max_devices else len(devs))
+    while r % n:
+        n -= 1
+    return Mesh(np.array(devs[:n]), ("pod",))
+
+
+def _apply_shard_map(fn, mesh: Mesh, in_specs, out_specs, manual_axis: str):
+    """Version shim: jax 0.4.x experimental shard_map (check_rep/auto) vs the
+    jax >= 0.5 public API (check_vma/axis_names).  ``manual_axis`` is the
+    only manually-mapped axis; any other mesh axes stay GSPMD-auto."""
+    if _SHARD_MAP_LEGACY:
+        auto = frozenset(mesh.axis_names) - {manual_axis}
+        return _shard_map(fn, mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_rep=False, auto=auto)
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False, axis_names={manual_axis})
+
+
+# ---------------------------------------------------------------------------
+# the round program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoundSpec:
+    """The two pure per-cluster programs of one Pigeon round.
+
+    ``train_cluster(params, inputs) -> (params', train_aux)`` — one cluster's
+    whole training phase (for the protocol engine: the within-cluster client
+    chain; for the launch layer: one SPMD train step).
+
+    ``validate(params', val) -> (vloss, val_aux)`` — the shared-set
+    validation forward (Section III-C).  ``val_aux`` carries whatever the
+    consumer needs alongside the loss (the protocol engine keeps the cut
+    activations for the tamper check; the launch spec returns None).
+    """
+    train_cluster: Callable[[Pytree, Any], Tuple[Pytree, Any]]
+    validate: Callable[[Pytree, Any], Tuple[jnp.ndarray, Any]]
+
+
+def cluster_map(spec: RoundSpec, params: Pytree, inputs: Pytree, val: Pytree,
+                params_stacked: bool = False):
+    """Train + validate every cluster on the leading axis of ``inputs`` —
+    THE one copy of the Pigeon round math, shared by both placements (and by
+    the multi-seed sweep, which vmaps it once more over seeds).
+
+    Returns ``(params_R, train_aux_R, vlosses_R, val_aux_R)``.  When
+    ``params_stacked`` the params already carry the leading cluster axis
+    (each cluster trains its own replica, the launch-layer layout); otherwise
+    a single params pytree is broadcast into every cluster (the protocol
+    layout, where all clusters start from theta^t)."""
+
+    def one(params_r, inputs_r):
+        new_p, aux = spec.train_cluster(params_r, inputs_r)
+        vloss, vaux = spec.validate(new_p, val)
+        return new_p, aux, vloss, vaux
+
+    return jax.vmap(one, in_axes=(0 if params_stacked else None, 0))(params, inputs)
+
+
+class RoundRunner:
+    """Compiles a :class:`RoundSpec` under a placement policy.
+
+    Two entry levels:
+
+    * :meth:`candidates_fn` / :meth:`candidates` — all R candidate outcomes,
+      selection left to the caller (the protocol drivers' host-side
+      argmin + tamper-check loop).
+    * :meth:`round_fn` / :meth:`round` — the full round with argmin selection
+      and winner broadcast inside the compiled program (the launch-layer
+      ``pigeon_round_step`` contract: returns ``(rebro, vlosses, sel)``).
+
+    ``mesh`` is only consulted by the sharded placement; when omitted a 1-D
+    host mesh sized to the largest divisor of R is built per call shape
+    (:func:`cluster_mesh`).  ``cluster_axis`` names the mesh axis carrying
+    cluster parallelism; other axes stay GSPMD-auto, so the launch layer's
+    ("pod", "data", "model") meshes keep their data/model sharding."""
+
+    def __init__(self, spec: RoundSpec, *, placement: str = "vmap",
+                 mesh: Optional[Mesh] = None, cluster_axis: str = "pod",
+                 params_stacked: bool = False):
+        check_placement(placement)
+        self.spec = spec
+        self.placement = placement
+        self.mesh = mesh
+        self.cluster_axis = cluster_axis
+        self.params_stacked = params_stacked
+        self._jitted: dict = {}
+
+    # -- pure, traceable bodies (jit / lower externally) --------------------
+
+    def candidates_fn(self) -> Callable:
+        """(params, inputs, val) -> (params_R, train_aux_R, vlosses_R,
+        val_aux_R), all with leading cluster axis R."""
+        if self.placement == "vmap":
+            return lambda params, inputs, val: cluster_map(
+                self.spec, params, inputs, val, self.params_stacked)
+        return lambda params, inputs, val: self._sharded(
+            params, inputs, val, select=False)
+
+    def round_fn(self) -> Callable:
+        """(params, inputs, val) -> (rebro_params_R, vlosses_R, sel): the
+        full round with in-program argmin selection + winner broadcast."""
+        if self.placement == "vmap":
+            def round_body(params, inputs, val):
+                new_p, _, vlosses, _ = cluster_map(
+                    self.spec, params, inputs, val, self.params_stacked)
+                sel = jnp.argmin(vlosses)
+                rebro = broadcast_winner(onehot_select(new_p, sel), new_p)
+                return rebro, vlosses, sel
+            return round_body
+        return lambda params, inputs, val: self._sharded(
+            params, inputs, val, select=True)
+
+    # -- sharded placement --------------------------------------------------
+
+    def _sharded(self, params, inputs, val, select: bool):
+        ax = self.cluster_axis
+        r = jax.tree.leaves(inputs)[0].shape[0]
+        mesh = self.mesh if self.mesh is not None else cluster_mesh(r)
+        if r % mesh.shape[ax]:
+            raise ValueError(f"R={r} not divisible by mesh axis "
+                             f"{ax!r}={mesh.shape[ax]}")
+
+        def per_shard(params_s, inputs_s, val_s):
+            # params_s: the local R_local slice (stacked) or the full
+            # replicated pytree; inputs_s: the local cluster slice.
+            new_p, aux, vloss, vaux = cluster_map(
+                self.spec, params_s, inputs_s, val_s, self.params_stacked)
+            if not select:
+                return new_p, aux, vloss, vaux
+            losses = jax.lax.all_gather(vloss, ax, tiled=True)       # (R,)
+            sel = jnp.argmin(losses)
+            r_local = vloss.shape[0]
+            mine = (jax.lax.axis_index(ax) * r_local
+                    + jnp.arange(r_local)) == sel
+
+            def pick(x):
+                mask = mine.reshape((-1,) + (1,) * (x.ndim - 1))
+                local = jnp.sum(jnp.where(mask, x.astype(jnp.float32), 0.0),
+                                axis=0)
+                return jax.lax.psum(local, ax).astype(x.dtype)
+
+            rebro = broadcast_winner(jax.tree.map(pick, new_p), new_p)
+            return rebro, losses, sel
+
+        p_spec = P(ax) if self.params_stacked else P()
+        in_specs = (p_spec, P(ax), P())
+        out_specs = ((P(ax), P(), P()) if select
+                     else (P(ax), P(ax), P(ax), P(ax)))
+        fn = _apply_shard_map(per_shard, mesh, in_specs, out_specs, ax)
+        return fn(params, inputs, val)
+
+    # -- jitted convenience entry points ------------------------------------
+
+    def _compiled(self, which: str) -> Callable:
+        fn = self._jitted.get(which)
+        if fn is None:
+            body = self.candidates_fn() if which == "candidates" else self.round_fn()
+            fn = jax.jit(body)
+            self._jitted[which] = fn
+        return fn
+
+    def candidates(self, params, inputs, val):
+        return self._compiled("candidates")(params, inputs, val)
+
+    def round(self, params, inputs, val):
+        return self._compiled("round")(params, inputs, val)
+
+
+# ---------------------------------------------------------------------------
+# the protocol-level binding (SplitModule + AttackVec lanes)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def protocol_round_spec(module, lr: float) -> RoundSpec:
+    """Pigeon per-cluster programs over a ``SplitModule``: the within-cluster
+    client-chain scan with the AttackVec threat-model lanes from the
+    adversary subsystem (``inputs = (xs, ys, avec, keys)``, every leaf with
+    leading axis M_bar), and shared-set validation returning the cut
+    activations the tamper check compares against (``val = (x0, y0)``)."""
+    from .split import client_update_vec_impl
+
+    def train_cluster(theta, inputs):
+        xs_c, ys_c, av_c, keys_c = inputs
+        gamma, phi = theta
+
+        def per_client(carry, inp):
+            g, p = carry
+            x, y, av, k = inp
+            g, p, loss = client_update_vec_impl(module, av, g, p, (x, y), lr, k)
+            return (g, p), loss
+
+        (g, p), losses = jax.lax.scan(per_client, (gamma, phi),
+                                      (xs_c, ys_c, av_c, keys_c))
+        return (g, p), losses
+
+    def validate(theta, val):
+        g, p = theta
+        x0, y0 = val
+        acts = module.client_forward(g, x0)
+        return module.ap_loss(p, acts, y0), acts
+
+    return RoundSpec(train_cluster, validate)
+
+
+@lru_cache(maxsize=None)
+def protocol_runner(module, lr: float, placement: str = "vmap") -> RoundRunner:
+    """Cached per (module, lr, placement) so every round reuses one compiled
+    program — the protocol layout (theta broadcast into all clusters)."""
+    return RoundRunner(protocol_round_spec(module, lr), placement=placement)

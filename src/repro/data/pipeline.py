@@ -1,12 +1,18 @@
-"""Data pipeline: client sharding, shared validation set and batching.
+"""Data pipeline: client sharding, shared validation set, batching and the
+double-buffered host-side round feeder.
 
 The pipeline mirrors the paper's system model: client m holds a local shard
 D_m (i.i.d. from p(x, y)); the AP samples the shared/reference set D_o from
-the same distribution and broadcasts it before training."""
+the same distribution and broadcasts it before training.  The
+:class:`RoundFeeder` overlaps the host-side assembly of round t+1 (batch
+gathering, RNG/key derivation, device transfer) with device execution of
+round t — cluster selection is the protocol's only true sync point."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -82,3 +88,96 @@ def minibatches(rng: np.random.Generator, x: np.ndarray, y: np.ndarray,
     for _ in range(steps):
         idx = rng.integers(0, x.shape[0], size=batch)
         yield x[idx], y[idx]
+
+
+# ---------------------------------------------------------------------------
+# double-buffered host pipeline
+# ---------------------------------------------------------------------------
+
+class RoundFeeder:
+    """Double-buffered host-side round assembly.
+
+    ``make_round(t)`` — the consumer-supplied closure that samples one
+    round's payload (for Pigeon-SL: clusters, stacked mini-batches, derived
+    per-client keys, attack state) — is executed on ONE background thread
+    strictly in ascending-``t`` order.  That preserves the numpy-RNG and
+    JAX-key consumption order the sequential-oracle equivalence contract
+    depends on: the streams see exactly the calls the synchronous path would
+    make, just earlier in wall-clock time.  Device transfers issued inside
+    ``make_round`` (``jnp.asarray`` / ``jax.device_put``) are asynchronous,
+    so they overlap with the device executing the current round.
+
+    At most ``depth`` assembled rounds wait in the queue ahead of the
+    consumer (``depth=1`` is classic double buffering).  ``depth=0``
+    degrades to fully synchronous assembly — the bound the protocol drivers
+    apply at Pigeon-SL+ phase boundaries, where sub-round sampling depends
+    on the selected cluster and nothing may run ahead of selection.
+
+    Exceptions raised inside ``make_round`` are re-raised from :meth:`get`
+    at the round that failed.  Always :meth:`close` (or use as a context
+    manager) so an early exit unblocks the producer thread.
+    """
+
+    def __init__(self, make_round: Callable[[int], Any], start: int, stop: int,
+                 depth: int = 1):
+        self._make_round = make_round
+        self._next = start
+        self._thread: Optional[threading.Thread] = None
+        if depth <= 0 or stop <= start:
+            return
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._produce, args=(start, stop),
+            name="pigeon-round-feeder", daemon=True)
+        self._thread.start()
+
+    def _produce(self, start: int, stop: int) -> None:
+        for t in range(start, stop):
+            try:
+                item = (t, self._make_round(t), None)
+            except BaseException as e:  # noqa: BLE001 — relayed to consumer
+                item = (t, None, e)
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            if self._stop.is_set() or item[2] is not None:
+                return
+
+    def get(self, t: int) -> Any:
+        """Payload for round ``t``.  Rounds must be consumed in the same
+        ascending order they were scheduled."""
+        if self._next != t:
+            raise RuntimeError(f"RoundFeeder consumed out of order: "
+                               f"expected t={self._next}, got t={t}")
+        self._next = t + 1
+        if self._thread is None:            # depth=0: synchronous fallback
+            return self._make_round(t)
+        got_t, payload, err = self._q.get()
+        if err is not None:
+            raise err
+        if got_t != t:
+            raise RuntimeError(f"RoundFeeder produced t={got_t}, wanted t={t}")
+        return payload
+
+    def close(self) -> None:
+        """Stop the producer; safe to call repeatedly / after exhaustion."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        try:                                # unblock a producer stuck on put()
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+        self._thread = None
+
+    def __enter__(self) -> "RoundFeeder":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -140,8 +140,9 @@ def main() -> None:
     ap.add_argument("--save-hlo", default=None, metavar="DIR",
                     help="dump optimized HLO text per combo into DIR")
     ap.add_argument("--opt", action="append", default=[],
-                    help="named optimization(s): moe_shard, pigeon_psum, "
-                         "mlstm_bf16_state (repeatable)")
+                    help="named optimization(s): moe_shard, pigeon_shardmap, "
+                         "mlstm_bf16_state (repeatable; pigeon_psum retired "
+                         "— the one-hot psum broadcast is now built in)")
     ap.add_argument("--no-pigeon", action="store_true",
                     help="multi-pod train: lower plain data-parallel "
                          "train_step instead of pigeon_round_step (control)")

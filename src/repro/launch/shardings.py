@@ -162,3 +162,20 @@ def cache_shardings(cache_shape: Pytree, mesh: Mesh, batch: int,
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+def pigeon_round_shardings(stacked_params: Pytree, batches: Pytree,
+                           val_batch: Pytree, mesh: Mesh,
+                           cluster_axis: str = "pod") -> Tuple[Pytree, Pytree, Pytree]:
+    """The (params, batches, val) sharding triple of a Pigeon round step:
+    stacked cluster replicas and per-cluster batches over the cluster axis,
+    and the shared set D_o replicated across pods (every cluster validates
+    the same data — §III-C) but sharded over the data axis *within* a pod —
+    leaving it fully replicated makes GSPMD replicate the validation forward
+    once per device (§Perf hillclimb C it.4)."""
+    p_shard = param_shardings(stacked_params, mesh, cluster_axis=cluster_axis)
+    b_shard = batch_shardings(batches, mesh, cluster_axis=cluster_axis)
+    v_shard = jax.tree.map(
+        lambda x: NamedSharding(mesh, P("data", *([None] * (x.ndim - 1)))),
+        val_batch)
+    return p_shard, b_shard, v_shard

@@ -14,6 +14,12 @@ Four programs cover the assigned (arch x shape) grid:
                             of the winning parameters — the paper's entire
                             global round as one SPMD program.
 
+The pigeon round makers are thin adapters over
+``repro.core.runner.RoundRunner`` — this module only supplies the
+model-level train/validate binding (:func:`launch_round_spec`) and the
+sharding specs; the round body (train + validate + argmin + winner
+broadcast) is the same single source of truth the protocol engine runs.
+
 ``input_specs(arch, shape, mesh)`` builds the matching ShapeDtypeStruct
 stand-ins (weak-type-correct, shardable, no device allocation).
 """
@@ -26,8 +32,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from ..core.runner import RoundRunner, RoundSpec
 from ..models import build_model
 from ..models.config import ModelConfig
 from ..models.model import Model
@@ -109,54 +116,40 @@ def make_serve_step(model: Model) -> Callable:
     return serve_step
 
 
-def make_pigeon_round_step_shardmap(model: Model, mesh, lr: float = 1e-3,
-                                    n_clusters: int = 2) -> Callable:
-    """Cluster parallelism as a *manual* pod-axis shard_map (§Perf hillclimb
-    C iteration 3): each pod runs its cluster's un-vmapped train+validate
-    program (data/model axes stay GSPMD-auto), and the only cross-pod
-    collectives are the R-sized loss all-gather and the winner psum."""
-    from jax.sharding import PartitionSpec as P
+def launch_round_spec(model: Model, lr: float = 1e-3,
+                      constrain_val: bool = False) -> "RoundSpec":
+    """The launch-layer binding of the RoundRunner's RoundSpec: one SPMD
+    train step per cluster and the shared-set validation loss.  With
+    ``constrain_val`` the validation forward is pinned to the (auto) "data"
+    axis — leaving it unconstrained inside a manual pod shard_map makes
+    GSPMD replicate the forward per device (§Perf hillclimb C it.4)."""
     train = make_train_step(model, lr)
 
-    def per_pod(stacked_params, batch, val_batch):
-        # local leaves carry a leading cluster dim of size 1
-        params = jax.tree.map(lambda x: x[0], stacked_params)
-        batch = jax.tree.map(lambda x: x[0], batch)
-        new_params, _ = train(params, batch)
-        # keep the shared-set forward sharded over the (auto) data axis
-        val_batch = jax.tree.map(
-            lambda x: jax.lax.with_sharding_constraint(
-                x, P("data", *([None] * (x.ndim - 1)))), val_batch)
-        vloss, _ = model.loss(new_params, val_batch)
-        losses = jax.lax.all_gather(vloss, "pod")               # (R,)
-        sel = jnp.argmin(losses)
-        mine = (jax.lax.axis_index("pod") == sel)
-        winner = jax.tree.map(
-            lambda x: jax.lax.psum(
-                jnp.where(mine, x, jnp.zeros_like(x)).astype(jnp.float32),
-                "pod").astype(x.dtype),
-            new_params)
-        out = jax.tree.map(lambda x: x[None], winner)
-        return out, losses, sel
+    def validate(params, val_batch):
+        if constrain_val:
+            val_batch = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, P("data", *([None] * (x.ndim - 1)))), val_batch)
+        vloss, _ = model.loss(params, val_batch)
+        return vloss, None
 
-    def round_step(stacked_params, batches, val_batch):
-        p_specs = jax.tree.map(lambda _: P("pod"), stacked_params)
-        b_specs = jax.tree.map(lambda _: P("pod"), batches)
-        v_specs = jax.tree.map(lambda _: P(), val_batch)
-        fn = jax.shard_map(
-            per_pod, mesh=mesh,
-            in_specs=(p_specs, b_specs, v_specs),
-            out_specs=(jax.tree.map(lambda _: P("pod"), stacked_params),
-                       P(), P()),
-            check_vma=False,
-            axis_names={"pod"})
-        return fn(stacked_params, batches, val_batch)
-
-    return round_step
+    return RoundSpec(train, validate)
 
 
-def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3,
-                                n_clusters: int = 2) -> Callable:
+def make_pigeon_round_step_shardmap(model: Model, mesh,
+                                    lr: float = 1e-3) -> Callable:
+    """Cluster parallelism as a *manual* pod-axis shard_map (§Perf hillclimb
+    C iteration 3): each pod runs its cluster slice's train+validate program
+    (data/model axes stay GSPMD-auto), and the only cross-pod collectives
+    are the R-sized loss all-gather and the winner psum.  This is the
+    RoundRunner's ``placement="sharded"``; the vmap variant below shares the
+    same round body."""
+    runner = RoundRunner(launch_round_spec(model, lr, constrain_val=True),
+                         placement="sharded", mesh=mesh, params_stacked=True)
+    return runner.round_fn()
+
+
+def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3) -> Callable:
     """Beyond-paper Pigeon-SL+ round for the multi-pod mapping.
 
     Paper's Pigeon-SL+ trains ONLY the selected cluster for R-1 extra
@@ -167,7 +160,7 @@ def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3,
     the paper's semantics (extra updates flow only into the winning
     cluster's parameters).
     """
-    base = make_pigeon_round_step(model, lr, n_clusters)
+    base = make_pigeon_round_step(model, lr)
 
     def plus_round(stacked_params, batches, val_batch, plus_batches):
         rebro, vlosses, sel = base(stacked_params, batches, val_batch)
@@ -192,47 +185,26 @@ def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3,
     return plus_round
 
 
-def make_pigeon_round_step(model: Model, lr: float = 1e-3, n_clusters: int = 2,
-                           psum_select: bool = False) -> Callable:
-    """One Pigeon-SL global round over R stacked cluster replicas.
+def make_pigeon_round_step(model: Model, lr: float = 1e-3) -> Callable:
+    """One Pigeon-SL global round over R stacked cluster replicas (R is
+    inferred from the stacked leading dim at trace time).
 
     stacked_params: every leaf has leading dim R (sharded over "pod").
     batches:        (R, B, S) per-cluster token batches.
     val_batch:      shared D_o batch, replicated — each cluster evaluates the
                     same reference set (Section III-C).
     Returns (new_stacked_params, val_losses, selected_idx).
+
+    Thin adapter over the RoundRunner's vmap placement — train + validate +
+    argmin + winner broadcast all come from ``core/runner.py``, the same
+    body the protocol engine runs.  The winner broadcast is always the
+    one-hot psum contraction (a single masked all-reduce per leaf instead of
+    the gather+full-replicate path GSPMD emits for dynamic indexing), which
+    retired the "pigeon_psum" named optimization — it is the only strategy.
     """
-    train = make_train_step(model, lr)
-
-    def one_cluster(params, batch, val_batch):
-        new_params, _ = train(params, batch)
-        vloss, _ = model.loss(new_params, val_batch)
-        return new_params, vloss
-
-    def round_step(stacked_params, batches, val_batch):
-        new_stacked, vlosses = jax.vmap(one_cluster, in_axes=(0, 0, None))(
-            stacked_params, batches, val_batch)
-        sel = jnp.argmin(vlosses)
-        # the paper's "selected cluster shares its params with the first
-        # clients of the next round" collective, across the pod axis.
-        if psum_select:
-            # one-hot contraction over the cluster axis: lowers to a single
-            # masked all-reduce per leaf instead of the gather+full-replicate
-            # path GSPMD emits for dynamic indexing (§Perf hillclimb C).
-            # Shared with the protocol-level batched engine's sweep selection.
-            from ..core.engine import onehot_select
-            selected = onehot_select(new_stacked, sel)
-            rebro = jax.tree.map(
-                lambda s, full: jnp.broadcast_to(s[None], full.shape).astype(full.dtype),
-                selected, new_stacked)
-        else:
-            selected = jax.tree.map(lambda x: jnp.take(x, sel, axis=0), new_stacked)
-            rebro = jax.tree.map(
-                lambda s, full: jnp.broadcast_to(s[None], full.shape).astype(full.dtype),
-                selected, new_stacked)
-        return rebro, vlosses, sel
-
-    return round_step
+    runner = RoundRunner(launch_round_spec(model, lr), placement="vmap",
+                         params_stacked=True)
+    return runner.round_fn()
 
 
 # ---------------------------------------------------------------------------
@@ -269,9 +241,6 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
     if shape.kind == "train":
         if pigeon_clusters:
             r = pigeon_clusters
-            p_shard = shd.param_shardings(
-                jax.tree.map(lambda x: jax.ShapeDtypeStruct((r,) + x.shape, x.dtype),
-                             params_shape), mesh, cluster_axis="pod")
             stacked = jax.tree.map(lambda x: jax.ShapeDtypeStruct((r,) + x.shape, x.dtype),
                                    params_shape)
             # "pigeon_batch_split": each cluster trains global_batch/R, so
@@ -282,20 +251,13 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
                              else shape.global_batch)
             batches = batch_struct(cfg, dataclasses.replace(
                 shape, global_batch=per_cluster_b), cluster_dim=r)
-            b_shard = shd.batch_shardings(batches, mesh, cluster_axis="pod")
             val_shape = dataclasses.replace(shape, global_batch=max(
                 16, shape.global_batch // 8))
             val_batch = batch_struct(cfg, val_shape)
-            # the shared set D_o is replicated across pods (every cluster
-            # validates the same data — §III-C) but sharded over the data
-            # axis *within* a pod; leaving it fully replicated makes GSPMD
-            # replicate the validation forward 16x (§Perf hillclimb C it.4)
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            v_shard = jax.tree.map(
-                lambda x: NamedSharding(mesh, P("data", *([None] * (x.ndim - 1)))),
-                val_batch)
+            p_shard, b_shard, v_shard = shd.pigeon_round_shardings(
+                stacked, batches, val_batch, mesh, cluster_axis="pod")
             if "pigeon_plus" in cfg.optimizations:
-                fn = make_pigeon_plus_round_step(model, lr, r)
+                fn = make_pigeon_plus_round_step(model, lr)
                 plus_batches = batch_struct(cfg, dataclasses.replace(
                     shape, global_batch=per_cluster_b), cluster_dim=r)
                 pb_shard = shd.batch_shardings(plus_batches, mesh,
@@ -303,10 +265,9 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
                 return LoweringSpec(fn, (stacked, batches, val_batch, plus_batches),
                                     (p_shard, b_shard, v_shard, pb_shard), None)
             if "pigeon_shardmap" in cfg.optimizations:
-                fn = make_pigeon_round_step_shardmap(model, mesh, lr, r)
+                fn = make_pigeon_round_step_shardmap(model, mesh, lr)
             else:
-                fn = make_pigeon_round_step(model, lr, r,
-                                            psum_select="pigeon_psum" in cfg.optimizations)
+                fn = make_pigeon_round_step(model, lr)
             return LoweringSpec(fn, (stacked, batches, val_batch),
                                 (p_shard, b_shard, v_shard), None)
         p_shard = shd.param_shardings(params_shape, mesh)

@@ -61,8 +61,9 @@ class ModelConfig:
     # named beyond-baseline optimizations (set by the launch layer only —
     # they emit mesh-axis sharding constraints and require a mesh context):
     #   "moe_shard"    — token/capacity-sharded MoE dispatch (all-to-all)
-    #   "pigeon_psum"  — one-hot psum winner broadcast in pigeon_round_step
     #   "mlstm_bf16_state" — bf16 inter-chunk mLSTM state carries
+    # ("pigeon_psum" retired: the one-hot psum winner broadcast is now the
+    #  RoundRunner's only strategy — see core/runner.py)
     optimizations: Tuple[str, ...] = ()
 
     # provenance

@@ -108,7 +108,7 @@ def test_pigeon_round_step_selects_argmin():
                "labels": jnp.zeros((r, 2, 16), jnp.int32)}
     val = {"tokens": jnp.ones((2, 16), jnp.int32),
            "labels": jnp.ones((2, 16), jnp.int32)}
-    step = jax.jit(make_pigeon_round_step(model, lr=0.0, n_clusters=r))
+    step = jax.jit(make_pigeon_round_step(model, lr=0.0))
     new_stacked, vlosses, sel = step(stacked, batches, val)
     assert vlosses.shape == (r,)
     assert int(sel) == int(jnp.argmin(vlosses))

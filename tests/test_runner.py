@@ -1,0 +1,299 @@
+"""RoundRunner placements + double-buffered host pipeline.
+
+Equivalence contract: the sharded placement (cluster axis laid over a
+("pod",) host mesh via shard_map) must reproduce the vmap placement and the
+sequential oracle — same selection every round, validation losses within
+float tolerance, bit-identical CommMeter counts — and the prefetching
+RoundFeeder must leave the trajectory bit-identical to synchronous assembly.
+
+The sharded tests run at any device count (the runner sizes the mesh to the
+largest divisor of R that fits); the multi-device assertions only engage
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — CI runs this
+file a second time under that flag so the shard_map path cannot rot.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HONEST, LABEL_FLIP, Attack, ProtocolConfig,
+                        run_pigeon, run_pigeon_plus)
+from repro.core.engine import assemble_round_batches, sample_batch_idx
+from repro.core.runner import (PLACEMENTS, RoundRunner, RoundSpec, cluster_map,
+                               cluster_mesh, onehot_select)
+from repro.data.pipeline import RoundFeeder
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(the dedicated CI multi-device step sets it)")
+
+
+def assert_histories_equivalent(h_a, h_b, exact=False):
+    assert len(h_a.rounds) == len(h_b.rounds)
+    for ra, rb in zip(h_a.rounds, h_b.rounds):
+        assert ra["clusters"] == rb["clusters"]
+        assert ra["selected"] == rb["selected"], (ra["round"], ra, rb)
+        assert ra["comm"] == rb["comm"]          # bit-identical float counts
+        if exact:
+            assert ra["val_losses"] == rb["val_losses"]
+            assert ra.get("test_acc") == rb.get("test_acc")
+        else:
+            np.testing.assert_allclose(ra["val_losses"], rb["val_losses"],
+                                       rtol=2e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sharded placement vs vmap placement vs sequential oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("malicious,attack", [(set(), HONEST),
+                                              ({1}, Attack(LABEL_FLIP))],
+                         ids=["honest", "label_flip"])
+def test_sharded_matches_vmap(tiny_task, tiny_pcfg, malicious, attack):
+    data, module = tiny_task
+    h_v = run_pigeon(module, data, tiny_pcfg, malicious=malicious,
+                     attack=attack, engine="batched", placement="vmap")
+    h_s = run_pigeon(module, data, tiny_pcfg, malicious=malicious,
+                     attack=attack, engine="batched", placement="sharded")
+    assert_histories_equivalent(h_v, h_s)
+
+
+def test_sharded_matches_sequential_oracle(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    h_seq = run_pigeon(module, data, tiny_pcfg, malicious={1},
+                       attack=Attack(LABEL_FLIP), engine="sequential")
+    h_s = run_pigeon(module, data, tiny_pcfg, malicious={1},
+                     attack=Attack(LABEL_FLIP), engine="batched",
+                     placement="sharded")
+    assert_histories_equivalent(h_seq, h_s)
+
+
+def test_placement_validation(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    with pytest.raises(ValueError, match="placement"):
+        run_pigeon(module, data, tiny_pcfg, engine="batched", placement="warp")
+    with pytest.raises(ValueError, match="batched"):
+        run_pigeon(module, data, tiny_pcfg, engine="sequential",
+                   placement="sharded")
+    with pytest.raises(ValueError, match="batched"):
+        run_pigeon(module, data, tiny_pcfg, engine="sequential", prefetch=1)
+    assert PLACEMENTS == ("vmap", "sharded")
+
+
+@multi_device
+def test_cluster_mesh_uses_multiple_devices():
+    """R=4 on the forced 8-device host must land on a real 4-way pod mesh
+    (largest divisor of R that fits), not silently collapse to one device."""
+    mesh = cluster_mesh(4)
+    assert mesh.shape["pod"] == 4
+    assert cluster_mesh(3).shape["pod"] in (1, 3)
+    assert cluster_mesh(16).shape["pod"] == jax.device_count()
+
+
+@multi_device
+def test_sharded_multi_device_matches_oracle(tiny_task):
+    """True multi-device run: R=4 clusters over a 4-device pod mesh, checked
+    against the sequential oracle (selection + losses + comm)."""
+    data, module = tiny_task
+    pcfg = ProtocolConfig(M=4, N=3, T=2, E=2, B=16, lr=0.05, seed=0)
+    h_seq = run_pigeon(module, data, pcfg, malicious={1},
+                       attack=Attack(LABEL_FLIP), engine="sequential")
+    h_s = run_pigeon(module, data, pcfg, malicious={1},
+                     attack=Attack(LABEL_FLIP), engine="batched",
+                     placement="sharded")
+    assert_histories_equivalent(h_seq, h_s)
+
+
+@multi_device
+def test_runner_round_selects_and_broadcasts_across_devices():
+    """The in-program selection path (round_fn) on a real pod mesh: winner
+    broadcast must equalise every cluster slot."""
+    spec = RoundSpec(
+        train_cluster=lambda p, b: (jax.tree.map(lambda w: w - 0.1 * b.mean(), p),
+                                    b.mean()),
+        validate=lambda p, val: (jnp.mean((p["w"] - val) ** 2), None))
+    runner = RoundRunner(spec, placement="sharded", params_stacked=True)
+    r = 4
+    stacked = {"w": jnp.arange(float(r * 3)).reshape(r, 3)}
+    batches = jnp.ones((r, 2)) * jnp.arange(float(r))[:, None]
+    rebro, vlosses, sel = runner.round(stacked, batches, jnp.zeros(3))
+    assert vlosses.shape == (r,)
+    assert int(sel) == int(np.argmin(np.asarray(vlosses)))
+    for i in range(1, r):
+        np.testing.assert_allclose(np.asarray(rebro["w"][0]),
+                                   np.asarray(rebro["w"][i]))
+    # must match the vmap placement bit-for-bit on CPU
+    runner_v = RoundRunner(spec, placement="vmap", params_stacked=True)
+    rebro_v, vlosses_v, sel_v = runner_v.round(stacked, batches, jnp.zeros(3))
+    np.testing.assert_array_equal(np.asarray(vlosses), np.asarray(vlosses_v))
+    np.testing.assert_array_equal(np.asarray(rebro["w"]),
+                                  np.asarray(rebro_v["w"]))
+
+
+def test_sharded_rejects_indivisible_mesh(tiny_task):
+    """An explicit mesh whose pod axis does not divide R must be refused,
+    not silently mis-sharded."""
+    from jax.sharding import Mesh
+    spec = RoundSpec(train_cluster=lambda p, b: (p, b),
+                     validate=lambda p, v: (jnp.float32(0), None))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
+    runner = RoundRunner(spec, placement="sharded", mesh=mesh)
+    if jax.device_count() < 2:
+        pytest.skip("cannot build an indivisible mesh on one device")
+    mesh2 = Mesh(np.array(jax.devices()[:2]), ("pod",))
+    runner2 = RoundRunner(spec, placement="sharded", mesh=mesh2)
+    with pytest.raises(ValueError, match="divisible"):
+        runner2.round(jnp.zeros(()), jnp.zeros((3, 2)), jnp.zeros(()))
+
+
+# ---------------------------------------------------------------------------
+# double-buffered host pipeline
+# ---------------------------------------------------------------------------
+
+def test_prefetch_history_bit_identical(tiny_task, tiny_pcfg):
+    """The feeder consumes the numpy RNG and JAX key stream in exactly the
+    synchronous order, so prefetch on/off trajectories are bit-identical —
+    same floats, not merely within tolerance."""
+    data, module = tiny_task
+    h_sync = run_pigeon(module, data, tiny_pcfg, malicious={1},
+                        attack=Attack(LABEL_FLIP), engine="batched")
+    h_pre = run_pigeon(module, data, tiny_pcfg, malicious={1},
+                       attack=Attack(LABEL_FLIP), engine="batched", prefetch=1)
+    assert_histories_equivalent(h_sync, h_pre, exact=True)
+    h_pre2 = run_pigeon(module, data, tiny_pcfg, malicious={1},
+                        attack=Attack(LABEL_FLIP), engine="batched",
+                        prefetch=2, placement="sharded")
+    assert_histories_equivalent(h_sync, h_pre2, exact=True)
+
+
+def test_prefetch_plus_phase_boundary_fallback(tiny_task, tiny_pcfg):
+    """Pigeon-SL+ sub-rounds sample the *selected* cluster, so the feeder
+    must bound its depth to zero — prefetch is accepted but the trajectory
+    equals the synchronous one."""
+    data, module = tiny_task
+    h_sync = run_pigeon_plus(module, data, tiny_pcfg, malicious={1},
+                             attack=Attack(LABEL_FLIP), engine="batched")
+    h_pre = run_pigeon_plus(module, data, tiny_pcfg, malicious={1},
+                            attack=Attack(LABEL_FLIP), engine="batched",
+                            prefetch=2)
+    assert_histories_equivalent(h_sync, h_pre, exact=True)
+
+
+def test_round_feeder_orders_and_bounds():
+    produced = []
+
+    def make_round(t):
+        produced.append(t)
+        return t * 10
+
+    feeder = RoundFeeder(make_round, 0, 6, depth=1)
+    try:
+        for t in range(6):
+            assert feeder.get(t) == t * 10
+    finally:
+        feeder.close()
+    assert produced == list(range(6))       # strictly ascending — RNG order
+
+
+def test_round_feeder_rejects_out_of_order_and_propagates_errors():
+    def boom(t):
+        if t == 1:
+            raise RuntimeError("assembly failed")
+        return t
+
+    feeder = RoundFeeder(boom, 0, 3, depth=2)
+    try:
+        assert feeder.get(0) == 0
+        with pytest.raises(RuntimeError, match="assembly failed"):
+            feeder.get(1)
+    finally:
+        feeder.close()
+
+    feeder = RoundFeeder(lambda t: t, 0, 3, depth=1)
+    try:
+        with pytest.raises(RuntimeError, match="out of order"):
+            feeder.get(2)
+    finally:
+        feeder.close()
+
+
+def test_round_feeder_close_unblocks_producer():
+    started = threading.Event()
+
+    def make_round(t):
+        started.set()
+        return t
+
+    feeder = RoundFeeder(make_round, 0, 1000, depth=1)
+    started.wait(timeout=5)
+    feeder.close()                           # producer blocked on a full queue
+    feeder.close()                           # idempotent
+    assert feeder._thread is None
+
+
+def test_round_feeder_depth_zero_is_synchronous():
+    calls = []
+    feeder = RoundFeeder(lambda t: calls.append(t) or t, 0, 4, depth=0)
+    assert feeder.get(0) == 0
+    assert calls == [0]                      # nothing assembled ahead
+    assert feeder.get(1) == 1
+    feeder.close()
+
+
+# ---------------------------------------------------------------------------
+# single-copy round assembly
+# ---------------------------------------------------------------------------
+
+def test_assemble_round_batches_matches_reference(tiny_task, tiny_pcfg):
+    """The preallocated np.take path must consume the RNG identically to the
+    historical stack-of-stacks implementation and produce the same arrays."""
+    data, _ = tiny_task
+    clusters = [[0, 1], [2, 3]]
+    xs, ys = assemble_round_batches(np.random.default_rng(7), data, clusters,
+                                    tiny_pcfg)
+
+    rng = np.random.default_rng(7)
+    xs_ref, ys_ref = [], []
+    for cluster in clusters:
+        xs_c, ys_c = [], []
+        for client in cluster:
+            idx = sample_batch_idx(rng, data.x[client].shape[0],
+                                   tiny_pcfg.E, tiny_pcfg.B)
+            xs_c.append(data.x[client][idx])
+            ys_c.append(data.y[client][idx])
+        xs_ref.append(np.stack(xs_c))
+        ys_ref.append(np.stack(ys_c))
+    np.testing.assert_array_equal(np.asarray(xs), np.stack(xs_ref))
+    np.testing.assert_array_equal(np.asarray(ys), np.stack(ys_ref))
+    assert xs.shape == (2, 2, tiny_pcfg.E, tiny_pcfg.B) + data.x.shape[2:]
+
+
+# ---------------------------------------------------------------------------
+# one source of truth: the launch adapter runs the same round body
+# ---------------------------------------------------------------------------
+
+def test_cluster_map_is_shared_by_both_layers():
+    """A toy RoundSpec run through cluster_map, the vmap runner and the
+    sharded runner must agree bit-for-bit — there is only one round body."""
+    spec = RoundSpec(
+        train_cluster=lambda p, b: (p + b.sum(), b.sum()),
+        validate=lambda p, val: (jnp.abs(p - val), p * 2))
+    params = jnp.float32(1.0)
+    inputs = jnp.arange(6.0).reshape(3, 2)
+    val = jnp.float32(5.0)
+    new_p, aux, vl, vaux = cluster_map(spec, params, inputs, val)
+    for placement in PLACEMENTS:
+        runner = RoundRunner(spec, placement=placement)
+        c = runner.candidates(params, inputs, val)
+        np.testing.assert_array_equal(np.asarray(c[0]), np.asarray(new_p))
+        np.testing.assert_array_equal(np.asarray(c[2]), np.asarray(vl))
+        np.testing.assert_array_equal(np.asarray(c[3]), np.asarray(vaux))
+
+
+def test_onehot_select_ignores_inf_in_unselected_slots():
+    stacked = {"w": jnp.array([[1.0, 2.0], [jnp.inf, jnp.nan]])}
+    out = onehot_select(stacked, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(out["w"]), [1.0, 2.0])
