@@ -16,12 +16,12 @@ def main() -> None:
                     help="paper-scale Table II parameters (hours on CPU)")
     ap.add_argument("--only", default=None,
                     help="table1|fig3|fig4|fig5|ablation|roofline|robustness|"
-                         "pipeline")
+                         "pipeline|placements")
     args = ap.parse_args()
 
     from . import (ablation_shared_set, fig3_mnist_attacks, fig4_cifar_attacks,
-                   fig5_fig6_vary_n, pipeline_overlap, robustness_matrix,
-                   roofline_report, table1_overhead)
+                   fig5_fig6_vary_n, pipeline_overlap, placement_grid,
+                   robustness_matrix, roofline_report, table1_overhead)
 
     benches = {
         "table1": lambda: table1_overhead.run(args.full),
@@ -32,6 +32,7 @@ def main() -> None:
         "roofline": lambda: roofline_report.run(markdown=False),
         "robustness": lambda: robustness_matrix.run(args.full),
         "pipeline": lambda: pipeline_overlap.run(args.full),
+        "placements": lambda: placement_grid.run(args.full),
     }
     if args.only and args.only not in benches:
         # an unknown name used to silently skip every benchmark and exit 0

@@ -1,3 +1,7 @@
-from .ckpt import load_checkpoint, restore_pytree, save_checkpoint
+from .ckpt import (CorruptCheckpointError, load_checkpoint,
+                   protocol_state_metadata, restore_protocol_state,
+                   restore_pytree, save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "restore_pytree"]
+__all__ = ["save_checkpoint", "load_checkpoint", "restore_pytree",
+           "CorruptCheckpointError", "protocol_state_metadata",
+           "restore_protocol_state"]

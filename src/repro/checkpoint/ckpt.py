@@ -3,18 +3,37 @@
 Arrays are flattened with ``jax.tree_util.tree_flatten_with_path`` so the archive keys
 are stable, human-readable paths; restore rebuilds the exact pytree
 structure.  Works for params, optimizer states and protocol state alike.
+
+Durability contract: :func:`save_checkpoint` is crash-atomic.  Both files are
+written to temp files in the target directory and moved into place with
+``os.replace``, arrays first and the ``.json`` manifest last, and the two
+halves share a random token — so a reader either sees a complete consistent
+checkpoint or detects the tear (:class:`CorruptCheckpointError`) instead of
+half-loading it.
+
+The module also snapshots/restores the protocol's two randomness streams
+(:func:`protocol_state_metadata` / :func:`restore_protocol_state`) so
+``run_pigeon(resume=True)`` stays *on-stream*: a resumed run consumes the
+numpy RNG and the JAX key exactly where the uninterrupted run would.
 """
 from __future__ import annotations
 
 import json
 import os
-import re
+import tempfile
+import zipfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 Pytree = Any
+
+
+class CorruptCheckpointError(RuntimeError):
+    """The manifest and array halves do not form one consistent save (torn
+    write from a pre-atomic-era crash, truncation, or bit rot)."""
 
 
 def _path_str(path) -> str:
@@ -29,23 +48,67 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
+def _atomic_write(path: str, write_fn) -> None:
+    """Write via a temp file in the same directory + ``os.replace`` so the
+    final name only ever points at complete content."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".tmp.")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def save_checkpoint(path: str, tree: Pytree, metadata: Optional[Dict] = None) -> None:
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     arrays = {f"a{i}": np.asarray(v) for i, (_, v) in enumerate(flat)}
     names = [_path_str(p) for p, _ in flat]
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path + ".npz", **arrays)
-    meta = {"names": names, "treedef": str(treedef), "metadata": metadata or {}}
-    with open(path + ".json", "w") as f:
-        json.dump(meta, f)
+    # the token ties the two files to one save; mismatch => torn checkpoint
+    token = os.urandom(8).hex()
+    arrays["__token__"] = np.array(token)
+    _atomic_write(path + ".npz", lambda f: np.savez(f, **arrays))
+    meta = {"names": names, "treedef": str(treedef), "token": token,
+            "metadata": metadata or {}}
+    _atomic_write(path + ".json", lambda f: f.write(json.dumps(meta).encode()))
 
 
 def load_checkpoint(path: str) -> Tuple[Dict[str, np.ndarray], Dict]:
-    """Returns ({path_name: array}, metadata)."""
-    with open(path + ".json") as f:
-        meta = json.load(f)
-    with np.load(path + ".npz") as z:
-        arrays = {meta["names"][int(k[1:])]: z[k] for k in z.files}
+    """Returns ({path_name: array}, metadata).  Raises ``FileNotFoundError``
+    if either half is missing and :class:`CorruptCheckpointError` if the
+    halves are unreadable or belong to different saves."""
+    try:
+        with open(path + ".json") as f:
+            meta = json.load(f)
+    except json.JSONDecodeError as e:
+        raise CorruptCheckpointError(
+            f"unreadable checkpoint manifest {path}.json: {e}") from e
+    try:
+        with np.load(path + ".npz", allow_pickle=False) as z:
+            token = str(z["__token__"]) if "__token__" in z.files else None
+            arrays = {meta["names"][int(k[1:])]: z[k]
+                      for k in z.files if k != "__token__"}
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, OSError, ValueError, KeyError, IndexError) as e:
+        raise CorruptCheckpointError(
+            f"unreadable checkpoint arrays {path}.npz: {e}") from e
+    manifest_token = meta.get("token")
+    # equal-None = legacy pre-token checkpoint (allowed); one-sided or
+    # mismatched tokens = halves from different saves
+    if token != manifest_token:
+        raise CorruptCheckpointError(
+            f"torn checkpoint at {path}: manifest token {manifest_token!r} != "
+            f"arrays token {token!r} (the two halves come from different "
+            f"saves)")
     return arrays, meta.get("metadata", {})
 
 
@@ -63,3 +126,35 @@ def restore_pytree(path: str, like: Pytree) -> Pytree:
             raise ValueError(f"shape mismatch at {name}: {a.shape} vs {v.shape}")
         out.append(jax.numpy.asarray(a, dtype=v.dtype))
     return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# protocol randomness-stream snapshots (the on-stream resume contract)
+# ---------------------------------------------------------------------------
+
+def _is_typed_key(key) -> bool:
+    try:
+        return jnp.issubdtype(key.dtype, jax.dtypes.prng_key)
+    except (AttributeError, TypeError):
+        return False
+
+
+def protocol_state_metadata(rng: np.random.Generator, key) -> Dict[str, Any]:
+    """JSON-serializable snapshot of the protocol's two randomness streams:
+    the numpy bit-generator state (clustering + mini-batch sampling) and the
+    JAX key (per-round/client splits, tamper-check splits).  Stored in the
+    checkpoint metadata so resume replays *state*, not draws."""
+    raw = jax.random.key_data(key) if _is_typed_key(key) else key
+    return {"rng_state": rng.bit_generator.state,
+            "key": np.asarray(raw).astype(np.uint32).tolist()}
+
+
+def restore_protocol_state(rng: np.random.Generator, key_like,
+                           metadata: Dict[str, Any]):
+    """Inverse of :func:`protocol_state_metadata`: mutates ``rng`` in place
+    and returns the restored key (typed iff ``key_like`` is typed)."""
+    rng.bit_generator.state = metadata["rng_state"]
+    raw = jnp.asarray(np.asarray(metadata["key"], dtype=np.uint32))
+    if _is_typed_key(key_like):
+        return jax.random.wrap_key_data(raw)
+    return raw

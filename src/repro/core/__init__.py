@@ -18,8 +18,10 @@ from .engine import (batched_round, onehot_select, run_pigeon_sweep,
 from .protocol import (ENGINES, ClientData, CommMeter, History, ProtocolConfig,
                        run_pigeon, run_pigeon_plus, run_splitfed,
                        run_vanilla_sl)
-from .runner import (PLACEMENTS, RoundRunner, RoundSpec, cluster_map,
-                     cluster_mesh, protocol_round_spec, protocol_runner)
+from .runner import (PLACEMENTS, RoundRunner, RoundSpec,
+                     check_partial_auto_backend, cluster_map, cluster_mesh,
+                     protocol_round_spec, protocol_runner, sweep_map,
+                     sweep_mesh)
 from .split import (SplitModule, client_update, client_update_vec, from_cnn,
                     from_lm, sl_minibatch_grads, sl_minibatch_grads_vec)
 from .validation import check_handoff, select_cluster, validation_loss
@@ -36,6 +38,7 @@ __all__ = [
     "run_pigeon", "run_pigeon_plus", "run_splitfed", "run_vanilla_sl",
     "run_pigeon_sweep", "batched_round", "train_round_batched", "onehot_select",
     "PLACEMENTS", "RoundRunner", "RoundSpec", "cluster_map", "cluster_mesh",
+    "sweep_map", "sweep_mesh", "check_partial_auto_backend",
     "protocol_round_spec", "protocol_runner",
     "SplitModule", "client_update", "client_update_vec", "from_cnn", "from_lm",
     "sl_minibatch_grads", "sl_minibatch_grads_vec",

@@ -9,9 +9,12 @@ the placement-aware :class:`~repro.core.runner.RoundRunner` — ``jax.vmap``
 over clusters on one device (``placement="vmap"``) or the cluster axis laid
 over a device mesh (``placement="sharded"``), with ``jax.lax.scan`` over each
 within-cluster client chain and the shared-set validation forward (plus the
-tamper-check activations it produces) mapped alongside.  A second level of
-``vmap`` turns the round program into a multi-seed sweep that advances S
-whole protocol replicas in lockstep.
+tamper-check activations it produces) mapped alongside.  A second seed level
+turns the round program into a multi-seed sweep that advances S whole
+protocol replicas in lockstep — nested ``vmap`` on one device, or the S x R
+replica grid over a 2-D ``(seed, pod)`` mesh under ``placement="sharded"``.
+SplitFed binds the same runner with a per-cluster *parallel* client vmap and
+the FedAvg ``combine`` fan-in instead of the client-chain scan.
 
 Equivalence contract with the sequential engine (tested in
 ``tests/test_engine.py`` / ``tests/test_runner.py``): both engines — under
@@ -203,24 +206,48 @@ def train_cluster_batched(module: SplitModule, theta, cluster, data: ClientData,
 # SplitFed: all M clients update in parallel (no within-cluster chain)
 # ---------------------------------------------------------------------------
 
-def _splitfed_round_body(module: SplitModule, lr: float, gamma, phi,
-                         xs, ys, avec, keys, x0, y0):
-    def one_client(x, y, av, k):
-        return client_update_vec_impl(module, av, gamma, phi, (x, y), lr, k)
+@lru_cache(maxsize=None)
+def splitfed_round_spec(module: SplitModule, lr: float) -> "RoundSpec":
+    """SplitFed's per-cluster programs as a RoundRunner binding: every client
+    trains *in parallel* from the cluster's incoming theta (vmap over the
+    client axis, vs the Pigeon chain's scan), the RoundSpec ``combine`` hook
+    FedAvg-fans the per-client results into the cluster model, and shared-set
+    validation is identical to the Pigeon spec.  Binding through the runner
+    gives SplitFed both placements and the prefetch pipeline for free —
+    there is no bespoke SplitFed round body any more."""
+    from .runner import RoundSpec
 
-    gs, ps, _ = jax.vmap(jax.vmap(one_client))(xs, ys, avec, keys)
-    g_avg = jax.tree.map(lambda a: jnp.mean(a, axis=1), gs)
-    p_avg = jax.tree.map(lambda a: jnp.mean(a, axis=1), ps)
+    def train_cluster(theta, inputs):
+        xs_c, ys_c, av_c, keys_c = inputs
+        gamma, phi = theta
 
-    def validate(g, p):
+        def per_client(x, y, av, k):
+            g, p, loss = client_update_vec_impl(module, av, gamma, phi,
+                                                (x, y), lr, k)
+            return (g, p), loss
+
+        (gs, ps), losses = jax.vmap(per_client)(xs_c, ys_c, av_c, keys_c)
+        return (gs, ps), losses
+
+    def fedavg(theta):
+        return jax.tree.map(lambda a: jnp.mean(a, axis=0), theta)
+
+    def validate(theta, val):
+        g, p = theta
+        x0, y0 = val
         acts = module.client_forward(g, x0)
-        return module.ap_loss(p, acts, y0)
+        # val_aux None: SplitFed has no handoff tamper check, so the
+        # (R, D_o, d_c) activation stack would be dead weight every round
+        return module.ap_loss(p, acts, y0), None
 
-    vlosses = jax.vmap(validate)(g_avg, p_avg)
-    return g_avg, p_avg, vlosses
+    return RoundSpec(train_cluster, validate, combine=fedavg)
 
 
-splitfed_round = partial(jax.jit, static_argnums=(0, 1))(_splitfed_round_body)
+@lru_cache(maxsize=None)
+def splitfed_runner(module: SplitModule, lr: float, placement: str = "vmap"):
+    """Cached per (module, lr, placement), like :func:`protocol_runner`."""
+    from .runner import RoundRunner
+    return RoundRunner(splitfed_round_spec(module, lr), placement=placement)
 
 
 @partial(jax.jit, static_argnums=(1, 2))
@@ -243,16 +270,39 @@ def splitfed_keys(key: jax.Array, clusters: Sequence[Sequence[int]]
     return _splitfed_keys(key, len(clusters), len(clusters[0]))
 
 
-def splitfed_round_batched(module: SplitModule, theta, clusters, data: ClientData,
-                           pcfg: ProtocolConfig, tm: ThreatModel, t: int,
-                           rng: np.random.Generator,
-                           key: jax.Array, x0, y0
-                           ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
+def assemble_splitfed_round(rng: np.random.Generator, key: jax.Array,
+                            data: ClientData,
+                            clusters: Sequence[Sequence[int]],
+                            pcfg: ProtocolConfig, tm: ThreatModel, t: int):
+    """One SplitFed round's host-side payload, consuming the numpy RNG and
+    the key stream in the sequential loop's order (cluster-major batch
+    sampling; one key split per client, no per-cluster sub-stream).  SplitFed
+    sampling never depends on the previous round's selection, so the
+    RoundFeeder can run this at any depth — no phase-boundary fallback.
+    Returns (advanced_key, (xs, ys, avec, keys))."""
     xs, ys = assemble_round_batches(rng, data, clusters, pcfg)
     key, keys = splitfed_keys(key, clusters)
     avec = tm.attack_vec_for_clusters(clusters, t)
-    g_avg, p_avg, vlosses = splitfed_round(
-        module, pcfg.lr, theta[0], theta[1], xs, ys, avec, keys, x0, y0)
+    return key, (xs, ys, avec, keys)
+
+
+def splitfed_round_batched(module: SplitModule, theta, clusters, data: ClientData,
+                           pcfg: ProtocolConfig, tm: ThreatModel, t: int,
+                           rng: np.random.Generator,
+                           key: jax.Array, x0, y0, placement: str = "vmap",
+                           prefetched=None
+                           ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
+    """Batched SplitFed round through the placement-aware RoundRunner (the
+    FedAvg combine hook makes the cluster model the mean of its clients).
+    ``prefetched`` carries a payload pre-assembled by the RoundFeeder — the
+    feeder thread already consumed the RNG/key streams in this order."""
+    if prefetched is None:
+        key, prefetched = assemble_splitfed_round(rng, key, data, clusters,
+                                                  pcfg, tm, t)
+    xs, ys, avec, keys = prefetched
+    (g_avg, p_avg), _, vlosses, _ = splitfed_runner(
+        module, pcfg.lr, placement).candidates(
+        theta, (xs, ys, avec, keys), (x0, y0))
     vlosses = np.asarray(vlosses)
     results = []
     for r, cluster in enumerate(clusters):
@@ -262,27 +312,20 @@ def splitfed_round_batched(module: SplitModule, theta, clusters, data: ClientDat
 
 
 # ---------------------------------------------------------------------------
-# multi-seed sweep: vmap whole protocol replicas
+# multi-seed sweep: whole protocol replicas over (seed, cluster)
 # ---------------------------------------------------------------------------
 
-def _sweep_round_body(module: SplitModule, lr: float, gammas, phis,
-                      xs, ys, avec, keys, x0, y0):
-    """One global round for S independent protocol replicas: per seed, run
-    the cluster-vmapped round, select by argmin validation loss and broadcast
-    the winner into the replica's carried parameters."""
-
-    def one_seed(gamma, phi, xs_s, ys_s, av_s, k_s):
-        gs, ps, losses, vlosses, _ = _round_body(
-            module, lr, gamma, phi, xs_s, ys_s, av_s, k_s, x0, y0)
-        sel = jnp.argmin(vlosses)
-        g = onehot_select(gs, sel)
-        p = onehot_select(ps, sel)
-        return g, p, vlosses, sel, jnp.mean(losses, axis=1)
-
-    return jax.vmap(one_seed)(gammas, phis, xs, ys, avec, keys)
-
-
-sweep_round = partial(jax.jit, static_argnums=(0, 1))(_sweep_round_body)
+def sweep_round(module: SplitModule, lr: float, theta_s, inputs, val,
+                placement: str = "vmap"):
+    """One global round for S independent protocol replicas through the
+    RoundRunner's sweep entry: per seed, the cluster-parallel round + argmin
+    selection + winner carry, all inside one compiled program.  Under
+    ``placement="sharded"`` the S x R replica grid is laid over a 2-D
+    ``(seed, pod)`` device mesh (per-seed argmin stays on device: the
+    cluster-axis loss all-gather and the winner psum are the only
+    collectives).  Returns ``(theta_S, train_losses_SRM, vlosses_SR,
+    sels_S)``."""
+    return protocol_runner(module, lr, placement).sweep(theta_s, inputs, val)
 
 
 @lru_cache(maxsize=None)
@@ -313,11 +356,16 @@ def evaluate_sweep(module: SplitModule, gammas, phis, x_test: np.ndarray,
 def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                      malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                      seeds: Sequence[int] = (0, 1, 2),
-                     verbose: bool = False,
+                     verbose: bool = False, placement: str = "vmap",
                      threat_model: Optional[ThreatModel] = None) -> List[History]:
     """S whole Pigeon-SL replicas (different seeds) advanced in lockstep: one
     compiled call per global round trains S x R clusters and performs the
-    per-seed argmin selection on device.
+    per-seed argmin selection on device.  ``placement="vmap"`` runs the
+    (seed, cluster) grid as two nested vmaps on one device;
+    ``placement="sharded"`` lays it over a 2-D ``(seed, pod)`` device mesh
+    (auto-factorised to cover the most devices — see
+    :func:`repro.core.runner.sweep_mesh`), with the per-seed argmin still on
+    device.
 
     Selection happens inside the compiled program, so the host-side
     param-tamper handoff check is not modelled — the sweep supports the
@@ -325,6 +373,8 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
     mixtures and schedules included).  Returns one ``History`` per seed
     (CommMeter accounting is analytic and identical across seeds).
     """
+    from .runner import check_placement
+    check_placement(placement)
     tm = resolve_threat_model(malicious, attack, threat_model)
     if tm.has_param_tamper:
         raise ValueError("run_pigeon_sweep does not model the param-tamper "
@@ -355,10 +405,12 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
             key_rows.append(krow)
             avecs.append(avec_i)
         avec = jax.tree.map(lambda *ls: jnp.stack(ls), *avecs)
-        gammas, phis, vlosses, sels, tlosses = sweep_round(
-            module, pcfg.lr, thetas[0], thetas[1],
-            jnp.stack(xs), jnp.stack(ys), avec, jnp.stack(key_rows), x0, y0)
-        thetas = (gammas, phis)
+        thetas, tloss_rm, vlosses, sels = sweep_round(
+            module, pcfg.lr, thetas,
+            (jnp.stack(xs), jnp.stack(ys), avec, jnp.stack(key_rows)),
+            (x0, y0), placement)
+        gammas, phis = thetas
+        tlosses = jnp.mean(tloss_rm, axis=-1)       # (S, R): mean over clients
 
         meter = CommMeter()
         for cluster in clusters_s[0]:

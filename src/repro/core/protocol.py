@@ -255,6 +255,14 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
       round's outcome: Pigeon-SL+ sub-rounds sample the *selected* cluster,
       and param-tamper threat models consume the key stream at selection
       time, so both fall back transparently.
+    * ``checkpoint_path`` / ``resume`` — per-round checkpoints carry theta
+      AND the full randomness-stream state (numpy bit-generator state + the
+      protocol key), so a resumed run is *on-stream*: it reproduces the
+      uninterrupted trajectory bit-for-bit, under either engine, both
+      placements, prefetch on or off, and Pigeon-SL+.  Checkpoint writes are
+      atomic (temp file + ``os.replace``, manifest last); a torn/corrupt
+      checkpoint is detected and skipped with a warning instead of being
+      half-loaded.
     """
     _check_engine(engine, placement, prefetch)
     tm = resolve_threat_model(malicious, attack, threat_model)
@@ -265,16 +273,32 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     theta = (gamma0, phi0)
     start_round = 0
     if resume and checkpoint_path is not None:
-        from ..checkpoint import load_checkpoint, restore_pytree
+        from ..checkpoint import (CorruptCheckpointError, load_checkpoint,
+                                  restore_protocol_state, restore_pytree)
         try:
             _, meta = load_checkpoint(checkpoint_path)
             theta = restore_pytree(checkpoint_path, theta)
             start_round = int(meta.get("round", -1)) + 1
-            # fast-forward the protocol RNG so clustering stays on-stream
-            for _ in range(start_round):
-                make_clusters(rng, pcfg.M, pcfg.R)
+            if "rng_state" in meta:
+                # On-stream resume: restore the numpy bit-generator state and
+                # the protocol key exactly as they stood after the saved
+                # round, so the resumed trajectory (clustering, per-turn
+                # batch sampling, per-round/tamper-check key splits) is
+                # bit-identical to the uninterrupted run.
+                key = restore_protocol_state(rng, key, meta)
+            else:
+                # Legacy checkpoints (no stream snapshot): replay only the
+                # clustering draws.  Off-stream for batch sampling and key
+                # splits — kept solely so old checkpoints still load.
+                for _ in range(start_round):
+                    make_clusters(rng, pcfg.M, pcfg.R)
         except FileNotFoundError:
-            pass
+            start_round = 0
+        except CorruptCheckpointError as e:
+            import warnings
+            warnings.warn(f"ignoring corrupt checkpoint {checkpoint_path!r} "
+                          f"({e}); starting from round 0", stacklevel=2)
+            start_round = 0
     x0, y0 = jnp.asarray(data.x0), jnp.asarray(data.y0)
     d_o = data.x0.shape[0]
     hist = History()
@@ -296,7 +320,17 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
             clusters = make_clusters(rng, pcfg.M, pcfg.R)
             _state["key"], payload = assemble_round(
                 rng, _state["key"], data, clusters, pcfg, tm, t)
-            return clusters, payload
+            # Stream snapshot for the round-t checkpoint: by the time the
+            # main loop saves round t, the feeder has already consumed the
+            # RNG/key streams for rounds t+1.., so the snapshot must be taken
+            # here — right after round t's assembly, which (feeder
+            # preconditions: no Pigeon-SL+ sub-rounds, no param-tamper key
+            # splits) is exactly the synchronous end-of-round-t state.
+            snap = None
+            if checkpoint_path is not None:
+                from ..checkpoint import protocol_state_metadata
+                snap = protocol_state_metadata(rng, _state["key"])
+            return clusters, payload, snap
 
         feeder = RoundFeeder(_make_round, start_round, pcfg.T, depth=prefetch)
 
@@ -304,10 +338,11 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
         for t in range(start_round, pcfg.T):
             meter = CommMeter()
             if feeder is not None:
-                clusters, prefetched = feeder.get(t)
+                clusters, prefetched, stream_snap = feeder.get(t)
             else:
                 clusters = make_clusters(rng, pcfg.M, pcfg.R)
                 prefetched = None
+                stream_snap = None
             key, results = _train_round(module, theta, clusters, data, pcfg,
                                         tm, t, rng, key, meter, d_c, x0, y0,
                                         engine, placement, prefetched)
@@ -379,8 +414,11 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                                            data.x_test, data.y_test, pcfg.eval_batch)
             hist.rounds.append(rec)
             if checkpoint_path is not None:
-                from ..checkpoint import save_checkpoint
-                save_checkpoint(checkpoint_path, theta, {"round": t})
+                from ..checkpoint import protocol_state_metadata, save_checkpoint
+                state = (stream_snap if stream_snap is not None
+                         else protocol_state_metadata(rng, key))
+                save_checkpoint(checkpoint_path, theta,
+                                {"round": t, **state})
             if verbose:
                 acc = rec.get("test_acc", float("nan"))
                 print(f"[pigeon{'+' if plus else ''}] t={t:3d} acc={acc:.4f} "
@@ -448,11 +486,20 @@ def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
 def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                  malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                  verbose: bool = False, engine: str = "sequential",
+                 placement: str = "vmap", prefetch: int = 0,
                  threat_model: Optional[ThreatModel] = None) -> History:
     """Clients inside a cluster train *in parallel* from the same incoming
     params; the cluster model is the FedAvg of its clients.  Cluster
-    selection by shared-set validation loss, as the paper's adapted SFL."""
-    _check_engine(engine)
+    selection by shared-set validation loss, as the paper's adapted SFL.
+
+    Execution knobs match ``run_pigeon``: the batched engine runs the round
+    through the placement-aware RoundRunner (SplitFed's FedAvg is the
+    RoundSpec ``combine`` hook), so ``placement="sharded"`` lays the cluster
+    axis over a device mesh, and ``prefetch>0`` double-buffers host-side
+    round assembly.  SplitFed sampling never depends on the previous round's
+    selection — there is no tamper-check key split and no sub-round — so the
+    feeder runs at full depth under every threat model."""
+    _check_engine(engine, placement, prefetch)
     tm = resolve_threat_model(malicious, attack, threat_model)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
@@ -461,40 +508,64 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     x0, y0 = jnp.asarray(data.x0), jnp.asarray(data.y0)
     hist = History()
 
-    for t in range(pcfg.T):
-        clusters = make_clusters(rng, pcfg.M, pcfg.R)
-        if engine == "batched":
-            from .engine import splitfed_round_batched
-            key, results = splitfed_round_batched(module, theta, clusters, data,
-                                                  pcfg, tm, t, rng, key, x0, y0)
-        else:
-            results = []
-            for cluster in clusters:
-                gs, ps = [], []
-                for client in cluster:
-                    xs, ys = _sample_batches(rng, data.x[client], data.y[client],
-                                             pcfg.E, pcfg.B)
-                    key, sub = jax.random.split(key)
-                    a = tm.attack_for(client, t)
-                    g, p, _ = client_update(module, a, theta[0], theta[1], (xs, ys),
-                                            pcfg.lr, sub)
-                    gs.append(g)
-                    ps.append(p)
-                g_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *gs)
-                p_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *ps)
-                vloss, _ = validation_loss(module, g_avg, p_avg, x0, y0)
-                results.append(dict(gamma=g_avg, phi=p_avg, vloss=float(vloss),
-                                    cluster=cluster))
-        selected = select_cluster([res["vloss"] for res in results])
-        theta = res_params(results[selected])
-        rec = dict(round=t, selected=selected,
-                   val_losses=[res["vloss"] for res in results],
-                   selected_honest=cluster_is_honest(results[selected]["cluster"],
-                                                     tm.malicious))
-        if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
-            rec["test_acc"] = evaluate(module, theta[0], theta[1], data.x_test,
-                                       data.y_test, pcfg.eval_batch)
-        hist.rounds.append(rec)
-        if verbose:
-            print(f"[sfl] t={t:3d} acc={rec.get('test_acc', float('nan')):.4f}")
+    feeder = None
+    if engine == "batched" and prefetch > 0:
+        from ..data.pipeline import RoundFeeder
+        from .engine import assemble_splitfed_round
+
+        def _make_round(t, _state={"key": key}):
+            clusters = make_clusters(rng, pcfg.M, pcfg.R)
+            _state["key"], payload = assemble_splitfed_round(
+                rng, _state["key"], data, clusters, pcfg, tm, t)
+            return clusters, payload
+
+        feeder = RoundFeeder(_make_round, 0, pcfg.T, depth=prefetch)
+
+    try:
+        for t in range(pcfg.T):
+            if feeder is not None:
+                clusters, prefetched = feeder.get(t)
+            else:
+                clusters = make_clusters(rng, pcfg.M, pcfg.R)
+                prefetched = None
+            if engine == "batched":
+                from .engine import splitfed_round_batched
+                key, results = splitfed_round_batched(
+                    module, theta, clusters, data, pcfg, tm, t, rng, key,
+                    x0, y0, placement=placement, prefetched=prefetched)
+            else:
+                results = []
+                for cluster in clusters:
+                    gs, ps = [], []
+                    for client in cluster:
+                        xs, ys = _sample_batches(rng, data.x[client],
+                                                 data.y[client], pcfg.E, pcfg.B)
+                        key, sub = jax.random.split(key)
+                        a = tm.attack_for(client, t)
+                        g, p, _ = client_update(module, a, theta[0], theta[1],
+                                                (xs, ys), pcfg.lr, sub)
+                        gs.append(g)
+                        ps.append(p)
+                    g_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *gs)
+                    p_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *ps)
+                    vloss, _ = validation_loss(module, g_avg, p_avg, x0, y0)
+                    results.append(dict(gamma=g_avg, phi=p_avg,
+                                        vloss=float(vloss), cluster=cluster))
+            selected = select_cluster([res["vloss"] for res in results])
+            theta = res_params(results[selected])
+            rec = dict(round=t, selected=selected,
+                       val_losses=[res["vloss"] for res in results],
+                       selected_honest=cluster_is_honest(
+                           results[selected]["cluster"], tm.malicious))
+            if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+                rec["test_acc"] = evaluate(module, theta[0], theta[1],
+                                           data.x_test, data.y_test,
+                                           pcfg.eval_batch)
+            hist.rounds.append(rec)
+            if verbose:
+                print(f"[sfl] t={t:3d} "
+                      f"acc={rec.get('test_acc', float('nan')):.4f}")
+    finally:
+        if feeder is not None:
+            feeder.close()
     return hist

@@ -10,9 +10,9 @@ mesh axis) — which duplicated the train + validate + argmin + broadcast
 program and could not share fixes.
 
 :class:`RoundRunner` is the single source of truth.  A :class:`RoundSpec`
-supplies the two pure per-cluster programs (``train_cluster`` and
-``validate``); the runner compiles the cluster-parallel round under a
-pluggable *placement policy*:
+supplies the pure per-cluster programs (``train_cluster``, an optional
+``combine`` fan-in — SplitFed's FedAvg — and ``validate``); the runner
+compiles the cluster-parallel round under a pluggable *placement policy*:
 
   * ``placement="vmap"``    — ``jax.vmap`` over the cluster axis, one device
                               (the protocol engine's historical strategy);
@@ -21,6 +21,12 @@ pluggable *placement policy*:
                               shard runs a vmap over its local cluster slice,
                               so R need not equal the device count (any mesh
                               whose cluster-axis size divides R works).
+
+A third entry level, :meth:`RoundRunner.sweep`, runs S independent protocol
+replicas (the multi-seed sweep) with per-seed argmin selection on device —
+under vmap a second seed-level ``jax.vmap``, under the sharded placement a
+2-D ``(seed, cluster)`` mesh (default axes ``("seed", "pod")``) so the
+S x R replica grid lays out over real devices.
 
 Both placements run the *same* ``cluster_map`` body, so they are numerically
 equivalent by construction — the CPU equivalence suite
@@ -106,16 +112,84 @@ def cluster_mesh(r: int, max_devices: Optional[int] = None) -> Mesh:
     return Mesh(np.array(devs[:n]), ("pod",))
 
 
-def _apply_shard_map(fn, mesh: Mesh, in_specs, out_specs, manual_axis: str):
+def _largest_divisor(n: int, cap: int) -> int:
+    d = min(n, cap)
+    while n % d:
+        d -= 1
+    return d
+
+
+@lru_cache(maxsize=None)
+def sweep_mesh(s: int, r: int, max_devices: Optional[int] = None) -> Mesh:
+    """2-D ("seed", "pod") mesh for the multi-seed sweep: the factorisation
+    of the available devices into (divisor of S) x (divisor of R) that covers
+    the most devices, so the S x R replica grid spreads as wide as the
+    hardware allows (ties resolved toward the wider cluster axis — the
+    cluster dimension is the paper's dominant parallelism)."""
+    devs = jax.devices()
+    n = min(len(devs), max_devices if max_devices else len(devs))
+    best_s, best_r = 1, 1
+    for sn in range(1, min(s, n) + 1):
+        if s % sn:
+            continue
+        rn = _largest_divisor(r, n // sn)
+        if sn * rn > best_s * best_r or (sn * rn == best_s * best_r
+                                         and rn > best_r):
+            best_s, best_r = sn, rn
+    return Mesh(np.array(devs[: best_s * best_r]).reshape(best_s, best_r),
+                ("seed", "pod"))
+
+
+def _normalize_manual_axes(manual_axes) -> frozenset:
+    return frozenset((manual_axes,) if isinstance(manual_axes, str)
+                     else manual_axes)
+
+
+def _auto_axes(mesh: Mesh, manual_axes) -> list:
+    manual = _normalize_manual_axes(manual_axes)
+    return [a for a in mesh.axis_names if a not in manual]
+
+
+def _apply_shard_map(fn, mesh: Mesh, in_specs, out_specs, manual_axes):
     """Version shim: jax 0.4.x experimental shard_map (check_rep/auto) vs the
-    jax >= 0.5 public API (check_vma/axis_names).  ``manual_axis`` is the
-    only manually-mapped axis; any other mesh axes stay GSPMD-auto."""
+    jax >= 0.5 public API (check_vma/axis_names).  ``manual_axes`` are the
+    manually-mapped axes; any other mesh axes stay GSPMD-auto."""
+    manual = _normalize_manual_axes(manual_axes)
     if _SHARD_MAP_LEGACY:
-        auto = frozenset(mesh.axis_names) - {manual_axis}
+        auto = frozenset(mesh.axis_names) - manual
         return _shard_map(fn, mesh, in_specs=in_specs, out_specs=out_specs,
                           check_rep=False, auto=auto)
     return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      check_vma=False, axis_names={manual_axis})
+                      check_vma=False, axis_names=set(manual))
+
+
+def backend_supports_partial_auto(mesh: Mesh, manual_axes) -> bool:
+    """Partial-auto shard_map (manual cluster axis + GSPMD-auto data/model
+    axes) lowers fine everywhere but cannot *execute* on the XLA CPU backend
+    when the auto axes span more than one device — CPU has no PartitionId
+    under SPMD, so XLA crashes with an inscrutable error at run time."""
+    auto = _auto_axes(mesh, manual_axes)
+    auto_size = int(np.prod([mesh.shape[a] for a in auto], dtype=np.int64))
+    if auto_size <= 1:
+        return True
+    return not all(d.platform == "cpu" for d in mesh.devices.flat)
+
+
+def check_partial_auto_backend(mesh: Mesh, manual_axes) -> None:
+    """Raise a clear error instead of letting XLA crash (ROADMAP open item:
+    CPU pods + partial-auto shard_map).  Called on the *execution* entry
+    points only — dry-run lowering/compilation of the same program is
+    supported on every backend and must stay gate-free."""
+    if backend_supports_partial_auto(mesh, manual_axes):
+        return
+    auto = _auto_axes(mesh, manual_axes)
+    raise RuntimeError(
+        f"partial-auto shard_map cannot execute on the CPU backend: mesh "
+        f"{dict(mesh.shape)} has GSPMD-auto axes {auto} spanning "
+        f"{np.prod([mesh.shape[a] for a in auto])} devices, and XLA CPU has "
+        f"no PartitionId under SPMD.  Use a fully-manual 1-D cluster mesh on "
+        f"CPU (mesh=None lets the runner build one), or run on TPU/GPU; "
+        f"dry-run lowering of this program on CPU remains supported.")
 
 
 # ---------------------------------------------------------------------------
@@ -124,26 +198,36 @@ def _apply_shard_map(fn, mesh: Mesh, in_specs, out_specs, manual_axis: str):
 
 @dataclasses.dataclass(frozen=True)
 class RoundSpec:
-    """The two pure per-cluster programs of one Pigeon round.
+    """The pure per-cluster programs of one Pigeon round.
 
     ``train_cluster(params, inputs) -> (params', train_aux)`` — one cluster's
     whole training phase (for the protocol engine: the within-cluster client
-    chain; for the launch layer: one SPMD train step).
+    chain; for SplitFed: all clients in parallel, leaving a leading client
+    axis on ``params'``; for the launch layer: one SPMD train step).
 
-    ``validate(params', val) -> (vloss, val_aux)`` — the shared-set
+    ``combine(params') -> cluster_params`` — optional fan-in applied between
+    training and validation, for round families whose cluster model is an
+    *aggregate* of per-client results rather than the chain's final state:
+    SplitFed binds FedAvg (mean over the client axis ``train_cluster`` left
+    on its output).  ``None`` (the default) means ``train_cluster`` already
+    returns the cluster model.
+
+    ``validate(cluster_params, val) -> (vloss, val_aux)`` — the shared-set
     validation forward (Section III-C).  ``val_aux`` carries whatever the
     consumer needs alongside the loss (the protocol engine keeps the cut
     activations for the tamper check; the launch spec returns None).
     """
     train_cluster: Callable[[Pytree, Any], Tuple[Pytree, Any]]
     validate: Callable[[Pytree, Any], Tuple[jnp.ndarray, Any]]
+    combine: Optional[Callable[[Pytree], Pytree]] = None
 
 
 def cluster_map(spec: RoundSpec, params: Pytree, inputs: Pytree, val: Pytree,
                 params_stacked: bool = False):
-    """Train + validate every cluster on the leading axis of ``inputs`` —
-    THE one copy of the Pigeon round math, shared by both placements (and by
-    the multi-seed sweep, which vmaps it once more over seeds).
+    """Train + (combine +) validate every cluster on the leading axis of
+    ``inputs`` — THE one copy of the Pigeon round math, shared by both
+    placements (and by the multi-seed sweep, which vmaps it once more over
+    seeds).
 
     Returns ``(params_R, train_aux_R, vlosses_R, val_aux_R)``.  When
     ``params_stacked`` the params already carry the leading cluster axis
@@ -153,10 +237,30 @@ def cluster_map(spec: RoundSpec, params: Pytree, inputs: Pytree, val: Pytree,
 
     def one(params_r, inputs_r):
         new_p, aux = spec.train_cluster(params_r, inputs_r)
+        if spec.combine is not None:
+            new_p = spec.combine(new_p)
         vloss, vaux = spec.validate(new_p, val)
         return new_p, aux, vloss, vaux
 
     return jax.vmap(one, in_axes=(0 if params_stacked else None, 0))(params, inputs)
+
+
+def sweep_map(spec: RoundSpec, params: Pytree, inputs: Pytree, val: Pytree,
+              params_stacked: bool = False):
+    """S independent protocol replicas of one global round: per seed, run
+    :func:`cluster_map`, select the argmin-validation-loss cluster and carry
+    the winner forward.  ``params`` leaves lead with the seed axis (plus a
+    cluster axis when ``params_stacked``); ``inputs`` leaves with
+    ``(seed, cluster)``.  Returns ``(winner_params_S, train_aux_SR,
+    vlosses_SR, sel_S)`` — the same arithmetic (masked-f32 one-hot
+    contraction) the sharded placement reduces with ``psum``, so the two
+    placements agree bit-for-bit."""
+    new_p, aux, vlosses, _ = jax.vmap(
+        lambda p, i: cluster_map(spec, p, i, val, params_stacked)
+    )(params, inputs)
+    sels = jnp.argmin(vlosses, axis=1)
+    winners = jax.vmap(onehot_select)(new_p, sels)
+    return winners, aux, vlosses, sels
 
 
 class RoundRunner:
@@ -170,21 +274,30 @@ class RoundRunner:
     * :meth:`round_fn` / :meth:`round` — the full round with argmin selection
       and winner broadcast inside the compiled program (the launch-layer
       ``pigeon_round_step`` contract: returns ``(rebro, vlosses, sel)``).
+    * :meth:`sweep_fn` / :meth:`sweep` — S whole protocol replicas with
+      per-seed argmin selection on device; the sharded placement lays the
+      S x R replica grid over a 2-D ``(seed_axis, cluster_axis)`` mesh.
 
     ``mesh`` is only consulted by the sharded placement; when omitted a 1-D
-    host mesh sized to the largest divisor of R is built per call shape
-    (:func:`cluster_mesh`).  ``cluster_axis`` names the mesh axis carrying
-    cluster parallelism; other axes stay GSPMD-auto, so the launch layer's
-    ("pod", "data", "model") meshes keep their data/model sharding."""
+    host mesh sized to the largest divisor of R (:func:`cluster_mesh`) — or,
+    for :meth:`sweep`, the widest 2-D ``(seed, pod)`` factorisation
+    (:func:`sweep_mesh`) — is built per call shape.  ``cluster_axis`` /
+    ``seed_axis`` name the mesh axes carrying cluster / replica parallelism;
+    other axes stay GSPMD-auto, so the launch layer's ("pod", "data",
+    "model") meshes keep their data/model sharding.  The jitted execution
+    entries gate the partial-auto CPU combination
+    (:func:`check_partial_auto_backend`) with a clear error instead of the
+    XLA crash; the ``*_fn`` bodies stay gate-free for dry-run lowering."""
 
     def __init__(self, spec: RoundSpec, *, placement: str = "vmap",
                  mesh: Optional[Mesh] = None, cluster_axis: str = "pod",
-                 params_stacked: bool = False):
+                 seed_axis: str = "seed", params_stacked: bool = False):
         check_placement(placement)
         self.spec = spec
         self.placement = placement
         self.mesh = mesh
         self.cluster_axis = cluster_axis
+        self.seed_axis = seed_axis
         self.params_stacked = params_stacked
         self._jitted: dict = {}
 
@@ -212,6 +325,15 @@ class RoundRunner:
             return round_body
         return lambda params, inputs, val: self._sharded(
             params, inputs, val, select=True)
+
+    def sweep_fn(self) -> Callable:
+        """(params_S, inputs_SR, val) -> (winner_params_S, train_aux_SR,
+        vlosses_SR, sel_S): one global round of S independent replicas with
+        the per-seed argmin selection inside the compiled program."""
+        if self.placement == "vmap":
+            return lambda params, inputs, val: sweep_map(
+                self.spec, params, inputs, val, self.params_stacked)
+        return self._sharded_sweep
 
     # -- sharded placement --------------------------------------------------
 
@@ -252,21 +374,69 @@ class RoundRunner:
         fn = _apply_shard_map(per_shard, mesh, in_specs, out_specs, ax)
         return fn(params, inputs, val)
 
+    def _sharded_sweep(self, params, inputs, val):
+        ax, sax = self.cluster_axis, self.seed_axis
+        leaf = jax.tree.leaves(inputs)[0]
+        s, r = leaf.shape[0], leaf.shape[1]
+        mesh = self.mesh if self.mesh is not None else sweep_mesh(s, r)
+        if s % mesh.shape[sax] or r % mesh.shape[ax]:
+            raise ValueError(f"(S={s}, R={r}) not divisible by mesh axes "
+                             f"({sax!r}={mesh.shape[sax]}, "
+                             f"{ax!r}={mesh.shape[ax]})")
+
+        def per_shard(params_s, inputs_s, val_s):
+            # params_s: (S_local, ...) [+ cluster dim when stacked];
+            # inputs_s: the local (S_local, R_local, ...) replica block.
+            new_p, aux, vloss, _ = jax.vmap(
+                lambda p, i: cluster_map(self.spec, p, i, val_s,
+                                         self.params_stacked)
+            )(params_s, inputs_s)
+            losses = jax.lax.all_gather(vloss, ax, axis=1, tiled=True)  # (S_local, R)
+            sels = jnp.argmin(losses, axis=1)
+            r_local = vloss.shape[1]
+            mine = (jax.lax.axis_index(ax) * r_local
+                    + jnp.arange(r_local))[None, :] == sels[:, None]
+
+            def pick(x):
+                mask = mine.reshape(mine.shape + (1,) * (x.ndim - 2))
+                local = jnp.sum(jnp.where(mask, x.astype(jnp.float32), 0.0),
+                                axis=1)
+                return jax.lax.psum(local, ax).astype(x.dtype)
+
+            return jax.tree.map(pick, new_p), aux, losses, sels
+
+        p_spec = P(sax, ax) if self.params_stacked else P(sax)
+        in_specs = (p_spec, P(sax, ax), P())
+        out_specs = (P(sax), P(sax, ax), P(sax), P(sax))
+        fn = _apply_shard_map(per_shard, mesh, in_specs, out_specs, (sax, ax))
+        return fn(params, inputs, val)
+
     # -- jitted convenience entry points ------------------------------------
+
+    def _check_executable(self, manual_axes) -> None:
+        if self.placement == "sharded" and self.mesh is not None:
+            check_partial_auto_backend(self.mesh, manual_axes)
 
     def _compiled(self, which: str) -> Callable:
         fn = self._jitted.get(which)
         if fn is None:
-            body = self.candidates_fn() if which == "candidates" else self.round_fn()
+            body = {"candidates": self.candidates_fn, "round": self.round_fn,
+                    "sweep": self.sweep_fn}[which]()
             fn = jax.jit(body)
             self._jitted[which] = fn
         return fn
 
     def candidates(self, params, inputs, val):
+        self._check_executable((self.cluster_axis,))
         return self._compiled("candidates")(params, inputs, val)
 
     def round(self, params, inputs, val):
+        self._check_executable((self.cluster_axis,))
         return self._compiled("round")(params, inputs, val)
+
+    def sweep(self, params, inputs, val):
+        self._check_executable((self.seed_axis, self.cluster_axis))
+        return self._compiled("sweep")(params, inputs, val)
 
 
 # ---------------------------------------------------------------------------

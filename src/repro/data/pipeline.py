@@ -112,6 +112,14 @@ class RoundFeeder:
     degrades to fully synchronous assembly — the bound the protocol drivers
     apply at Pigeon-SL+ phase boundaries, where sub-round sampling depends
     on the selected cluster and nothing may run ahead of selection.
+    SplitFed's sampling is selection-independent (no sub-rounds, no
+    tamper-check key splits), so ``run_splitfed`` reuses the feeder at full
+    depth under every threat model.
+
+    ``make_round`` may return arbitrary payloads; ``run_pigeon`` includes a
+    per-round randomness-stream snapshot so checkpoints written while the
+    feeder runs ahead still capture the synchronous end-of-round state (the
+    on-stream resume contract).
 
     Exceptions raised inside ``make_round`` are re-raised from :meth:`get`
     at the round that failed.  Always :meth:`close` (or use as a context

@@ -164,6 +164,31 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def pigeon_sweep_shardings(stacked_params: Pytree, batches: Pytree,
+                           val_batch: Pytree, mesh: Mesh,
+                           seed_axis: str = "seed",
+                           cluster_axis: str = "pod"
+                           ) -> Tuple[Pytree, Pytree, Pytree]:
+    """The (params, batches, val) sharding triple of the multi-seed sweep
+    round: per-seed carried params lead with the seed axis, per-replica
+    batches with (seed, cluster), and the shared set D_o replicated (every
+    replica validates the same data) but sharded over any intra-replica
+    "data" axis, mirroring :func:`pigeon_round_shardings`."""
+    p_shard = param_shardings(stacked_params, mesh, cluster_axis=seed_axis)
+    lead = (seed_axis, cluster_axis)
+
+    def one(leaf):
+        spec = list(lead[: leaf.ndim]) + [None] * (leaf.ndim - 2)
+        return NamedSharding(mesh, P(*spec[: leaf.ndim]))
+
+    b_shard = jax.tree.map(one, batches)
+    data_ax = "data" if "data" in mesh.axis_names else None
+    v_shard = jax.tree.map(
+        lambda x: NamedSharding(mesh, P(data_ax, *([None] * (x.ndim - 1)))),
+        val_batch)
+    return p_shard, b_shard, v_shard
+
+
 def pigeon_round_shardings(stacked_params: Pytree, batches: Pytree,
                            val_batch: Pytree, mesh: Mesh,
                            cluster_axis: str = "pod") -> Tuple[Pytree, Pytree, Pytree]:

@@ -136,14 +136,23 @@ def launch_round_spec(model: Model, lr: float = 1e-3,
     return RoundSpec(train, validate)
 
 
-def make_pigeon_round_step_shardmap(model: Model, mesh,
-                                    lr: float = 1e-3) -> Callable:
+def make_pigeon_round_step_shardmap(model: Model, mesh, lr: float = 1e-3,
+                                    for_execution: bool = False) -> Callable:
     """Cluster parallelism as a *manual* pod-axis shard_map (§Perf hillclimb
     C iteration 3): each pod runs its cluster slice's train+validate program
     (data/model axes stay GSPMD-auto), and the only cross-pod collectives
     are the R-sized loss all-gather and the winner psum.  This is the
     RoundRunner's ``placement="sharded"``; the vmap variant below shares the
-    same round body."""
+    same round body.
+
+    ``for_execution=True`` gates the CPU + partial-auto combination up front
+    (XLA CPU has no PartitionId under SPMD, so auto axes of size > 1 crash at
+    run time with an inscrutable error).  The default leaves the gate off
+    because the dry-run driver only lowers/compiles this step — that is
+    supported on every backend."""
+    from ..core.runner import check_partial_auto_backend
+    if for_execution:
+        check_partial_auto_backend(mesh, ("pod",))
     runner = RoundRunner(launch_round_spec(model, lr, constrain_val=True),
                          placement="sharded", mesh=mesh, params_stacked=True)
     return runner.round_fn()
@@ -265,6 +274,9 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
                 return LoweringSpec(fn, (stacked, batches, val_batch, plus_batches),
                                     (p_shard, b_shard, v_shard, pb_shard), None)
             if "pigeon_shardmap" in cfg.optimizations:
+                # dryrun only lowers/compiles this spec; anyone *executing*
+                # it should build the step with for_execution=True (or call
+                # check_partial_auto_backend) — CPU + auto axes > 1 cannot run
                 fn = make_pigeon_round_step_shardmap(model, mesh, lr)
             else:
                 fn = make_pigeon_round_step(model, lr)

@@ -40,6 +40,27 @@ def test_spec_rules_cluster_leading_dim():
     assert spec == P("pod", "model", None)
 
 
+def test_pigeon_sweep_shardings_lead_with_seed_and_pod():
+    """The sweep triple: params lead with the seed axis, batches with
+    (seed, pod), and the shared set replicates across replicas but shards
+    over the intra-replica data axis."""
+    from jax.sharding import Mesh
+
+    from repro.launch.shardings import pigeon_sweep_shardings
+
+    devs = np.array(jax.devices()[:1]).reshape(1, 1, 1, 1)
+    mesh = Mesh(devs, ("seed", "pod", "data", "model"))
+    params = {"head": {"w": jax.ShapeDtypeStruct((2, 16, 32), jnp.float32)},
+              "norm": jax.ShapeDtypeStruct((2, 16), jnp.float32)}
+    batches = {"tokens": jax.ShapeDtypeStruct((2, 2, 8, 4), jnp.int32)}
+    val = {"tokens": jax.ShapeDtypeStruct((8, 4), jnp.int32)}
+    p, b, v = pigeon_sweep_shardings(params, batches, val, mesh)
+    assert p["head"]["w"].spec[0] == "seed"
+    assert p["norm"].spec[0] == "seed"
+    assert tuple(b["tokens"].spec)[:2] == ("seed", "pod")
+    assert v["tokens"].spec == P("data", None)
+
+
 def test_shape_applicability_matrix():
     runs = {(a, s) for a in list_archs() for s in SHAPES
             if applicable(a, s)[0]}

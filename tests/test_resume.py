@@ -1,0 +1,208 @@
+"""On-stream checkpoint/resume + crash-atomic checkpoint writes.
+
+The resume contract: a run checkpointed at round k and resumed reproduces the
+uninterrupted run's remaining rounds BIT-FOR-BIT — same clusters, same
+selections, same validation-loss floats, same test accuracy, same CommMeter
+counts.  That requires the checkpoint to carry not just theta but the full
+randomness-stream state (numpy bit-generator state + the protocol JAX key):
+an uninterrupted run consumes ``sample_batch_idx`` draws every client turn
+and splits the key per round/tamper-check, so replaying only the
+``make_clusters`` draws (the historical fast-forward) went off-stream.
+
+The durability contract: ``save_checkpoint`` writes both halves to temp
+files and ``os.replace``s them (manifest last), and the halves share a
+token — a torn checkpoint is *detected* (``CorruptCheckpointError``) and
+``resume=True`` falls back to a fresh run instead of half-loading it.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CorruptCheckpointError, load_checkpoint,
+                              protocol_state_metadata, restore_protocol_state,
+                              restore_pytree, save_checkpoint)
+from repro.core import (LABEL_FLIP, PARAM_TAMPER, Attack, run_pigeon,
+                        run_pigeon_plus)
+
+
+def assert_tail_bit_identical(h_full, h_res, start):
+    """h_res must reproduce h_full.rounds[start:] exactly — float equality,
+    not tolerance."""
+    assert [r["round"] for r in h_res.rounds] == \
+        [r["round"] for r in h_full.rounds[start:]]
+    for ra, rb in zip(h_full.rounds[start:], h_res.rounds):
+        assert ra["clusters"] == rb["clusters"]
+        assert ra["selected"] == rb["selected"]
+        assert ra["val_losses"] == rb["val_losses"]     # bit-identical floats
+        assert ra["train_losses"] == rb["train_losses"]
+        assert ra.get("test_acc") == rb.get("test_acc")
+        assert ra["comm"] == rb["comm"]
+        assert ra.get("detections") == rb.get("detections")
+
+
+# ---------------------------------------------------------------------------
+# resume equivalence: checkpoint at round t, resume, compare bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+@pytest.mark.parametrize("runner", [run_pigeon, run_pigeon_plus],
+                         ids=["pigeon", "pigeon_plus"])
+def test_resume_is_on_stream(tiny_task, tiny_pcfg, tmp_path, engine, runner):
+    """Resume at round 1 of a T=2 run: the first resumed round replays the
+    clustering draw, every per-turn batch draw and every key split, so any
+    off-stream state shows immediately as a cluster/loss mismatch."""
+    data, module = tiny_task
+    pcfg_full = dataclasses.replace(tiny_pcfg, T=2)
+    pcfg_half = dataclasses.replace(tiny_pcfg, T=1)
+    path = str(tmp_path / "ck")
+    h_full = runner(module, data, pcfg_full, malicious={1},
+                    attack=Attack(LABEL_FLIP), engine=engine)
+    runner(module, data, pcfg_half, malicious={1}, attack=Attack(LABEL_FLIP),
+           engine=engine, checkpoint_path=path)
+    h_res = runner(module, data, pcfg_full, malicious={1},
+                   attack=Attack(LABEL_FLIP), engine=engine,
+                   checkpoint_path=path, resume=True)
+    assert_tail_bit_identical(h_full, h_res, start=1)
+
+
+def test_resume_is_on_stream_param_tamper(tiny_task, tiny_pcfg, tmp_path):
+    """Param-tamper splits the protocol key at selection time — the resumed
+    key stream must include those splits too."""
+    data, module = tiny_task
+    pcfg_full = dataclasses.replace(tiny_pcfg, T=2)
+    pcfg_half = dataclasses.replace(tiny_pcfg, T=1)
+    path = str(tmp_path / "ck")
+    kw = dict(malicious={0, 1, 3}, attack=Attack(PARAM_TAMPER),
+              engine="sequential")
+    h_full = run_pigeon(module, data, pcfg_full, **kw)
+    run_pigeon(module, data, pcfg_half, checkpoint_path=path, **kw)
+    h_res = run_pigeon(module, data, pcfg_full, checkpoint_path=path,
+                       resume=True, **kw)
+    assert_tail_bit_identical(h_full, h_res, start=1)
+
+
+def test_resume_with_prefetch_feeder_snapshot(tiny_task, tiny_pcfg, tmp_path):
+    """With prefetch>0 the feeder consumes the streams ahead of the main
+    loop, so the checkpoint must carry the feeder's per-round snapshot (taken
+    right after round t's assembly), not the run-ahead live state."""
+    data, module = tiny_task
+    pcfg_full = dataclasses.replace(tiny_pcfg, T=3)
+    pcfg_half = dataclasses.replace(tiny_pcfg, T=2)
+    path = str(tmp_path / "ck")
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched")
+    h_full = run_pigeon(module, data, pcfg_full, **kw)
+    run_pigeon(module, data, pcfg_half, prefetch=2, checkpoint_path=path, **kw)
+    h_res = run_pigeon(module, data, pcfg_full, prefetch=2,
+                       checkpoint_path=path, resume=True, **kw)
+    assert_tail_bit_identical(h_full, h_res, start=2)
+
+
+def test_protocol_state_metadata_roundtrips_through_json(tiny_pcfg):
+    """The snapshot must survive the checkpoint's JSON serialization — numpy
+    bit-generator states hold >64-bit ints, JAX keys are uint32 pairs."""
+    import json
+
+    import jax
+
+    rng = np.random.default_rng(tiny_pcfg.seed)
+    key = jax.random.PRNGKey(tiny_pcfg.seed)
+    rng.integers(0, 100, size=17)                    # advance both streams
+    key, _ = jax.random.split(key)
+    meta = json.loads(json.dumps(protocol_state_metadata(rng, key)))
+    rng2 = np.random.default_rng(999)
+    key2 = restore_protocol_state(rng2, key, meta)
+    np.testing.assert_array_equal(np.asarray(key2), np.asarray(key))
+    np.testing.assert_array_equal(rng2.integers(0, 100, size=8),
+                                  rng.integers(0, 100, size=8))
+
+
+# ---------------------------------------------------------------------------
+# crash-atomic writes + torn-checkpoint detection
+# ---------------------------------------------------------------------------
+
+def test_save_checkpoint_atomic_leaves_no_temp_residue(tmp_path):
+    path = str(tmp_path / "ck")
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.zeros(3, dtype=np.float32)}
+    save_checkpoint(path, tree, {"round": 4})
+    assert sorted(os.listdir(tmp_path)) == ["ck.json", "ck.npz"]
+    restored = restore_pytree(path, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), tree["w"])
+    _, meta = load_checkpoint(path)
+    assert meta == {"round": 4}
+
+
+def test_torn_checkpoint_token_mismatch_detected(tmp_path):
+    """Simulate the pre-atomic failure mode: the manifest of save A paired
+    with the arrays of save B must be refused, not half-loaded."""
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.ones(3)}, {"round": 0})
+    with open(path + ".json") as f:
+        stale_manifest = f.read()
+    save_checkpoint(path, {"w": np.zeros(3)}, {"round": 1})
+    with open(path + ".json", "w") as f:
+        f.write(stale_manifest)
+    with pytest.raises(CorruptCheckpointError, match="torn"):
+        load_checkpoint(path)
+
+
+def test_mixed_era_torn_checkpoint_detected(tmp_path):
+    """One-sided token (new tokened arrays + legacy token-less manifest, the
+    crash-over-an-upgraded-checkpoint window) must also be refused; only a
+    fully legacy pair (no token on either side) loads."""
+    import json
+
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.ones(3, dtype=np.float32)}, {"round": 1})
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    del meta["token"]                                 # legacy-style manifest
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(CorruptCheckpointError, match="torn"):
+        load_checkpoint(path)
+
+
+def test_truncated_arrays_detected(tmp_path):
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.ones(3)}, {"round": 0})
+    with open(path + ".npz", "r+b") as f:
+        f.truncate(16)
+    with pytest.raises(CorruptCheckpointError):
+        load_checkpoint(path)
+
+
+def test_unparseable_manifest_detected(tmp_path):
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.ones(3)}, {"round": 0})
+    with open(path + ".json", "w") as f:
+        f.write('{"names": ["w"], "tru')             # mid-write crash
+    with pytest.raises(CorruptCheckpointError):
+        load_checkpoint(path)
+
+
+def test_resume_recovers_from_torn_checkpoint(tiny_task, tiny_pcfg, tmp_path):
+    """resume=True against a corrupt checkpoint must warn and run the full
+    trajectory from round 0 (identical to a fresh run), not half-load."""
+    data, module = tiny_task
+    path = str(tmp_path / "ck")
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched")
+    run_pigeon(module, data, tiny_pcfg, checkpoint_path=path, **kw)
+    with open(path + ".npz", "r+b") as f:
+        f.truncate(16)
+    h_fresh = run_pigeon(module, data, tiny_pcfg, **kw)
+    with pytest.warns(UserWarning, match="corrupt checkpoint"):
+        h_res = run_pigeon(module, data, tiny_pcfg, checkpoint_path=path,
+                           resume=True, **kw)
+    assert_tail_bit_identical(h_fresh, h_res, start=0)
+
+
+def test_resume_missing_checkpoint_starts_fresh(tiny_task, tiny_pcfg, tmp_path):
+    data, module = tiny_task
+    path = str(tmp_path / "never_saved")
+    h = run_pigeon(module, data, tiny_pcfg, malicious={1},
+                   attack=Attack(LABEL_FLIP), engine="batched",
+                   checkpoint_path=path, resume=True)
+    assert [r["round"] for r in h.rounds] == list(range(tiny_pcfg.T))

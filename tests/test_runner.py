@@ -19,10 +19,13 @@ import numpy as np
 import pytest
 
 from repro.core import (HONEST, LABEL_FLIP, Attack, ProtocolConfig,
-                        run_pigeon, run_pigeon_plus)
+                        run_pigeon, run_pigeon_plus, run_pigeon_sweep,
+                        run_splitfed)
 from repro.core.engine import assemble_round_batches, sample_batch_idx
-from repro.core.runner import (PLACEMENTS, RoundRunner, RoundSpec, cluster_map,
-                               cluster_mesh, onehot_select)
+from repro.core.runner import (PLACEMENTS, RoundRunner, RoundSpec,
+                               backend_supports_partial_auto, cluster_map,
+                               cluster_mesh, onehot_select, sweep_map,
+                               sweep_mesh)
 from repro.data.pipeline import RoundFeeder
 
 multi_device = pytest.mark.skipif(
@@ -131,6 +134,191 @@ def test_runner_round_selects_and_broadcasts_across_devices():
     np.testing.assert_array_equal(np.asarray(vlosses), np.asarray(vlosses_v))
     np.testing.assert_array_equal(np.asarray(rebro["w"]),
                                   np.asarray(rebro_v["w"]))
+
+
+# ---------------------------------------------------------------------------
+# SplitFed placements (FedAvg combine hook) + sweep placements (2-D mesh)
+# ---------------------------------------------------------------------------
+
+def assert_selection_histories_equivalent(h_a, h_b, exact=False):
+    """SplitFed records carry (selected, val_losses, selected_honest,
+    test_acc) but no clusters/comm — compare what both have."""
+    assert len(h_a.rounds) == len(h_b.rounds)
+    for ra, rb in zip(h_a.rounds, h_b.rounds):
+        assert ra["selected"] == rb["selected"], (ra["round"], ra, rb)
+        assert ra["selected_honest"] == rb["selected_honest"]
+        if exact:
+            assert ra["val_losses"] == rb["val_losses"]
+            assert ra.get("test_acc") == rb.get("test_acc")
+        else:
+            np.testing.assert_allclose(ra["val_losses"], rb["val_losses"],
+                                       rtol=2e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("malicious,attack", [(set(), HONEST),
+                                              ({1}, Attack(LABEL_FLIP))],
+                         ids=["honest", "label_flip"])
+def test_splitfed_placements_match_sequential_oracle(tiny_task, tiny_pcfg,
+                                                     malicious, attack):
+    data, module = tiny_task
+    h_seq = run_splitfed(module, data, tiny_pcfg, malicious=malicious,
+                         attack=attack, engine="sequential")
+    for placement in PLACEMENTS:
+        h = run_splitfed(module, data, tiny_pcfg, malicious=malicious,
+                         attack=attack, engine="batched", placement=placement)
+        assert_selection_histories_equivalent(h_seq, h)
+
+
+def test_splitfed_prefetch_bit_identical(tiny_task, tiny_pcfg):
+    """SplitFed sampling never depends on selection, so the feeder runs at
+    full depth and the trajectory must equal prefetch=0 bit-for-bit — under
+    both placements."""
+    data, module = tiny_task
+    h_sync = run_splitfed(module, data, tiny_pcfg, malicious={1},
+                          attack=Attack(LABEL_FLIP), engine="batched")
+    h_pre = run_splitfed(module, data, tiny_pcfg, malicious={1},
+                         attack=Attack(LABEL_FLIP), engine="batched",
+                         prefetch=2)
+    assert_selection_histories_equivalent(h_sync, h_pre, exact=True)
+    h_pre_sharded = run_splitfed(module, data, tiny_pcfg, malicious={1},
+                                 attack=Attack(LABEL_FLIP), engine="batched",
+                                 placement="sharded", prefetch=1)
+    assert_selection_histories_equivalent(h_sync, h_pre_sharded)
+
+
+def test_splitfed_placement_validation(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    with pytest.raises(ValueError, match="placement"):
+        run_splitfed(module, data, tiny_pcfg, engine="batched",
+                     placement="warp")
+    with pytest.raises(ValueError, match="batched"):
+        run_splitfed(module, data, tiny_pcfg, engine="sequential",
+                     placement="sharded")
+    with pytest.raises(ValueError, match="batched"):
+        run_splitfed(module, data, tiny_pcfg, engine="sequential", prefetch=1)
+
+
+def test_combine_hook_applies_before_validation():
+    """RoundSpec.combine (SplitFed's FedAvg fan-in) must transform the
+    per-client stack into the cluster model the validator sees."""
+    spec = RoundSpec(
+        train_cluster=lambda p, b: (p + b, b.sum(axis=-1)),   # (M_bar,) out
+        validate=lambda p, val: (jnp.abs(p - val), None),
+        combine=lambda p: jnp.mean(p, axis=0))
+    params = jnp.float32(1.0)
+    inputs = jnp.arange(6.0).reshape(2, 3)        # R=2 clusters, M_bar=3
+    new_p, aux, vl, _ = cluster_map(spec, params, inputs, jnp.float32(0.0))
+    np.testing.assert_allclose(np.asarray(new_p), [2.0, 5.0])   # mean(1 + b)
+    np.testing.assert_allclose(np.asarray(vl), [2.0, 5.0])
+    for placement in PLACEMENTS:
+        c = RoundRunner(spec, placement=placement).candidates(
+            params, inputs, jnp.float32(0.0))
+        np.testing.assert_array_equal(np.asarray(c[0]), np.asarray(new_p))
+
+
+def test_sweep_sharded_matches_vmap(tiny_task, tiny_pcfg):
+    """The 2-D (seed, cluster) placement must reproduce the vmap sweep —
+    same per-seed selections and losses, every round."""
+    data, module = tiny_task
+    h_v = run_pigeon_sweep(module, data, tiny_pcfg, malicious={1},
+                           attack=Attack(LABEL_FLIP), seeds=(0, 1))
+    h_s = run_pigeon_sweep(module, data, tiny_pcfg, malicious={1},
+                           attack=Attack(LABEL_FLIP), seeds=(0, 1),
+                           placement="sharded")
+    assert len(h_v) == len(h_s) == 2
+    for h_a, h_b in zip(h_v, h_s):
+        assert len(h_a.rounds) == len(h_b.rounds)
+        for ra, rb in zip(h_a.rounds, h_b.rounds):
+            assert ra["clusters"] == rb["clusters"]
+            assert ra["selected"] == rb["selected"]
+            assert ra["comm"] == rb["comm"]
+            np.testing.assert_allclose(ra["val_losses"], rb["val_losses"],
+                                       rtol=2e-5, atol=1e-6)
+
+
+def test_sweep_map_selects_per_seed():
+    """Unit check of the sweep body: per-seed argmin + winner carry."""
+    spec = RoundSpec(
+        train_cluster=lambda p, b: (p + b.sum(), b.sum()),
+        validate=lambda p, val: (jnp.abs(p - val), None))
+    params = jnp.array([0.0, 10.0])                     # S=2 seeds
+    inputs = jnp.array([[[1.0], [4.0]], [[2.0], [3.0]]])  # (S=2, R=2, 1)
+    winners, aux, vlosses, sels = sweep_map(spec, params, inputs,
+                                            jnp.float32(5.0))
+    # seed 0: candidates 1, 4 -> |1-5|=4 vs |4-5|=1 -> cluster 1 wins (4.0)
+    # seed 1: candidates 12, 13 -> 7 vs 8 -> cluster 0 wins (12.0)
+    np.testing.assert_array_equal(np.asarray(sels), [1, 0])
+    np.testing.assert_allclose(np.asarray(winners), [4.0, 12.0])
+    assert vlosses.shape == (2, 2)
+
+
+@multi_device
+def test_sweep_mesh_factorisation():
+    """On the forced 8-device host the sweep mesh must cover as many devices
+    as (divisor of S) x (divisor of R) allows."""
+    assert dict(sweep_mesh(2, 4).shape) == {"seed": 2, "pod": 4}
+    assert dict(sweep_mesh(2, 2).shape) == {"seed": 2, "pod": 2}
+    assert dict(sweep_mesh(3, 4).shape) == {"seed": 3, "pod": 2}
+    assert dict(sweep_mesh(1, 16).shape) == {"seed": 1, "pod": 8}
+
+
+@multi_device
+def test_sweep_sharded_multi_device_matches_vmap(tiny_task):
+    """S x R = 2 x 2 replicas over a real (2, 2) device mesh."""
+    data, module = tiny_task
+    pcfg = ProtocolConfig(M=4, N=1, T=2, E=2, B=16, lr=0.05, seed=0)
+    h_v = run_pigeon_sweep(module, data, pcfg, malicious={1},
+                           attack=Attack(LABEL_FLIP), seeds=(0, 1))
+    h_s = run_pigeon_sweep(module, data, pcfg, malicious={1},
+                           attack=Attack(LABEL_FLIP), seeds=(0, 1),
+                           placement="sharded")
+    for h_a, h_b in zip(h_v, h_s):
+        for ra, rb in zip(h_a.rounds, h_b.rounds):
+            assert ra["selected"] == rb["selected"]
+            np.testing.assert_allclose(ra["val_losses"], rb["val_losses"],
+                                       rtol=2e-5, atol=1e-6)
+
+
+@multi_device
+def test_splitfed_sharded_multi_device_matches_oracle(tiny_task):
+    """R=4 SplitFed clusters over a 4-device pod mesh vs the sequential
+    oracle."""
+    data, module = tiny_task
+    pcfg = ProtocolConfig(M=4, N=3, T=2, E=2, B=16, lr=0.05, seed=0)
+    h_seq = run_splitfed(module, data, pcfg, malicious={1},
+                         attack=Attack(LABEL_FLIP), engine="sequential")
+    h_s = run_splitfed(module, data, pcfg, malicious={1},
+                       attack=Attack(LABEL_FLIP), engine="batched",
+                       placement="sharded")
+    assert_selection_histories_equivalent(h_seq, h_s)
+
+
+# ---------------------------------------------------------------------------
+# CPU backend gate for partial-auto meshes (ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+@multi_device
+def test_partial_auto_cpu_gate_raises_clear_error():
+    """A mesh with GSPMD-auto axes of size > 1 on CPU cannot execute (XLA has
+    no PartitionId under SPMD there) — the runner must refuse with a clear
+    error at the execution entry instead of letting XLA crash.  The same
+    mesh stays usable for dry-run lowering (gate-free ``*_fn`` bodies)."""
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2), ("pod", "data"))
+    assert not backend_supports_partial_auto(mesh, ("pod",))
+    spec = RoundSpec(train_cluster=lambda p, b: (p, b),
+                     validate=lambda p, v: (jnp.float32(0), None))
+    runner = RoundRunner(spec, placement="sharded", mesh=mesh)
+    with pytest.raises(RuntimeError, match="partial-auto.*CPU"):
+        runner.round(jnp.zeros(()), jnp.zeros((4, 2)), jnp.zeros(()))
+    with pytest.raises(RuntimeError, match="partial-auto.*CPU"):
+        runner.candidates(jnp.zeros(()), jnp.zeros((4, 2)), jnp.zeros(()))
+    # fully-manual meshes (no auto axes) stay allowed on CPU
+    manual = Mesh(np.array(jax.devices()[:2]), ("pod",))
+    assert backend_supports_partial_auto(manual, ("pod",))
+    # lowering the same partial-auto program is still supported
+    jax.jit(runner.round_fn()).lower(
+        jnp.zeros(()), jnp.zeros((4, 2)), jnp.zeros(()))
 
 
 def test_sharded_rejects_indivisible_mesh(tiny_task):
