@@ -1,19 +1,24 @@
-"""Robustness matrix: protocol x threat-model grid over the extended
-adversary subsystem.
+"""Robustness matrix: protocol x threat-model x selection-policy grid over
+the extended adversary and selection subsystems.
 
 Every threat model in the catalogue — the paper's three attacks, the extended
 families (backdoor, Byzantine scaling, gradient noise, replay, stealth,
 param tampering), intermittent/ramp schedules and a mixed population — is run
-against vanilla SL (no defence) and Pigeon-SL (batched engine), recording the
-final test accuracy, Pigeon-SL's selected-cluster honesty rate and tamper
-detections.  Results land in ``experiments/robustness_matrix.json`` with the
-full ThreatModel manifests for provenance.
+against vanilla SL (no defence), Pigeon-SL (batched engine) under each
+requested selection policy, and Pigeon-SL+ (argmin), recording the final
+test accuracy, Pigeon-SL's selected-cluster honesty rate and tamper
+detections.  The selection axis checks in the headline recovery: stealth and
+replay adversaries evade pure loss argmin (honesty rate ~0, the PR 2
+finding) but are flagged by ``loss_plus_distance``'s activation-message
+anomaly scores.  Results land in ``experiments/robustness_matrix.json`` with
+the full ThreatModel manifests for provenance.
 
     PYTHONPATH=src python -m benchmarks.run --only robustness [--full]
+        [--selection argmin,loss_plus_distance]
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Sequence, Tuple
 
 from repro.core import (Attack, BACKDOOR, GRAD_NOISE, GRAD_SCALE, LABEL_FLIP,
                         PARAM_TAMPER, REPLAY, ClientThreat, ProtocolConfig,
@@ -22,6 +27,8 @@ from repro.core import (Attack, BACKDOOR, GRAD_NOISE, GRAD_SCALE, LABEL_FLIP,
 from repro.data import build_image_task
 
 from .common import RoundTimer, csv_row, save_result
+
+DEFAULT_SELECTIONS = ("argmin", "loss_plus_distance")
 
 
 def _threat_catalogue(mal: Tuple[int, ...]) -> Dict[str, ThreatModel]:
@@ -55,7 +62,18 @@ def _threat_catalogue(mal: Tuple[int, ...]) -> Dict[str, ThreatModel]:
     }
 
 
-def run(full: bool = False) -> None:
+def _pigeon_cell(h) -> Dict[str, float]:
+    honest_sel = [r["selected_honest"] for r in h.rounds]
+    return dict(
+        final_acc=h.rounds[-1]["test_acc"],
+        honest_rate=sum(honest_sel) / len(honest_sel),
+        detections=sum(r["detections"] for r in h.rounds),
+        rejected_rounds=sum(1 for r in h.rounds if not r.get("accepted", True)),
+    )
+
+
+def run(full: bool = False,
+        selections: Sequence[str] = DEFAULT_SELECTIONS) -> None:
     if full:
         m, n, t, e, bsz, d_m, d_o, n_test, lr = 12, 3, 30, 20, 64, 2000, 1500, 4000, 1e-2
     else:
@@ -65,33 +83,40 @@ def run(full: bool = False) -> None:
     module = from_cnn(cfg)
     pcfg = ProtocolConfig(M=m, N=n, T=t, E=e, B=bsz, lr=lr, seed=0)
     catalogue = _threat_catalogue((0, 1, 2))
+    selections = tuple(selections)
+    if not selections:
+        raise ValueError("robustness matrix needs at least one selection "
+                         "policy on its policy axis")
 
-    grid: Dict[str, Dict[str, Dict[str, float]]] = {}
+    grid: Dict[str, Dict[str, object]] = {}
     for name, tm in catalogue.items():
         grid[name] = {}
+        runs = 2 + len(selections)           # vanilla + pigeon+ + policy axis
         with RoundTimer() as timer:
             h_v = run_vanilla_sl(module, data, pcfg, threat_model=tm)
-            h_p = run_pigeon(module, data, pcfg, threat_model=tm,
-                             engine="batched")
+            pigeon = {}
+            for sel in selections:
+                h = run_pigeon(module, data, pcfg, threat_model=tm,
+                               engine="batched", selection=sel)
+                pigeon[sel] = _pigeon_cell(h)
             # throughput-matched variant: the fair accuracy comparison
+            # (argmin selection — the paper's rule)
             h_pp = run_pigeon_plus(module, data, pcfg, threat_model=tm,
                                    engine="batched")
         grid[name]["vanilla"] = dict(final_acc=h_v.rounds[-1]["test_acc"])
-        for proto, h in [("pigeon", h_p), ("pigeon_plus", h_pp)]:
-            honest_sel = [r["selected_honest"] for r in h.rounds]
-            grid[name][proto] = dict(
-                final_acc=h.rounds[-1]["test_acc"],
-                honest_rate=sum(honest_sel) / len(honest_sel),
-                detections=sum(r["detections"] for r in h.rounds),
-            )
-        csv_row(f"robustness_{name}", timer.us_per(3 * t),
-                f"pigeon_honest_rate={grid[name]['pigeon']['honest_rate']:.2f};"
-                f"acc_pigeon+={grid[name]['pigeon_plus']['final_acc']:.3f};"
-                f"acc_vanilla={grid[name]['vanilla']['final_acc']:.3f}")
+        grid[name]["pigeon"] = pigeon
+        grid[name]["pigeon_plus"] = _pigeon_cell(h_pp)
+        csv_row(f"robustness_{name}", timer.us_per(runs * t),
+                ";".join([f"pigeon_honest_rate[{sel}]="
+                          f"{pigeon[sel]['honest_rate']:.2f}"
+                          for sel in selections]
+                         + [f"acc_pigeon+={grid[name]['pigeon_plus']['final_acc']:.3f}",
+                            f"acc_vanilla={grid[name]['vanilla']['final_acc']:.3f}"]))
 
     save_result("robustness_matrix", dict(
         scale=dict(M=m, N=n, T=t, E=e, B=bsz, d_m=d_m, d_o=d_o,
                    n_test=n_test, lr=lr, full=full),
+        selections=list(selections),
         threat_models={name: tm.describe() for name, tm in catalogue.items()},
         grid=grid,
     ))

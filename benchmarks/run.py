@@ -17,7 +17,23 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="table1|fig3|fig4|fig5|ablation|roofline|robustness|"
                          "pipeline|placements")
+    ap.add_argument("--selection", default=None,
+                    help="comma-separated selection policies for the "
+                         "robustness matrix's policy axis (default: "
+                         "argmin,loss_plus_distance)")
     args = ap.parse_args()
+
+    selections = None
+    if args.selection:
+        if args.only not in (None, "robustness"):
+            ap.error("--selection only applies to the robustness matrix; "
+                     f"it has no effect on --only {args.only}")
+        from repro.selection import resolve_policy
+        selections = tuple(s.strip() for s in args.selection.split(",") if s.strip())
+        if not selections:
+            ap.error(f"--selection {args.selection!r} parses to no policy names")
+        for s in selections:
+            resolve_policy(s)        # fail fast on typos, like --only
 
     from . import (ablation_shared_set, fig3_mnist_attacks, fig4_cifar_attacks,
                    fig5_fig6_vary_n, pipeline_overlap, placement_grid,
@@ -30,7 +46,9 @@ def main() -> None:
         "fig5": lambda: fig5_fig6_vary_n.run(args.full),
         "ablation": lambda: ablation_shared_set.run(args.full),
         "roofline": lambda: roofline_report.run(markdown=False),
-        "robustness": lambda: robustness_matrix.run(args.full),
+        "robustness": lambda: robustness_matrix.run(
+            args.full, selections if selections is not None
+            else robustness_matrix.DEFAULT_SELECTIONS),
         "pipeline": lambda: pipeline_overlap.run(args.full),
         "placements": lambda: placement_grid.run(args.full),
     }

@@ -9,6 +9,9 @@ from the pluggable ``repro.adversary`` subsystem.
 from ..adversary import (ALWAYS, BACKDOOR, GRAD_NOISE, GRAD_SCALE, REPLAY,
                          STEALTH, ClientThreat, Schedule, ThreatModel,
                          after_warmup, every_k, ramp, stealth)
+from ..selection import (LossPlusDistancePolicy, MedianOfMeansPolicy,
+                         SelectionPolicy, TrimmedPolicy, resolve_policy,
+                         selection_policies)
 from .attacks import (ACTIVATION, GRADIENT, HONEST, KINDS, LABEL_FLIP, NONE,
                       PARAM_TAMPER, Attack, AttackVec, attack_vec,
                       attack_vec_for_clusters)
@@ -18,10 +21,10 @@ from .engine import (batched_round, onehot_select, run_pigeon_sweep,
 from .protocol import (ENGINES, ClientData, CommMeter, History, ProtocolConfig,
                        run_pigeon, run_pigeon_plus, run_splitfed,
                        run_vanilla_sl)
-from .runner import (PLACEMENTS, RoundRunner, RoundSpec,
+from .runner import (PLACEMENTS, RoundRunner, RoundSpec, VerifyConfig,
                      check_partial_auto_backend, cluster_map, cluster_mesh,
-                     protocol_round_spec, protocol_runner, sweep_map,
-                     sweep_mesh)
+                     protocol_accept_runner, protocol_round_spec,
+                     protocol_runner, select_map, sweep_map, sweep_mesh)
 from .split import (SplitModule, client_update, client_update_vec, from_cnn,
                     from_lm, sl_minibatch_grads, sl_minibatch_grads_vec)
 from .validation import check_handoff, select_cluster, validation_loss
@@ -37,9 +40,12 @@ __all__ = [
     "ClientData", "CommMeter", "History", "ProtocolConfig", "ENGINES",
     "run_pigeon", "run_pigeon_plus", "run_splitfed", "run_vanilla_sl",
     "run_pigeon_sweep", "batched_round", "train_round_batched", "onehot_select",
-    "PLACEMENTS", "RoundRunner", "RoundSpec", "cluster_map", "cluster_mesh",
-    "sweep_map", "sweep_mesh", "check_partial_auto_backend",
-    "protocol_round_spec", "protocol_runner",
+    "PLACEMENTS", "RoundRunner", "RoundSpec", "VerifyConfig", "cluster_map",
+    "select_map", "cluster_mesh", "sweep_map", "sweep_mesh",
+    "check_partial_auto_backend", "protocol_round_spec", "protocol_runner",
+    "protocol_accept_runner",
+    "SelectionPolicy", "MedianOfMeansPolicy", "LossPlusDistancePolicy",
+    "TrimmedPolicy", "resolve_policy", "selection_policies",
     "SplitModule", "client_update", "client_update_vec", "from_cnn", "from_lm",
     "sl_minibatch_grads", "sl_minibatch_grads_vec",
     "check_handoff", "select_cluster", "validation_loss",

@@ -41,9 +41,10 @@ from .clustering import cluster_is_honest, make_clusters
 from .protocol import (ClientData, CommMeter, History, ProtocolConfig,
                        _count_params, account_client_turn, account_validation,
                        cut_width, sample_batch_idx)
-from .runner import (cluster_map, onehot_select, protocol_round_spec,
-                     protocol_runner)
-from .split import SplitModule, client_update_vec_impl
+from .runner import (cluster_map, onehot_select, protocol_accept_runner,
+                     protocol_round_spec, protocol_runner)
+from .split import (SplitModule, client_update_vec_impl,
+                    client_update_vec_stats_impl)
 
 Pytree = Any
 
@@ -145,23 +146,29 @@ def train_round_batched(module: SplitModule, theta, clusters, data: ClientData,
                         pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                         rng: np.random.Generator, key: jax.Array, meter: CommMeter,
                         d_c: int, x0, y0, placement: str = "vmap",
-                        prefetched=None) -> Tuple[jax.Array, List[Dict[str, Any]]]:
+                        prefetched=None, with_stats: bool = False
+                        ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
     """Batched replacement for the sequential per-cluster loop of
     ``run_pigeon``: one compiled call produces all R candidate
-    (gamma, phi, val_loss, val_acts) tuples.  The threat model's per-round
-    attack state arrives as AttackVec *data*, so heterogeneous mixtures and
-    schedule phases reuse the same compiled program; ``placement`` picks the
-    RoundRunner's device mapping (single-device vmap or the cluster axis
-    sharded over a host/pod mesh).  ``prefetched`` carries a round payload
-    assembled ahead of time by the RoundFeeder (``data/pipeline.py``) —
-    when given, the RNG/key streams were already consumed by the feeder
-    thread in this exact order."""
+    (gamma, phi, val_loss, val_acts) tuples, selection left to the host-side
+    reference cascade (``repro.selection.select_host`` — the param-tamper
+    path; the default path is :func:`pigeon_round_accept`).  The threat
+    model's per-round attack state arrives as AttackVec *data*, so
+    heterogeneous mixtures and schedule phases reuse the same compiled
+    program; ``placement`` picks the RoundRunner's device mapping
+    (single-device vmap or the cluster axis sharded over a host/pod mesh).
+    ``prefetched`` carries a round payload assembled ahead of time by the
+    RoundFeeder (``data/pipeline.py``) — when given, the RNG/key streams
+    were already consumed by the feeder thread in this exact order.
+    ``with_stats`` additionally surfaces per-client transmitted-message
+    statistics in each result (anomaly-scoring selection policies)."""
     if prefetched is None:
         key, prefetched = assemble_round(rng, key, data, clusters, pcfg, tm, t)
     xs, ys, avec, keys = prefetched
-    (gs, ps), losses, vlosses, vacts = protocol_runner(
-        module, pcfg.lr, placement).candidates(
+    (gs, ps), aux, vlosses, vacts = protocol_runner(
+        module, pcfg.lr, placement, with_stats).candidates(
         theta, (xs, ys, avec, keys), (x0, y0))
+    losses, stats = (aux if with_stats else (aux, None))
 
     d_cl = _count_params(theta[0])
     for cluster in clusters:
@@ -170,15 +177,64 @@ def train_round_batched(module: SplitModule, theta, clusters, data: ClientData,
 
     losses = np.asarray(losses)
     vlosses = np.asarray(vlosses)
+    stats = None if stats is None else np.asarray(stats)
     results = []
     for r, cluster in enumerate(clusters):
         # gamma/phi/vacts stay as views into the stacked arrays; the
         # selection loop materialises only the candidates it inspects
         # (protocol.res_params / res_vacts).
-        results.append(dict(vloss=float(vlosses[r]), cluster=cluster,
-                            train_loss=float(np.mean(losses[r])),
-                            _stacked=(gs, ps, vacts, r)))
+        res = dict(vloss=float(vlosses[r]), cluster=cluster,
+                   train_loss=float(np.mean(losses[r])),
+                   _stacked=(gs, ps, vacts, r))
+        if stats is not None:
+            res["msg_stats"] = stats[r]
+        results.append(res)
     return key, results
+
+
+def pigeon_round_accept(module: SplitModule, theta, clusters, data: ClientData,
+                        pcfg: ProtocolConfig, tm: ThreatModel, t: int,
+                        rng: np.random.Generator, key: jax.Array,
+                        meter: CommMeter, d_c: int, x0, y0, policy,
+                        placement: str = "vmap", prefetched=None):
+    """The default batched round: training, validation AND the whole
+    acceptance cascade (policy score -> rank -> handoff verify -> commit)
+    in one compiled program, with a single stacked host fetch.  Returns
+    ``(key, theta', record)`` where ``record`` carries the History fields
+    (val_losses / train_losses / selected / detections / accepted).
+
+    Only callable when the threat model mounts no handoff (param-tamper)
+    attacks — those split the protocol key per *visited* candidate, which is
+    inherently host-sequenced (``repro.selection.select_host``)."""
+    from ..selection import unpack_fetch
+    assert not tm.has_param_tamper, \
+        "param-tamper threat models must use the host selection cascade"
+    if prefetched is None:
+        key, prefetched = assemble_round(rng, key, data, clusters, pcfg, tm, t)
+    runner = protocol_accept_runner(module, pcfg.lr, placement, policy,
+                                    pcfg.tamper_check, pcfg.tamper_tol)
+    theta_next, fetch = runner.accept(theta, prefetched, (x0, y0))
+
+    d_cl = _count_params(theta[0])
+    for cluster in clusters:
+        for j in range(len(cluster)):
+            account_client_turn(meter, pcfg, d_c, d_cl,
+                                handoff=j < len(cluster) - 1)
+
+    vlosses, tlosses, selected, detections, accepted = unpack_fetch(
+        np.asarray(fetch), len(clusters))          # the round's one host sync
+    # Table I accounting for the handoff re-checks: one R-recipient
+    # re-transmission per visited candidate, exactly as the host cascade
+    # charges per visit (detections failures + the accepted one).
+    if pcfg.tamper_check:
+        visited = detections + (1 if accepted else 0)
+        d_o = int(x0.shape[0])
+        meter.validation_floats += visited * pcfg.R * d_o * d_c
+        meter.client_passes += visited * pcfg.R * d_o
+    record = dict(val_losses=[float(v) for v in vlosses],
+                  train_losses=[float(v) for v in tlosses],
+                  selected=selected, detections=detections, accepted=accepted)
+    return key, theta_next, record
 
 
 def train_cluster_batched(module: SplitModule, theta, cluster, data: ClientData,
@@ -207,14 +263,17 @@ def train_cluster_batched(module: SplitModule, theta, cluster, data: ClientData,
 # ---------------------------------------------------------------------------
 
 @lru_cache(maxsize=None)
-def splitfed_round_spec(module: SplitModule, lr: float) -> "RoundSpec":
+def splitfed_round_spec(module: SplitModule, lr: float,
+                        with_stats: bool = False) -> "RoundSpec":
     """SplitFed's per-cluster programs as a RoundRunner binding: every client
     trains *in parallel* from the cluster's incoming theta (vmap over the
     client axis, vs the Pigeon chain's scan), the RoundSpec ``combine`` hook
     FedAvg-fans the per-client results into the cluster model, and shared-set
     validation is identical to the Pigeon spec.  Binding through the runner
-    gives SplitFed both placements and the prefetch pipeline for free —
-    there is no bespoke SplitFed round body any more."""
+    gives SplitFed both placements, the prefetch pipeline and the pluggable
+    selection policies for free — there is no bespoke SplitFed round body any
+    more.  No ``handoff_acts`` hook: SplitFed has no chained parameter
+    handoff, so the fused cascade's verify stage stays disabled."""
     from .runner import RoundSpec
 
     def train_cluster(theta, inputs):
@@ -222,12 +281,16 @@ def splitfed_round_spec(module: SplitModule, lr: float) -> "RoundSpec":
         gamma, phi = theta
 
         def per_client(x, y, av, k):
+            if with_stats:
+                g, p, loss, stats = client_update_vec_stats_impl(
+                    module, av, gamma, phi, (x, y), lr, k)
+                return (g, p), (loss, stats)
             g, p, loss = client_update_vec_impl(module, av, gamma, phi,
                                                 (x, y), lr, k)
             return (g, p), loss
 
-        (gs, ps), losses = jax.vmap(per_client)(xs_c, ys_c, av_c, keys_c)
-        return (gs, ps), losses
+        (gs, ps), aux = jax.vmap(per_client)(xs_c, ys_c, av_c, keys_c)
+        return (gs, ps), aux
 
     def fedavg(theta):
         return jax.tree.map(lambda a: jnp.mean(a, axis=0), theta)
@@ -240,14 +303,42 @@ def splitfed_round_spec(module: SplitModule, lr: float) -> "RoundSpec":
         # (R, D_o, d_c) activation stack would be dead weight every round
         return module.ap_loss(p, acts, y0), None
 
-    return RoundSpec(train_cluster, validate, combine=fedavg)
+    def validate_sharded(theta, val, k):
+        from .runner import sharded_validation_losses
+        g, p = theta
+        x0, y0 = val
+        acts = module.client_forward(g, x0)
+        shard_losses = sharded_validation_losses(module, p, acts, y0, k)
+        return module.ap_loss(p, acts, y0), shard_losses, None
+
+    from .runner import make_train_summary
+    return RoundSpec(
+        train_cluster, validate, combine=fedavg,
+        validate_sharded=validate_sharded,
+        train_summary=make_train_summary(with_stats),
+        message_stats=(lambda aux: aux[1]) if with_stats else None)
 
 
 @lru_cache(maxsize=None)
-def splitfed_runner(module: SplitModule, lr: float, placement: str = "vmap"):
-    """Cached per (module, lr, placement), like :func:`protocol_runner`."""
+def splitfed_runner(module: SplitModule, lr: float, placement: str = "vmap",
+                    with_stats: bool = False):
+    """Cached per (module, lr, placement, stats), like
+    :func:`protocol_runner`."""
     from .runner import RoundRunner
-    return RoundRunner(splitfed_round_spec(module, lr), placement=placement)
+    return RoundRunner(splitfed_round_spec(module, lr, with_stats),
+                       placement=placement)
+
+
+@lru_cache(maxsize=None)
+def splitfed_accept_runner(module: SplitModule, lr: float, placement: str,
+                           select):
+    """SplitFed's fused-selection runner: the policy cascade with the verify
+    stage off (no chained handoff to tamper with)."""
+    from .runner import RoundRunner, VerifyConfig
+    spec = splitfed_round_spec(module, lr,
+                               with_stats=select.needs_message_stats)
+    return RoundRunner(spec, placement=placement, select=select,
+                       verify=VerifyConfig(enabled=False))
 
 
 @partial(jax.jit, static_argnums=(1, 2))
@@ -290,25 +381,54 @@ def splitfed_round_batched(module: SplitModule, theta, clusters, data: ClientDat
                            pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                            rng: np.random.Generator,
                            key: jax.Array, x0, y0, placement: str = "vmap",
-                           prefetched=None
+                           prefetched=None, with_stats: bool = False
                            ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
     """Batched SplitFed round through the placement-aware RoundRunner (the
-    FedAvg combine hook makes the cluster model the mean of its clients).
+    FedAvg combine hook makes the cluster model the mean of its clients),
+    selection left to the caller — the host reference path.
     ``prefetched`` carries a payload pre-assembled by the RoundFeeder — the
     feeder thread already consumed the RNG/key streams in this order."""
     if prefetched is None:
         key, prefetched = assemble_splitfed_round(rng, key, data, clusters,
                                                   pcfg, tm, t)
     xs, ys, avec, keys = prefetched
-    (g_avg, p_avg), _, vlosses, _ = splitfed_runner(
-        module, pcfg.lr, placement).candidates(
+    (g_avg, p_avg), aux, vlosses, _ = splitfed_runner(
+        module, pcfg.lr, placement, with_stats).candidates(
         theta, (xs, ys, avec, keys), (x0, y0))
+    stats = np.asarray(aux[1]) if with_stats else None
     vlosses = np.asarray(vlosses)
     results = []
     for r, cluster in enumerate(clusters):
-        results.append(dict(vloss=float(vlosses[r]), cluster=cluster,
-                            _stacked=(g_avg, p_avg, None, r)))
+        res = dict(vloss=float(vlosses[r]), cluster=cluster,
+                   _stacked=(g_avg, p_avg, None, r))
+        if stats is not None:
+            res["msg_stats"] = stats[r]
+        results.append(res)
     return key, results
+
+
+def splitfed_round_accept(module: SplitModule, theta, clusters,
+                          data: ClientData, pcfg: ProtocolConfig,
+                          tm: ThreatModel, t: int, rng: np.random.Generator,
+                          key: jax.Array, x0, y0, policy,
+                          placement: str = "vmap", prefetched=None):
+    """SplitFed's default batched round: FedAvg per cluster + the policy
+    selection cascade in one compiled program, one stacked host fetch.
+    Returns ``(key, theta', record)`` like :func:`pigeon_round_accept`
+    (``detections`` always 0 and ``accepted`` always True — no handoff
+    verify stage)."""
+    from ..selection import unpack_fetch
+    if prefetched is None:
+        key, prefetched = assemble_splitfed_round(rng, key, data, clusters,
+                                                  pcfg, tm, t)
+    runner = splitfed_accept_runner(module, pcfg.lr, placement, policy)
+    theta_next, fetch = runner.accept(theta, prefetched, (x0, y0))
+    vlosses, tlosses, selected, detections, accepted = unpack_fetch(
+        np.asarray(fetch), len(clusters))
+    record = dict(val_losses=[float(v) for v in vlosses],
+                  train_losses=[float(v) for v in tlosses],
+                  selected=selected, detections=detections, accepted=accepted)
+    return key, theta_next, record
 
 
 # ---------------------------------------------------------------------------
@@ -316,16 +436,18 @@ def splitfed_round_batched(module: SplitModule, theta, clusters, data: ClientDat
 # ---------------------------------------------------------------------------
 
 def sweep_round(module: SplitModule, lr: float, theta_s, inputs, val,
-                placement: str = "vmap"):
+                placement: str = "vmap", policy=None):
     """One global round for S independent protocol replicas through the
-    RoundRunner's sweep entry: per seed, the cluster-parallel round + argmin
+    RoundRunner's sweep entry: per seed, the cluster-parallel round + policy
     selection + winner carry, all inside one compiled program.  Under
     ``placement="sharded"`` the S x R replica grid is laid over a 2-D
-    ``(seed, pod)`` device mesh (per-seed argmin stays on device: the
-    cluster-axis loss all-gather and the winner psum are the only
-    collectives).  Returns ``(theta_S, train_losses_SRM, vlosses_SR,
+    ``(seed, pod)`` device mesh (per-seed selection stays on device: the
+    cluster-axis feature all-gathers and the winner psum are the only
+    collectives).  Returns ``(theta_S, train_aux_SRM, vlosses_SR,
     sels_S)``."""
-    return protocol_runner(module, lr, placement).sweep(theta_s, inputs, val)
+    with_stats = policy is not None and policy.needs_message_stats
+    return protocol_runner(module, lr, placement, with_stats,
+                           policy).sweep(theta_s, inputs, val)
 
 
 @lru_cache(maxsize=None)
@@ -357,7 +479,8 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
                      malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                      seeds: Sequence[int] = (0, 1, 2),
                      verbose: bool = False, placement: str = "vmap",
-                     threat_model: Optional[ThreatModel] = None) -> List[History]:
+                     threat_model: Optional[ThreatModel] = None,
+                     selection="argmin") -> List[History]:
     """S whole Pigeon-SL replicas (different seeds) advanced in lockstep: one
     compiled call per global round trains S x R clusters and performs the
     per-seed argmin selection on device.  ``placement="vmap"`` runs the
@@ -367,14 +490,18 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
     :func:`repro.core.runner.sweep_mesh`), with the per-seed argmin still on
     device.
 
-    Selection happens inside the compiled program, so the host-side
-    param-tamper handoff check is not modelled — the sweep supports the
-    honest case and every message-level threat model (heterogeneous
-    mixtures and schedules included).  Returns one ``History`` per seed
-    (CommMeter accounting is analytic and identical across seeds).
+    Selection happens inside the compiled program under the policy named by
+    ``selection`` (``repro.selection``; per-seed scores, default argmin), so
+    the host-side param-tamper handoff check is not modelled — the sweep
+    supports the honest case and every message-level threat model
+    (heterogeneous mixtures and schedules included).  Returns one
+    ``History`` per seed (CommMeter accounting is analytic and identical
+    across seeds).
     """
+    from ..selection import resolve_policy
     from .runner import check_placement
     check_placement(placement)
+    policy = resolve_policy(selection)
     tm = resolve_threat_model(malicious, attack, threat_model)
     if tm.has_param_tamper:
         raise ValueError("run_pigeon_sweep does not model the param-tamper "
@@ -405,11 +532,12 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
             key_rows.append(krow)
             avecs.append(avec_i)
         avec = jax.tree.map(lambda *ls: jnp.stack(ls), *avecs)
-        thetas, tloss_rm, vlosses, sels = sweep_round(
+        thetas, aux, vlosses, sels = sweep_round(
             module, pcfg.lr, thetas,
             (jnp.stack(xs), jnp.stack(ys), avec, jnp.stack(key_rows)),
-            (x0, y0), placement)
+            (x0, y0), placement, policy)
         gammas, phis = thetas
+        tloss_rm = aux[0] if isinstance(aux, tuple) else aux
         tlosses = jnp.mean(tloss_rm, axis=-1)       # (S, R): mean over clients
 
         meter = CommMeter()

@@ -10,20 +10,19 @@ formulas can be validated against the measured counts.
 from __future__ import annotations
 
 import dataclasses
-import math
+from functools import lru_cache
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import attacks as atk
 from ..adversary import ThreatModel, resolve_threat_model
+from ..selection import resolve_policy, select_host
 from .attacks import Attack, HONEST
 from .clustering import cluster_is_honest, make_clusters
-from .split import SplitModule, client_update
-from .validation import (check_handoff, handoff_activations, select_cluster,
-                         validation_loss)
+from .split import SplitModule, client_update, client_update_stats
+from .validation import validation_loss
 
 Pytree = Any
 
@@ -160,21 +159,34 @@ def res_vacts(res: Dict[str, Any]):
     return res["vacts"]
 
 
+@lru_cache(maxsize=None)
+def _eval_count_fn(module: SplitModule):
+    """Jitted predict-and-count-correct reduction: each eval batch is one
+    device op returning a single int32, instead of a full logits transfer
+    followed by a host argmax.  Covers both the classifier (B, C) and LM
+    (B, S, V) logit layouts — argmax over the trailing class axis, summed
+    over every remaining label position."""
+
+    @jax.jit
+    def count(gamma, phi, xb, yb):
+        logits = module.predict(gamma, phi, xb)
+        return jnp.sum(jnp.argmax(logits, axis=-1) == yb, dtype=jnp.int32)
+
+    return count
+
+
 def evaluate(module: SplitModule, gamma, phi, x_test: np.ndarray, y_test: np.ndarray,
              batch: int = 500) -> float:
-    correct, total = 0, 0
+    count = _eval_count_fn(module)
+    correct = None
+    total = 0
     for i in range(0, x_test.shape[0], batch):
         xb = jnp.asarray(x_test[i : i + batch])
-        yb = y_test[i : i + batch]
-        logits = np.asarray(module.predict(gamma, phi, xb))
-        if logits.ndim == 3:      # LM: (B, S, V) — per-token accuracy
-            pred = logits.argmax(-1)
-            correct += (pred == yb).sum()
-            total += yb.size
-        else:
-            correct += (logits.argmax(-1) == yb).sum()
-            total += yb.shape[0]
-    return float(correct) / float(total)
+        yb = jnp.asarray(y_test[i : i + batch])
+        c = count(gamma, phi, xb, yb)
+        correct = c if correct is None else correct + c   # stays on device
+        total += int(np.prod(y_test[i : i + batch].shape))
+    return float(correct) / float(total)                  # one final sync
 
 
 # ---------------------------------------------------------------------------
@@ -184,16 +196,29 @@ def evaluate(module: SplitModule, gamma, phi, x_test: np.ndarray, y_test: np.nda
 def train_cluster(module: SplitModule, gamma, phi, cluster: Sequence[int],
                   data: ClientData, pcfg: ProtocolConfig, tm: ThreatModel,
                   t: int, rng: np.random.Generator, key: jax.Array,
-                  meter: CommMeter, d_c: int) -> Tuple[Pytree, Pytree, float]:
+                  meter: CommMeter, d_c: int, collect_stats: bool = False):
+    """One cluster's within-cluster client chain.  With ``collect_stats``
+    additionally returns the (M_bar, S) per-client transmitted-message
+    statistics (``core.split.message_stats``) the anomaly-scoring selection
+    policies read; the parameter/loss arithmetic is identical either way."""
     d_cl = _count_params(gamma)
     losses = []
+    stats = []
     for j, client in enumerate(cluster):
         xs, ys = _sample_batches(rng, data.x[client], data.y[client], pcfg.E, pcfg.B)
         key, sub = jax.random.split(key)
         a = tm.attack_for(client, t)
-        gamma, phi, loss = client_update(module, a, gamma, phi, (xs, ys), pcfg.lr, sub)
+        if collect_stats:
+            gamma, phi, loss, st = client_update_stats(module, a, gamma, phi,
+                                                       (xs, ys), pcfg.lr, sub)
+            stats.append(np.asarray(st))
+        else:
+            gamma, phi, loss = client_update(module, a, gamma, phi, (xs, ys),
+                                             pcfg.lr, sub)
         losses.append(float(loss))
         account_client_turn(meter, pcfg, d_c, d_cl, handoff=j < len(cluster) - 1)
+    if collect_stats:
+        return gamma, phi, float(np.mean(losses)), np.stack(stats)
     return gamma, phi, float(np.mean(losses))
 
 
@@ -212,7 +237,7 @@ def _train_round(module: SplitModule, theta, clusters, data: ClientData,
                  pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                  rng: np.random.Generator, key: jax.Array, meter: CommMeter,
                  d_c: int, x0, y0, engine: str, placement: str = "vmap",
-                 prefetched=None):
+                 prefetched=None, with_stats: bool = False):
     """Train all R clusters of round t from the same theta^t.  Returns
     (key', results) where results[r] holds gamma/phi/vloss/vacts/cluster/
     train_loss for cluster r.  Both engines consume the numpy RNG and the JAX
@@ -221,15 +246,21 @@ def _train_round(module: SplitModule, theta, clusters, data: ClientData,
         from .engine import train_round_batched
         return train_round_batched(module, theta, clusters, data, pcfg,
                                    tm, t, rng, key, meter, d_c, x0, y0,
-                                   placement=placement, prefetched=prefetched)
+                                   placement=placement, prefetched=prefetched,
+                                   with_stats=with_stats)
     results = []
     for cluster in clusters:
         key, sub = jax.random.split(key)
-        g, p, train_loss = train_cluster(module, theta[0], theta[1], cluster, data,
-                                         pcfg, tm, t, rng, sub, meter, d_c)
+        out = train_cluster(module, theta[0], theta[1], cluster, data,
+                            pcfg, tm, t, rng, sub, meter, d_c,
+                            collect_stats=with_stats)
+        g, p, train_loss = out[:3]
         vloss, vacts = validation_loss(module, g, p, x0, y0)
-        results.append(dict(gamma=g, phi=p, vloss=float(vloss), vacts=vacts,
-                            cluster=cluster, train_loss=train_loss))
+        res = dict(gamma=g, phi=p, vloss=float(vloss), vacts=vacts,
+                   cluster=cluster, train_loss=train_loss)
+        if with_stats:
+            res["msg_stats"] = out[3]
+        results.append(res)
     return key, results
 
 
@@ -239,11 +270,25 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                checkpoint_path: Optional[str] = None, resume: bool = False,
                engine: str = "sequential", placement: str = "vmap",
                prefetch: int = 0,
-               threat_model: Optional[ThreatModel] = None) -> History:
+               threat_model: Optional[ThreatModel] = None,
+               selection="argmin",
+               _force_host_selection: bool = False) -> History:
     """Pigeon-SL (Algorithm 1).  Execution knobs beyond the paper:
 
     * ``engine`` — ``"sequential"`` (reference oracle) or ``"batched"`` (one
       compiled program per round via the RoundRunner).
+    * ``selection`` — a registered :mod:`repro.selection` policy name
+      (``"argmin"`` / ``"median_of_means"`` / ``"loss_plus_distance"`` /
+      ``"trimmed"``) or a policy instance.  The default ``"argmin"`` is the
+      paper's rule and reproduces the pre-subsystem trajectories
+      bit-for-bit.  Under the batched engine the whole acceptance cascade
+      (score -> rank -> handoff verify -> commit) is compiled into the round
+      program with a single stacked host fetch per round; the host-side
+      reference cascade (``repro.selection.select_host``) runs for the
+      sequential oracle and for param-tamper threat models, whose handoff
+      tampering consumes the protocol key per visited candidate.
+      ``_force_host_selection`` pins the batched engine to the host cascade
+      (the equivalence suite's oracle knob).
     * ``placement`` — batched engine only: ``"vmap"`` (cluster axis vmapped
       on one device) or ``"sharded"`` (cluster axis laid over a device mesh).
     * ``prefetch`` — batched engine only: double-buffer host-side round
@@ -265,7 +310,14 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
       half-loaded.
     """
     _check_engine(engine, placement, prefetch)
+    policy = resolve_policy(selection)
     tm = resolve_threat_model(malicious, attack, threat_model)
+    # The fused on-device cascade covers every message-level threat model;
+    # handoff (param-tamper) attacks are applied host-side and split the
+    # protocol key per *visited* candidate, so they pin selection to the
+    # host reference cascade (exactly like the prefetch depth bound).
+    fused_selection = (engine == "batched" and not tm.has_param_tamper
+                      and not _force_host_selection)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
     key, k0 = jax.random.split(key)
@@ -343,43 +395,43 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                 clusters = make_clusters(rng, pcfg.M, pcfg.R)
                 prefetched = None
                 stream_snap = None
-            key, results = _train_round(module, theta, clusters, data, pcfg,
-                                        tm, t, rng, key, meter, d_c, x0, y0,
-                                        engine, placement, prefetched)
-            for _ in results:
+            if fused_selection:
+                # Default batched path: train + validate + the whole
+                # score/rank/verify/commit cascade in ONE compiled program;
+                # the stacked record fetch is the round's single host sync.
+                from .engine import pigeon_round_accept
+                key, theta, sel_rec = pigeon_round_accept(
+                    module, theta, clusters, data, pcfg, tm, t, rng, key,
+                    meter, d_c, x0, y0, policy, placement, prefetched)
+                selected = sel_rec["selected"]
+                accepted = sel_rec["accepted"]
+                detection_events = sel_rec["detections"]
+                val_losses = sel_rec["val_losses"]
+                train_losses = sel_rec["train_losses"]
+                sel_cluster = clusters[selected]
+            else:
+                # Reference path (sequential oracle / param-tamper threat
+                # models): all R candidates, then the host-side cascade.
+                key, results = _train_round(
+                    module, theta, clusters, data, pcfg, tm, t, rng, key,
+                    meter, d_c, x0, y0, engine, placement, prefetched,
+                    with_stats=policy.needs_message_stats)
+                key, outcome = select_host(policy, module, results, theta,
+                                           tm, t, key, pcfg, meter, x0, y0,
+                                           d_c)
+                theta = outcome.theta
+                selected = outcome.selected
+                accepted = outcome.accepted
+                detection_events = outcome.detections
+                val_losses = [res["vloss"] for res in results]
+                train_losses = [res["train_loss"] for res in results]
+                sel_cluster = results[selected]["cluster"]
+            for _ in clusters:
                 account_validation(meter, d_o, d_c)
-
-            order = np.argsort([res["vloss"] for res in results])
-            detection_events = 0
-            selected = None
-            for cand in order:
-                res = results[cand]
-                last_client = res["cluster"][-1]
-                g_sel, p_sel = res_params(res)
-                handed = g_sel
-                pt = tm.param_attack_for(last_client, t)
-                if pt is not None:
-                    key, sub = jax.random.split(key)
-                    handed = atk.tamper_params(pt, g_sel, sub)
-                if pcfg.tamper_check:
-                    # next-round first clients re-transmit g(x0, gamma_received);
-                    # >=1 of the R recipients is honest, so a tampered handoff is
-                    # always visible against the validation-time activations.
-                    recv = handoff_activations(module, handed, x0)
-                    meter.validation_floats += pcfg.R * d_o * d_c
-                    meter.client_passes += pcfg.R * d_o
-                    ok, dist = check_handoff(res_vacts(res), [recv], pcfg.tamper_tol)
-                    if not ok:
-                        detection_events += 1
-                        continue      # discard tampered cluster, reselect
-                selected = cand
-                theta = (handed, p_sel)
-                break
-            if selected is None:      # every cluster tampered: keep theta^t
-                selected = int(order[0])
-
-            sel_res = results[selected]
-            meter.param_floats += pcfg.R * d_cl      # broadcast to next first clients
+            if accepted:
+                # broadcast to next first clients (no broadcast happens when
+                # every cluster failed the tamper check and theta^t is kept)
+                meter.param_floats += pcfg.R * d_cl
 
             # Pigeon-SL+: R-1 extra sub-rounds on the selected cluster
             if plus:
@@ -387,12 +439,12 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                     if engine == "batched":
                         from .engine import train_cluster_batched
                         key, g, p, _ = train_cluster_batched(
-                            module, theta, sel_res["cluster"], data, pcfg, tm,
+                            module, theta, sel_cluster, data, pcfg, tm,
                             t, rng, key, meter, d_c)
                     else:
                         key, sub = jax.random.split(key)
                         g, p, _ = train_cluster(module, theta[0], theta[1],
-                                                sel_res["cluster"], data, pcfg,
+                                                sel_cluster, data, pcfg,
                                                 tm, t, rng, sub, meter, d_c)
                     theta = (g, p)
                     meter.param_floats += _count_params(g)   # subround handoff to 1st client
@@ -400,10 +452,11 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
             rec = dict(
                 round=t,
                 clusters=clusters,
-                val_losses=[res["vloss"] for res in results],
-                train_losses=[res["train_loss"] for res in results],
+                val_losses=val_losses,
+                train_losses=train_losses,
                 selected=selected,
-                selected_honest=cluster_is_honest(sel_res["cluster"], tm.malicious),
+                accepted=accepted,
+                selected_honest=cluster_is_honest(sel_cluster, tm.malicious),
                 honest_cluster_exists=any(cluster_is_honest(c, tm.malicious)
                                           for c in clusters),
                 detections=detection_events,
@@ -435,7 +488,8 @@ def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                     verbose: bool = False, checkpoint_path: Optional[str] = None,
                     resume: bool = False, engine: str = "sequential",
                     placement: str = "vmap", prefetch: int = 0,
-                    threat_model: Optional[ThreatModel] = None) -> History:
+                    threat_model: Optional[ThreatModel] = None,
+                    selection="argmin") -> History:
     """Pigeon-SL+ (throughput-matched variant): ``run_pigeon`` with the R-1
     extra selected-cluster sub-rounds enabled.  ``prefetch`` is accepted for
     API symmetry but bounded to synchronous assembly — the sub-rounds sample
@@ -444,7 +498,8 @@ def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     return run_pigeon(module, data, pcfg, malicious, attack, plus=True,
                       verbose=verbose, checkpoint_path=checkpoint_path,
                       resume=resume, engine=engine, placement=placement,
-                      prefetch=prefetch, threat_model=threat_model)
+                      prefetch=prefetch, threat_model=threat_model,
+                      selection=selection)
 
 
 # ---------------------------------------------------------------------------
@@ -487,7 +542,9 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                  malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                  verbose: bool = False, engine: str = "sequential",
                  placement: str = "vmap", prefetch: int = 0,
-                 threat_model: Optional[ThreatModel] = None) -> History:
+                 threat_model: Optional[ThreatModel] = None,
+                 selection="argmin",
+                 _force_host_selection: bool = False) -> History:
     """Clients inside a cluster train *in parallel* from the same incoming
     params; the cluster model is the FedAvg of its clients.  Cluster
     selection by shared-set validation loss, as the paper's adapted SFL.
@@ -496,10 +553,15 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     through the placement-aware RoundRunner (SplitFed's FedAvg is the
     RoundSpec ``combine`` hook), so ``placement="sharded"`` lays the cluster
     axis over a device mesh, and ``prefetch>0`` double-buffers host-side
-    round assembly.  SplitFed sampling never depends on the previous round's
-    selection — there is no tamper-check key split and no sub-round — so the
-    feeder runs at full depth under every threat model."""
+    round assembly.  ``selection`` plugs any :mod:`repro.selection` policy
+    into the round (on the batched engine the selection cascade compiles
+    into the round program — SplitFed has no chained handoff, so the verify
+    stage stays off).  SplitFed sampling never depends on the previous
+    round's selection — there is no tamper-check key split and no sub-round
+    — so the feeder runs at full depth under every threat model."""
     _check_engine(engine, placement, prefetch)
+    policy = resolve_policy(selection)
+    fused_selection = engine == "batched" and not _force_host_selection
     tm = resolve_threat_model(malicious, attack, threat_model)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
@@ -528,35 +590,65 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
             else:
                 clusters = make_clusters(rng, pcfg.M, pcfg.R)
                 prefetched = None
-            if engine == "batched":
-                from .engine import splitfed_round_batched
-                key, results = splitfed_round_batched(
+            if fused_selection:
+                # Default batched path: FedAvg round + the policy selection
+                # cascade in one compiled program, one stacked host fetch.
+                from .engine import splitfed_round_accept
+                key, theta, sel_rec = splitfed_round_accept(
                     module, theta, clusters, data, pcfg, tm, t, rng, key,
-                    x0, y0, placement=placement, prefetched=prefetched)
+                    x0, y0, policy, placement=placement,
+                    prefetched=prefetched)
+                selected = sel_rec["selected"]
+                val_losses = sel_rec["val_losses"]
+                sel_cluster = clusters[selected]
             else:
-                results = []
-                for cluster in clusters:
-                    gs, ps = [], []
-                    for client in cluster:
-                        xs, ys = _sample_batches(rng, data.x[client],
-                                                 data.y[client], pcfg.E, pcfg.B)
-                        key, sub = jax.random.split(key)
-                        a = tm.attack_for(client, t)
-                        g, p, _ = client_update(module, a, theta[0], theta[1],
-                                                (xs, ys), pcfg.lr, sub)
-                        gs.append(g)
-                        ps.append(p)
-                    g_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *gs)
-                    p_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *ps)
-                    vloss, _ = validation_loss(module, g_avg, p_avg, x0, y0)
-                    results.append(dict(gamma=g_avg, phi=p_avg,
-                                        vloss=float(vloss), cluster=cluster))
-            selected = select_cluster([res["vloss"] for res in results])
-            theta = res_params(results[selected])
+                if engine == "batched":
+                    from .engine import splitfed_round_batched
+                    key, results = splitfed_round_batched(
+                        module, theta, clusters, data, pcfg, tm, t, rng, key,
+                        x0, y0, placement=placement, prefetched=prefetched,
+                        with_stats=policy.needs_message_stats)
+                else:
+                    results = []
+                    for cluster in clusters:
+                        gs, ps, sts = [], [], []
+                        for client in cluster:
+                            xs, ys = _sample_batches(rng, data.x[client],
+                                                     data.y[client], pcfg.E,
+                                                     pcfg.B)
+                            key, sub = jax.random.split(key)
+                            a = tm.attack_for(client, t)
+                            if policy.needs_message_stats:
+                                g, p, _, st = client_update_stats(
+                                    module, a, theta[0], theta[1], (xs, ys),
+                                    pcfg.lr, sub)
+                                sts.append(np.asarray(st))
+                            else:
+                                g, p, _ = client_update(module, a, theta[0],
+                                                        theta[1], (xs, ys),
+                                                        pcfg.lr, sub)
+                            gs.append(g)
+                            ps.append(p)
+                        g_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *gs)
+                        p_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *ps)
+                        vloss, vacts = validation_loss(module, g_avg, p_avg,
+                                                       x0, y0)
+                        res = dict(gamma=g_avg, phi=p_avg, vacts=vacts,
+                                   vloss=float(vloss), cluster=cluster)
+                        if sts:
+                            res["msg_stats"] = np.stack(sts)
+                        results.append(res)
+                from ..selection import host_score_context, score_and_rank
+                ctx = host_score_context(policy, module, results, x0, y0)
+                scores, elig, order = score_and_rank(policy, ctx)
+                selected = int(next(c for c in order if elig[c]))
+                theta = res_params(results[selected])
+                val_losses = [res["vloss"] for res in results]
+                sel_cluster = results[selected]["cluster"]
             rec = dict(round=t, selected=selected,
-                       val_losses=[res["vloss"] for res in results],
-                       selected_honest=cluster_is_honest(
-                           results[selected]["cluster"], tm.malicious))
+                       val_losses=val_losses,
+                       selected_honest=cluster_is_honest(sel_cluster,
+                                                         tm.malicious))
             if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
                 rec["test_acc"] = evaluate(module, theta[0], theta[1],
                                            data.x_test, data.y_test,

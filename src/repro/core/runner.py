@@ -33,14 +33,26 @@ equivalent by construction — the CPU equivalence suite
 (``tests/test_runner.py``) checks selection, losses and CommMeter history
 against the sequential oracle under a forced 8-virtual-device host mesh.
 
+Selection is pluggable: a :class:`~repro.selection.SelectionPolicy` bound via
+the runner's ``select=`` hook supplies the score/eligibility stages wherever
+a winner is chosen inside the compiled program — :meth:`RoundRunner.round_fn`
+(launch layer), :meth:`RoundRunner.sweep` (per-seed selection), and
+:meth:`RoundRunner.accept`, the fused score -> rank -> verify -> commit
+cascade (``repro.selection.cascade``) that replaced the protocol drivers'
+host-side selection loop on the default batched path: candidate ranks as
+data, handoff distances via the ``kernels/tamper_check`` Pallas kernel,
+rejection as a ``jnp.where`` mask, one stacked host fetch per round.
+
 Consumers:
 
   * ``core/engine.py`` binds :func:`protocol_round_spec` (client-chain scan +
     ``AttackVec`` threat-model lanes + shared-set validation) and uses
-    :meth:`RoundRunner.candidates` — selection stays on the host because the
-    tamper-resilient handoff check (Section III-C) may reject the argmin.
+    :meth:`RoundRunner.accept` on the default path; the host-side reference
+    cascade (:meth:`RoundRunner.candidates` + ``repro.selection.select_host``)
+    remains for the sequential oracle and param-tamper threat models, whose
+    handoff tampering consumes the protocol key per visited candidate.
   * ``launch/steps.py`` binds a ``Model``-level spec and uses
-    :meth:`RoundRunner.round_fn` — the full round (selection + winner
+    :meth:`RoundRunner.round_fn` — the full round (policy selection + winner
     broadcast inside the compiled program), lowered under GSPMD/manual pod
     sharding by the dry-run driver.
 """
@@ -216,10 +228,56 @@ class RoundSpec:
     validation forward (Section III-C).  ``val_aux`` carries whatever the
     consumer needs alongside the loss (the protocol engine keeps the cut
     activations for the tamper check; the launch spec returns None).
+
+    The optional selection hooks feed the pluggable policies
+    (``repro.selection``); a policy whose feature needs the bound spec cannot
+    satisfy is rejected at program-build time:
+
+    ``validate_sharded(cluster_params, val, k) -> (vloss, (k',) shard
+    losses, val_aux)`` — shared-set validation split into (up to) ``k``
+    equal D_o shards, for the median-of-means family of scores.
+
+    ``handoff_acts(cluster_params, val) -> acts`` — the re-transmission a
+    next-round first client would produce from the handed-off parameters;
+    the fused verify stage compares it against ``val_aux`` with the
+    ``kernels/tamper_check`` distance.
+
+    ``train_summary(stacked_train_aux) -> (R,)`` — per-cluster train metric
+    for the drivers' single History fetch (protocol: mean client loss).
+
+    ``message_stats(stacked_train_aux) -> (R, M_bar, S)`` — per-client
+    transmitted-message statistics for anomaly-scoring policies (requires a
+    ``with_stats`` train program).
     """
     train_cluster: Callable[[Pytree, Any], Tuple[Pytree, Any]]
     validate: Callable[[Pytree, Any], Tuple[jnp.ndarray, Any]]
     combine: Optional[Callable[[Pytree], Pytree]] = None
+    validate_sharded: Optional[Callable[[Pytree, Any, int],
+                                        Tuple[jnp.ndarray, jnp.ndarray, Any]]] = None
+    handoff_acts: Optional[Callable[[Pytree, Any], jnp.ndarray]] = None
+    train_summary: Optional[Callable[[Any], jnp.ndarray]] = None
+    message_stats: Optional[Callable[[Any], jnp.ndarray]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyConfig:
+    """The fused cascade's verification stage: compare each candidate's
+    handoff transmission against its validation-time activations
+    (``kernels/tamper_check``) and reject candidates beyond ``tol``.
+
+    ``recompute`` controls where the transmission comes from: True re-derives
+    it from the handed-off parameters (``RoundSpec.handoff_acts`` — needed
+    whenever something inside the program could perturb the handoff); False
+    reuses the validation-time activations directly.  The protocol drivers'
+    fused path runs with False: its precondition (no param-tamper families —
+    those pin selection to the host cascade) makes the re-transmission equal
+    to the validation activations *by construction*, so recomputing R client
+    forwards per round would only confirm an identity.  The masked cascade,
+    kernel distance and Table I re-transmission accounting stay live either
+    way."""
+    enabled: bool = True
+    tol: float = 1e-4
+    recompute: bool = True
 
 
 def cluster_map(spec: RoundSpec, params: Pytree, inputs: Pytree, val: Pytree,
@@ -245,20 +303,95 @@ def cluster_map(spec: RoundSpec, params: Pytree, inputs: Pytree, val: Pytree,
     return jax.vmap(one, in_axes=(0 if params_stacked else None, 0))(params, inputs)
 
 
+def select_map(spec: RoundSpec, policy, params: Pytree, inputs: Pytree,
+               val: Pytree, params_stacked: bool = False):
+    """:func:`cluster_map` + the selection features ``policy`` declares it
+    needs: ``(params_R, train_aux_R, vlosses_R, val_aux_R, shard_losses)``
+    where ``shard_losses`` is ``(R, K)`` (via the spec's ``validate_sharded``
+    hook) or None.  The default argmin policy takes the plain
+    :func:`cluster_map` path, so its round program is unchanged."""
+    if policy.shard_count <= 0:
+        new_p, aux, vloss, vaux = cluster_map(spec, params, inputs, val,
+                                              params_stacked)
+        return new_p, aux, vloss, vaux, None
+    if spec.validate_sharded is None:
+        raise ValueError(f"selection policy {policy.name!r} needs sharded "
+                         f"validation, which this RoundSpec does not provide")
+
+    def one(params_r, inputs_r):
+        new_p, aux = spec.train_cluster(params_r, inputs_r)
+        if spec.combine is not None:
+            new_p = spec.combine(new_p)
+        vloss, shard_l, vaux = spec.validate_sharded(new_p, val,
+                                                     policy.shard_count)
+        return new_p, aux, vloss, vaux, shard_l
+
+    return jax.vmap(one, in_axes=(0 if params_stacked else None, 0))(params, inputs)
+
+
+def policy_context(spec: RoundSpec, policy, aux, vlosses, shard_losses):
+    """Assemble the in-program :class:`~repro.selection.ScoreContext` —
+    features must already be gathered across the full cluster axis (the
+    sharded placement all-gathers them first), so policy stages stay pure
+    jnp with no collectives."""
+    from ..selection import ScoreContext
+    stats = None
+    if policy.needs_message_stats:
+        if spec.message_stats is None:
+            raise ValueError(f"selection policy {policy.name!r} needs "
+                             f"transmitted-message statistics, which this "
+                             f"RoundSpec does not surface")
+        stats = spec.message_stats(aux)
+    return ScoreContext(vlosses=vlosses, shard_losses=shard_losses,
+                        message_stats=stats)
+
+
+def policy_scores(policy, ctx):
+    """(scores, eligibility) with the all-ineligible fallback applied."""
+    scores = policy.score(ctx).astype(jnp.float32)
+    elig = policy.eligible(ctx, scores)
+    elig = jnp.where(jnp.any(elig), elig, jnp.ones_like(elig))
+    return scores, elig
+
+
+def masked_argmin(scores: jnp.ndarray, elig: jnp.ndarray) -> jnp.ndarray:
+    """The one copy of the in-program winner rule (ineligible candidates
+    sentinel to +inf) — vmap, sharded and sweep placements all call this, so
+    their documented bit-for-bit agreement cannot drift."""
+    return jnp.argmin(jnp.where(elig, scores, jnp.inf)).astype(jnp.int32)
+
+
+def policy_choose(spec: RoundSpec, policy, aux, vlosses, shard_losses):
+    """In-program winner index under a policy: masked argmin over scores."""
+    ctx = policy_context(spec, policy, aux, vlosses, shard_losses)
+    scores, elig = policy_scores(policy, ctx)
+    return masked_argmin(scores, elig)
+
+
+def _spec_train_summary(spec: RoundSpec, aux, vlosses):
+    if spec.train_summary is None:
+        return jnp.zeros_like(vlosses, dtype=jnp.float32)
+    return spec.train_summary(aux).astype(jnp.float32)
+
+
 def sweep_map(spec: RoundSpec, params: Pytree, inputs: Pytree, val: Pytree,
-              params_stacked: bool = False):
+              params_stacked: bool = False, policy=None):
     """S independent protocol replicas of one global round: per seed, run
-    :func:`cluster_map`, select the argmin-validation-loss cluster and carry
-    the winner forward.  ``params`` leaves lead with the seed axis (plus a
-    cluster axis when ``params_stacked``); ``inputs`` leaves with
-    ``(seed, cluster)``.  Returns ``(winner_params_S, train_aux_SR,
-    vlosses_SR, sel_S)`` — the same arithmetic (masked-f32 one-hot
-    contraction) the sharded placement reduces with ``psum``, so the two
-    placements agree bit-for-bit."""
-    new_p, aux, vlosses, _ = jax.vmap(
-        lambda p, i: cluster_map(spec, p, i, val, params_stacked)
+    :func:`select_map`, select the policy-winning cluster (default: argmin
+    validation loss) and carry the winner forward.  ``params`` leaves lead
+    with the seed axis (plus a cluster axis when ``params_stacked``);
+    ``inputs`` leaves with ``(seed, cluster)``.  Returns
+    ``(winner_params_S, train_aux_SR, vlosses_SR, sel_S)`` — the same
+    arithmetic (masked-f32 one-hot contraction) the sharded placement
+    reduces with ``psum``, so the two placements agree bit-for-bit."""
+    from ..selection import ARGMIN
+    policy = ARGMIN if policy is None else policy
+    new_p, aux, vlosses, _, shard_l = jax.vmap(
+        lambda p, i: select_map(spec, policy, p, i, val, params_stacked)
     )(params, inputs)
-    sels = jnp.argmin(vlosses, axis=1)
+    sels = jax.vmap(
+        lambda a, vl, sl: policy_choose(spec, policy, a, vl, sl),
+        in_axes=(0, 0, None if shard_l is None else 0))(aux, vlosses, shard_l)
     winners = jax.vmap(onehot_select)(new_p, sels)
     return winners, aux, vlosses, sels
 
@@ -269,14 +402,26 @@ class RoundRunner:
     Two entry levels:
 
     * :meth:`candidates_fn` / :meth:`candidates` — all R candidate outcomes,
-      selection left to the caller (the protocol drivers' host-side
-      argmin + tamper-check loop).
-    * :meth:`round_fn` / :meth:`round` — the full round with argmin selection
+      selection left to the caller (the host-side reference cascade in
+      ``repro.selection.selector`` — the sequential oracle and the
+      param-tamper fallback).
+    * :meth:`accept_fn` / :meth:`accept` — the fused score -> rank -> verify
+      -> commit cascade inside the compiled program: policy scores, masked
+      rank walk, per-candidate handoff verification via the
+      ``kernels/tamper_check`` distance, winner commit (or rollback when
+      every candidate fails), one stacked host fetch
+      (``(vlosses, train_summary, selected, detections, accepted)``).
+      The protocol drivers' default batched path.
+    * :meth:`round_fn` / :meth:`round` — the full round with policy selection
       and winner broadcast inside the compiled program (the launch-layer
       ``pigeon_round_step`` contract: returns ``(rebro, vlosses, sel)``).
     * :meth:`sweep_fn` / :meth:`sweep` — S whole protocol replicas with
-      per-seed argmin selection on device; the sharded placement lays the
+      per-seed policy selection on device; the sharded placement lays the
       S x R replica grid over a 2-D ``(seed_axis, cluster_axis)`` mesh.
+
+    ``select`` binds a :class:`~repro.selection.SelectionPolicy` (default:
+    the paper's argmin); ``verify`` configures :meth:`accept`'s tamper-check
+    stage.
 
     ``mesh`` is only consulted by the sharded placement; when omitted a 1-D
     host mesh sized to the largest divisor of R (:func:`cluster_mesh`) — or,
@@ -291,7 +436,9 @@ class RoundRunner:
 
     def __init__(self, spec: RoundSpec, *, placement: str = "vmap",
                  mesh: Optional[Mesh] = None, cluster_axis: str = "pod",
-                 seed_axis: str = "seed", params_stacked: bool = False):
+                 seed_axis: str = "seed", params_stacked: bool = False,
+                 select=None, verify: Optional[VerifyConfig] = None):
+        from ..selection import ARGMIN
         check_placement(placement)
         self.spec = spec
         self.placement = placement
@@ -299,6 +446,8 @@ class RoundRunner:
         self.cluster_axis = cluster_axis
         self.seed_axis = seed_axis
         self.params_stacked = params_stacked
+        self.select = ARGMIN if select is None else select
+        self.verify = VerifyConfig() if verify is None else verify
         self._jitted: dict = {}
 
     # -- pure, traceable bodies (jit / lower externally) --------------------
@@ -314,28 +463,120 @@ class RoundRunner:
 
     def round_fn(self) -> Callable:
         """(params, inputs, val) -> (rebro_params_R, vlosses_R, sel): the
-        full round with in-program argmin selection + winner broadcast."""
+        full round with in-program policy selection + winner broadcast."""
         if self.placement == "vmap":
             def round_body(params, inputs, val):
-                new_p, _, vlosses, _ = cluster_map(
-                    self.spec, params, inputs, val, self.params_stacked)
-                sel = jnp.argmin(vlosses)
+                new_p, aux, vlosses, _, shard_l = select_map(
+                    self.spec, self.select, params, inputs, val,
+                    self.params_stacked)
+                sel = policy_choose(self.spec, self.select, aux, vlosses,
+                                    shard_l)
                 rebro = broadcast_winner(onehot_select(new_p, sel), new_p)
                 return rebro, vlosses, sel
             return round_body
         return lambda params, inputs, val: self._sharded(
             params, inputs, val, select=True)
 
+    def accept_fn(self) -> Callable:
+        """(params, inputs, val) -> (committed_params, fetch): the fused
+        round-acceptance cascade.  ``committed_params`` is the accepted
+        winner (theta^{t+1}) or the unchanged ``params`` when every
+        candidate fails verification; ``fetch`` is the
+        ``repro.selection.cascade.pack_fetch`` vector — the drivers' single
+        host sync per round.  Protocol layout only (``params`` is the
+        single theta broadcast into every cluster)."""
+        if self.params_stacked:
+            raise ValueError("accept_fn requires the protocol layout "
+                             "(params_stacked=False): the commit stage "
+                             "resolves the R candidates back to one theta")
+        if self.verify.enabled and self.verify.recompute \
+                and self.spec.handoff_acts is None:
+            raise ValueError("verify.enabled with recompute needs the "
+                             "RoundSpec handoff_acts hook")
+        if self.placement == "vmap":
+            return self._accept_vmap
+        return lambda params, inputs, val: self._sharded_accept(
+            params, inputs, val)
+
+    def _verify_passed(self, new_p, vaux, val):
+        """Per-candidate handoff verification: compare the first clients'
+        re-transmission (re-derived from the handed-off parameters when
+        ``verify.recompute``, else the validation-time transmission itself —
+        see :class:`VerifyConfig`) against the validation-time activations
+        with the Pallas tamper-check distance.  Returns a bool pass mask
+        over the leading candidate axis."""
+        from ..kernels.ops import tamper_distance
+        if self.verify.recompute:
+            recv = jax.vmap(lambda p: self.spec.handoff_acts(p, val))(new_p)
+        else:
+            recv = vaux
+        dists = jax.vmap(tamper_distance)(vaux, recv)
+        return dists <= jnp.float32(self.verify.tol), dists
+
+    def _accept_vmap(self, params, inputs, val):
+        from ..selection import masked_first_accept, pack_fetch
+        spec, policy = self.spec, self.select
+        new_p, aux, vlosses, vaux, shard_l = select_map(
+            spec, policy, params, inputs, val, False)
+        ctx = policy_context(spec, policy, aux, vlosses, shard_l)
+        scores, elig = policy_scores(policy, ctx)
+        if self.verify.enabled:
+            passed, _ = self._verify_passed(new_p, vaux, val)
+        else:
+            passed = jnp.ones_like(elig)
+        sel, det, acc = masked_first_accept(scores, elig, passed)
+        winner = onehot_select(new_p, sel)
+        committed = jax.tree.map(lambda w, old: jnp.where(acc, w, old),
+                                 winner, params)
+        fetch = pack_fetch(vlosses, _spec_train_summary(spec, aux, vlosses),
+                           sel, det, acc)
+        return committed, fetch
+
     def sweep_fn(self) -> Callable:
         """(params_S, inputs_SR, val) -> (winner_params_S, train_aux_SR,
         vlosses_SR, sel_S): one global round of S independent replicas with
-        the per-seed argmin selection inside the compiled program."""
+        the per-seed policy selection inside the compiled program."""
         if self.placement == "vmap":
             return lambda params, inputs, val: sweep_map(
-                self.spec, params, inputs, val, self.params_stacked)
+                self.spec, params, inputs, val, self.params_stacked,
+                self.select)
         return self._sharded_sweep
 
     # -- sharded placement --------------------------------------------------
+
+    def _gathered_context(self, aux, vloss, shard_l, ax):
+        """All-gather the local selection features across the cluster mesh
+        axis and build the global ScoreContext every shard scores
+        identically (policy stages are pure jnp — no collectives inside)."""
+        from ..selection import ScoreContext
+        spec, policy = self.spec, self.select
+        losses_g = jax.lax.all_gather(vloss, ax, tiled=True)          # (R,)
+        shard_g = (None if shard_l is None
+                   else jax.lax.all_gather(shard_l, ax, tiled=True))
+        stats_g = None
+        if policy.needs_message_stats:
+            if spec.message_stats is None:
+                raise ValueError(f"selection policy {policy.name!r} needs "
+                                 f"transmitted-message statistics, which "
+                                 f"this RoundSpec does not surface")
+            stats_g = jax.lax.all_gather(spec.message_stats(aux), ax,
+                                         tiled=True)
+        return ScoreContext(vlosses=losses_g, shard_losses=shard_g,
+                            message_stats=stats_g)
+
+    def _psum_pick(self, new_p, sel, ax):
+        """One-hot psum contraction of the global winner out of the local
+        candidate slices (a single masked all-reduce per leaf)."""
+        r_local = jax.tree.leaves(new_p)[0].shape[0]
+        mine = (jax.lax.axis_index(ax) * r_local + jnp.arange(r_local)) == sel
+
+        def pick(x):
+            mask = mine.reshape((-1,) + (1,) * (x.ndim - 1))
+            local = jnp.sum(jnp.where(mask, x.astype(jnp.float32), 0.0),
+                            axis=0)
+            return jax.lax.psum(local, ax).astype(x.dtype)
+
+        return jax.tree.map(pick, new_p)
 
     def _sharded(self, params, inputs, val, select: bool):
         ax = self.cluster_axis
@@ -348,29 +589,56 @@ class RoundRunner:
         def per_shard(params_s, inputs_s, val_s):
             # params_s: the local R_local slice (stacked) or the full
             # replicated pytree; inputs_s: the local cluster slice.
-            new_p, aux, vloss, vaux = cluster_map(
-                self.spec, params_s, inputs_s, val_s, self.params_stacked)
             if not select:
-                return new_p, aux, vloss, vaux
-            losses = jax.lax.all_gather(vloss, ax, tiled=True)       # (R,)
-            sel = jnp.argmin(losses)
-            r_local = vloss.shape[0]
-            mine = (jax.lax.axis_index(ax) * r_local
-                    + jnp.arange(r_local)) == sel
-
-            def pick(x):
-                mask = mine.reshape((-1,) + (1,) * (x.ndim - 1))
-                local = jnp.sum(jnp.where(mask, x.astype(jnp.float32), 0.0),
-                                axis=0)
-                return jax.lax.psum(local, ax).astype(x.dtype)
-
-            rebro = broadcast_winner(jax.tree.map(pick, new_p), new_p)
-            return rebro, losses, sel
+                return cluster_map(self.spec, params_s, inputs_s, val_s,
+                                   self.params_stacked)
+            new_p, aux, vloss, _, shard_l = select_map(
+                self.spec, self.select, params_s, inputs_s, val_s,
+                self.params_stacked)
+            ctx = self._gathered_context(aux, vloss, shard_l, ax)
+            scores, elig = policy_scores(self.select, ctx)
+            sel = masked_argmin(scores, elig)
+            rebro = broadcast_winner(self._psum_pick(new_p, sel, ax), new_p)
+            return rebro, ctx.vlosses, sel
 
         p_spec = P(ax) if self.params_stacked else P()
         in_specs = (p_spec, P(ax), P())
         out_specs = ((P(ax), P(), P()) if select
                      else (P(ax), P(ax), P(ax), P(ax)))
+        fn = _apply_shard_map(per_shard, mesh, in_specs, out_specs, ax)
+        return fn(params, inputs, val)
+
+    def _sharded_accept(self, params, inputs, val):
+        from ..selection import masked_first_accept, pack_fetch
+        ax = self.cluster_axis
+        r = jax.tree.leaves(inputs)[0].shape[0]
+        mesh = self.mesh if self.mesh is not None else cluster_mesh(r)
+        if r % mesh.shape[ax]:
+            raise ValueError(f"R={r} not divisible by mesh axis "
+                             f"{ax!r}={mesh.shape[ax]}")
+        spec, policy = self.spec, self.select
+
+        def per_shard(params_s, inputs_s, val_s):
+            new_p, aux, vloss, vaux, shard_l = select_map(
+                spec, policy, params_s, inputs_s, val_s, False)
+            ctx = self._gathered_context(aux, vloss, shard_l, ax)
+            scores, elig = policy_scores(policy, ctx)
+            if self.verify.enabled:
+                passed_l, _ = self._verify_passed(new_p, vaux, val_s)
+                passed = jax.lax.all_gather(passed_l, ax, tiled=True)
+            else:
+                passed = jnp.ones_like(elig)
+            sel, det, acc = masked_first_accept(scores, elig, passed)
+            winner = self._psum_pick(new_p, sel, ax)
+            committed = jax.tree.map(lambda w, old: jnp.where(acc, w, old),
+                                     winner, params_s)
+            summary = jax.lax.all_gather(
+                _spec_train_summary(spec, aux, vloss), ax, tiled=True)
+            fetch = pack_fetch(ctx.vlosses, summary, sel, det, acc)
+            return committed, fetch
+
+        in_specs = (P(), P(ax), P())
+        out_specs = (P(), P())
         fn = _apply_shard_map(per_shard, mesh, in_specs, out_specs, ax)
         return fn(params, inputs, val)
 
@@ -387,12 +655,29 @@ class RoundRunner:
         def per_shard(params_s, inputs_s, val_s):
             # params_s: (S_local, ...) [+ cluster dim when stacked];
             # inputs_s: the local (S_local, R_local, ...) replica block.
-            new_p, aux, vloss, _ = jax.vmap(
-                lambda p, i: cluster_map(self.spec, p, i, val_s,
-                                         self.params_stacked)
+            new_p, aux, vloss, _, shard_l = jax.vmap(
+                lambda p, i: select_map(self.spec, self.select, p, i, val_s,
+                                        self.params_stacked)
             )(params_s, inputs_s)
             losses = jax.lax.all_gather(vloss, ax, axis=1, tiled=True)  # (S_local, R)
-            sels = jnp.argmin(losses, axis=1)
+            shard_g = (None if shard_l is None
+                       else jax.lax.all_gather(shard_l, ax, axis=1, tiled=True))
+            stats_g = None
+            if self.select.needs_message_stats:
+                stats_g = jax.lax.all_gather(
+                    jax.vmap(self.spec.message_stats)(aux), ax, axis=1,
+                    tiled=True)
+
+            def choose(vl, sl, st):
+                from ..selection import ScoreContext
+                ctx = ScoreContext(vlosses=vl, shard_losses=sl,
+                                   message_stats=st)
+                scores, elig = policy_scores(self.select, ctx)
+                return masked_argmin(scores, elig)
+
+            sels = jax.vmap(choose, in_axes=(
+                0, None if shard_g is None else 0,
+                None if stats_g is None else 0))(losses, shard_g, stats_g)
             r_local = vloss.shape[1]
             mine = (jax.lax.axis_index(ax) * r_local
                     + jnp.arange(r_local))[None, :] == sels[:, None]
@@ -421,7 +706,7 @@ class RoundRunner:
         fn = self._jitted.get(which)
         if fn is None:
             body = {"candidates": self.candidates_fn, "round": self.round_fn,
-                    "sweep": self.sweep_fn}[which]()
+                    "accept": self.accept_fn, "sweep": self.sweep_fn}[which]()
             fn = jax.jit(body)
             self._jitted[which] = fn
         return fn
@@ -434,6 +719,12 @@ class RoundRunner:
         self._check_executable((self.cluster_axis,))
         return self._compiled("round")(params, inputs, val)
 
+    def accept(self, params, inputs, val):
+        """Fused round acceptance: (committed_params, fetch) — see
+        :meth:`accept_fn`."""
+        self._check_executable((self.cluster_axis,))
+        return self._compiled("accept")(params, inputs, val)
+
     def sweep(self, params, inputs, val):
         self._check_executable((self.seed_axis, self.cluster_axis))
         return self._compiled("sweep")(params, inputs, val)
@@ -443,14 +734,44 @@ class RoundRunner:
 # the protocol-level binding (SplitModule + AttackVec lanes)
 # ---------------------------------------------------------------------------
 
+def sharded_validation_losses(module, phi, acts, y0, k: int) -> jnp.ndarray:
+    """(k',) per-shard shared-set losses from the validation activations —
+    THE one copy of the median-of-means shard arithmetic, shared by the
+    pigeon and SplitFed spec bindings and the host selector
+    (``repro.selection.selector._shard_loss_fn``)."""
+    from ..selection import effective_shards
+    kk = effective_shards(k, acts.shape[0])
+    shard_acts = acts.reshape((kk, acts.shape[0] // kk) + acts.shape[1:])
+    shard_y = y0.reshape((kk, y0.shape[0] // kk) + y0.shape[1:])
+    return jax.vmap(lambda a, y: module.ap_loss(phi, a, y))(shard_acts,
+                                                            shard_y)
+
+
+def make_train_summary(with_stats: bool):
+    """The SplitModule specs' ``train_summary`` hook: per-cluster mean
+    client loss out of the (losses[, stats]) aux convention."""
+
+    def train_summary(aux):
+        losses = aux[0] if with_stats else aux
+        return jnp.mean(losses, axis=-1)
+
+    return train_summary
+
 @lru_cache(maxsize=None)
-def protocol_round_spec(module, lr: float) -> RoundSpec:
+def protocol_round_spec(module, lr: float, with_stats: bool = False) -> RoundSpec:
     """Pigeon per-cluster programs over a ``SplitModule``: the within-cluster
     client-chain scan with the AttackVec threat-model lanes from the
     adversary subsystem (``inputs = (xs, ys, avec, keys)``, every leaf with
     leading axis M_bar), and shared-set validation returning the cut
-    activations the tamper check compares against (``val = (x0, y0)``)."""
-    from .split import client_update_vec_impl
+    activations the tamper check compares against (``val = (x0, y0)``).
+
+    The selection hooks bind the full policy feature set: sharded shared-set
+    validation (median-of-means), the handoff re-transmission (the fused
+    verify stage), and — under ``with_stats`` — the per-client
+    transmitted-message statistics (``core.split.message_stats``) that the
+    anomaly-scoring policies read.  ``with_stats=False`` compiles exactly
+    the pre-selection-subsystem round program."""
+    from .split import client_update_vec_impl, client_update_vec_stats_impl
 
     def train_cluster(theta, inputs):
         xs_c, ys_c, av_c, keys_c = inputs
@@ -459,12 +780,16 @@ def protocol_round_spec(module, lr: float) -> RoundSpec:
         def per_client(carry, inp):
             g, p = carry
             x, y, av, k = inp
+            if with_stats:
+                g, p, loss, stats = client_update_vec_stats_impl(
+                    module, av, g, p, (x, y), lr, k)
+                return (g, p), (loss, stats)
             g, p, loss = client_update_vec_impl(module, av, g, p, (x, y), lr, k)
             return (g, p), loss
 
-        (g, p), losses = jax.lax.scan(per_client, (gamma, phi),
-                                      (xs_c, ys_c, av_c, keys_c))
-        return (g, p), losses
+        (g, p), aux = jax.lax.scan(per_client, (gamma, phi),
+                                   (xs_c, ys_c, av_c, keys_c))
+        return (g, p), aux
 
     def validate(theta, val):
         g, p = theta
@@ -472,11 +797,49 @@ def protocol_round_spec(module, lr: float) -> RoundSpec:
         acts = module.client_forward(g, x0)
         return module.ap_loss(p, acts, y0), acts
 
-    return RoundSpec(train_cluster, validate)
+    def validate_sharded(theta, val, k):
+        g, p = theta
+        x0, y0 = val
+        acts = module.client_forward(g, x0)
+        shard_losses = sharded_validation_losses(module, p, acts, y0, k)
+        # History's vloss stays the exact full-set loss (same op as
+        # ``validate``, the forward is shared); the shards only feed scores
+        return module.ap_loss(p, acts, y0), shard_losses, acts
+
+    def handoff_acts(theta, val):
+        return module.client_forward(theta[0], val[0])
+
+    return RoundSpec(
+        train_cluster, validate,
+        validate_sharded=validate_sharded,
+        handoff_acts=handoff_acts,
+        train_summary=make_train_summary(with_stats),
+        message_stats=(lambda aux: aux[1]) if with_stats else None)
 
 
 @lru_cache(maxsize=None)
-def protocol_runner(module, lr: float, placement: str = "vmap") -> RoundRunner:
-    """Cached per (module, lr, placement) so every round reuses one compiled
-    program — the protocol layout (theta broadcast into all clusters)."""
-    return RoundRunner(protocol_round_spec(module, lr), placement=placement)
+def protocol_runner(module, lr: float, placement: str = "vmap",
+                    with_stats: bool = False, select=None) -> RoundRunner:
+    """Cached per (module, lr, placement, stats, policy) so every round
+    reuses one compiled program — the protocol layout (theta broadcast into
+    all clusters)."""
+    return RoundRunner(protocol_round_spec(module, lr, with_stats),
+                       placement=placement, select=select)
+
+
+@lru_cache(maxsize=None)
+def protocol_accept_runner(module, lr: float, placement: str, select,
+                           tamper_check: bool, tamper_tol: float
+                           ) -> RoundRunner:
+    """The fused-acceptance runner the protocol drivers use on the default
+    batched path: the policy's score/eligibility stages + the masked
+    rank/verify/commit cascade compiled into one round program."""
+    spec = protocol_round_spec(module, lr,
+                               with_stats=select.needs_message_stats)
+    # recompute=False: this runner only ever runs under the no-param-tamper
+    # precondition (engine.pigeon_round_accept asserts it), where the
+    # re-transmission equals the validation activations by construction.
+    return RoundRunner(spec, placement=placement, select=select,
+                       verify=VerifyConfig(enabled=tamper_check,
+                                           tol=tamper_tol,
+                                           recompute=False))

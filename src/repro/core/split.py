@@ -87,14 +87,49 @@ def _xent(logits, y):
 
 
 # ---------------------------------------------------------------------------
+# AP-observable statistics of the transmitted activation message
+# ---------------------------------------------------------------------------
+
+MESSAGE_STAT_NAMES = ("dispersion", "support_residual")
+N_MESSAGE_STATS = len(MESSAGE_STAT_NAMES)
+
+
+def message_stats(acts_sent: jnp.ndarray) -> jnp.ndarray:
+    """Per-batch anomaly statistics of a transmitted cut-activation message,
+    computed from exactly what the AP observes (the post-tamper message):
+
+      * ``dispersion`` — mean distance of the batch's samples from the batch
+        mean, relative to the mean's norm.  A replayed message (one captured
+        activation re-transmitted for the whole batch) has dispersion 0.
+      * ``support_residual`` — norm fraction of the message outside the
+        honest activation support (the paper's CNN cut layers are ReLU, so
+        honest messages are non-negative; a noise blend leaves the support).
+        Architectures without a constrained cut support yield near-equal
+        residuals for every client, making the z-scored feature inert.
+
+    These are the ``loss_plus_distance`` selection policy's activation
+    distances (``repro.selection``): final-model validation activations carry
+    no stealth/replay signal at small scale, but the training messages do.
+    Returns a ``(N_MESSAGE_STATS,)`` f32 vector."""
+    flat = acts_sent.reshape(acts_sent.shape[0], -1).astype(jnp.float32)
+    mu = jnp.mean(flat, axis=0, keepdims=True)
+    mu_norm = jnp.maximum(jnp.linalg.norm(mu), 1e-12)
+    disp = jnp.mean(jnp.linalg.norm(flat - mu, axis=1)) / mu_norm
+    total = jnp.maximum(jnp.linalg.norm(flat), 1e-12)
+    support = jnp.linalg.norm(jnp.minimum(flat, 0.0)) / total
+    return jnp.stack([disp, support])
+
+
+# ---------------------------------------------------------------------------
 # the SL mini-batch exchange with attack hooks
 # ---------------------------------------------------------------------------
 
 def _sl_exchange(module: SplitModule, gamma: Pytree, phi: Pytree,
                  x: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
-                 poison, send_labels, send_acts, recv_grad
-                 ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
-    """One FwdProp/BackProp exchange.  Returns (g_gamma, g_phi, loss).
+                 poison, send_labels, send_acts, recv_grad,
+                 with_stats: bool = False):
+    """One FwdProp/BackProp exchange.  Returns (g_gamma, g_phi, loss), plus
+    the transmitted message's :func:`message_stats` when ``with_stats``.
 
     The attack hooks sit exactly where the taxonomy places them:
       * ``poison``: the client's own training inputs, before the forward
@@ -129,19 +164,22 @@ def _sl_exchange(module: SplitModule, gamma: Pytree, phi: Pytree,
 
     g_acts_recv = recv_grad(g_acts, k_grad)
     (g_gamma,) = client_vjp(g_acts_recv.astype(acts.dtype))
+    if with_stats:
+        return g_gamma, g_phi, loss, message_stats(acts_sent)
     return g_gamma, g_phi, loss
 
 
 def sl_minibatch_grads(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytree,
-                       x: jnp.ndarray, y: jnp.ndarray, key: jax.Array
-                       ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+                       x: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
+                       with_stats: bool = False):
     """The exchange with a static ``Attack`` (one compiled program per spec)."""
     return _sl_exchange(
         module, gamma, phi, x, y, key,
         lambda x_: poison_inputs(attack, x_),
         lambda y_: flip_labels(attack, y_, module.n_classes),
         lambda a, k: tamper_activation(attack, a, k),
-        lambda g, k: tamper_gradient(attack, g, k))
+        lambda g, k: tamper_gradient(attack, g, k),
+        with_stats=with_stats)
 
 
 def sgd_update(params: Pytree, grads: Pytree, lr: float) -> Pytree:
@@ -150,11 +188,13 @@ def sgd_update(params: Pytree, grads: Pytree, lr: float) -> Pytree:
 
 def _client_update(grads_fn, gamma: Pytree, phi: Pytree,
                    data: Tuple[jnp.ndarray, jnp.ndarray], lr: float,
-                   key: jax.Array) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+                   key: jax.Array, with_stats: bool = False):
     """E mini-batch SGD updates for one client (lines 10-18 of Algorithm 1),
     generic over the exchange implementation.
 
-    data = (xs, ys) with xs: (E, B, ...), ys: (E, B, ...).
+    data = (xs, ys) with xs: (E, B, ...), ys: (E, B, ...).  With
+    ``with_stats`` additionally returns the client's mean per-batch
+    :func:`message_stats` vector (the ``grads_fn`` must return 4-tuples).
     """
     xs, ys = data
 
@@ -162,11 +202,16 @@ def _client_update(grads_fn, gamma: Pytree, phi: Pytree,
         gamma, phi, k = carry
         x, y = inputs
         k, sub = jax.random.split(k)
-        g_gamma, g_phi, loss = grads_fn(gamma, phi, x, y, sub)
-        return (sgd_update(gamma, g_gamma, lr), sgd_update(phi, g_phi, lr), k), loss
+        out = grads_fn(gamma, phi, x, y, sub)
+        g_gamma, g_phi, loss = out[:3]
+        aux = (loss, out[3]) if with_stats else loss
+        return (sgd_update(gamma, g_gamma, lr), sgd_update(phi, g_phi, lr), k), aux
 
-    (gamma, phi, _), losses = jax.lax.scan(step, (gamma, phi, key), (xs, ys))
-    return gamma, phi, jnp.mean(losses)
+    (gamma, phi, _), aux = jax.lax.scan(step, (gamma, phi, key), (xs, ys))
+    if with_stats:
+        losses, stats = aux
+        return gamma, phi, jnp.mean(losses), jnp.mean(stats, axis=0)
+    return gamma, phi, jnp.mean(aux)
 
 
 @partial(jax.jit, static_argnums=(0, 1, 5))
@@ -175,6 +220,20 @@ def client_update(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytre
                   ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
     return _client_update(partial(sl_minibatch_grads, module, attack),
                           gamma, phi, data, lr, key)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 5))
+def client_update_stats(module: SplitModule, attack: Attack, gamma: Pytree,
+                        phi: Pytree, data: Tuple[jnp.ndarray, jnp.ndarray],
+                        lr: float, key: jax.Array):
+    """:func:`client_update` + the client's mean transmitted-message
+    statistics — the sequential oracle's path for selection policies that
+    score activation-message anomalies.  The parameter/loss arithmetic is
+    bit-identical to :func:`client_update` (the stats ride alongside the
+    same scan)."""
+    return _client_update(
+        partial(sl_minibatch_grads, module, attack, with_stats=True),
+        gamma, phi, data, lr, key, with_stats=True)
 
 
 # ---------------------------------------------------------------------------
@@ -187,13 +246,14 @@ def client_update(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytre
 
 def sl_minibatch_grads_vec(module: SplitModule, av: AttackVec, gamma: Pytree,
                            phi: Pytree, x: jnp.ndarray, y: jnp.ndarray,
-                           key: jax.Array) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+                           key: jax.Array, with_stats: bool = False):
     return _sl_exchange(
         module, gamma, phi, x, y, key,
         lambda x_: poison_inputs_vec(av, x_),
         lambda y_: flip_labels_vec(av, y_, module.n_classes),
         lambda a, k: tamper_activation_vec(av, a, k),
-        lambda g, k: tamper_gradient_vec(av, g, k))
+        lambda g, k: tamper_gradient_vec(av, g, k),
+        with_stats=with_stats)
 
 
 def client_update_vec_impl(module: SplitModule, av: AttackVec, gamma: Pytree,
@@ -205,6 +265,17 @@ def client_update_vec_impl(module: SplitModule, av: AttackVec, gamma: Pytree,
     within-cluster client chain)."""
     return _client_update(partial(sl_minibatch_grads_vec, module, av),
                           gamma, phi, data, lr, key)
+
+
+def client_update_vec_stats_impl(module: SplitModule, av: AttackVec,
+                                 gamma: Pytree, phi: Pytree,
+                                 data: Tuple[jnp.ndarray, jnp.ndarray],
+                                 lr: float, key: jax.Array):
+    """:func:`client_update_vec_impl` + mean message statistics (the batched
+    engines' path for message-anomaly selection policies)."""
+    return _client_update(
+        partial(sl_minibatch_grads_vec, module, av, with_stats=True),
+        gamma, phi, data, lr, key, with_stats=True)
 
 
 client_update_vec = partial(jax.jit, static_argnums=(0, 5))(client_update_vec_impl)

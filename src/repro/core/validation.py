@@ -10,6 +10,15 @@ clients of the next round each transmit g(x_0, gamma_received); the AP
 compares them against the activations the selected cluster reported at
 validation time — any mismatch exposes a parameter-tampering last client and
 triggers a rollback/reselect.
+
+Migration note: the *drivers* no longer call ``select_cluster`` /
+``check_handoff`` directly — cluster acceptance (score -> rank -> verify ->
+commit) lives in the pluggable ``repro.selection`` subsystem, which either
+compiles the cascade into the round program (the batched engines) or runs
+the host reference selector (``repro.selection.select_host``, which calls
+:func:`check_handoff` for its verify stage).  Both functions remain public
+for external callers: ``select_cluster`` is the argmin policy's rule on host
+data, and ``check_handoff`` the reference handoff comparison.
 """
 from __future__ import annotations
 
@@ -18,6 +27,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .split import SplitModule
 
@@ -35,8 +45,12 @@ def validation_loss(module: SplitModule, gamma: Pytree, phi: Pytree,
 
 
 def select_cluster(losses: Sequence[float]) -> int:
-    """argmin_r l_bar_r (ties broken towards the lower index)."""
-    return int(jnp.argmin(jnp.asarray(losses)))
+    """argmin_r l_bar_r (ties broken towards the lower index).  The losses
+    are host data by the time selection happens, so this is a plain numpy
+    argmin — it used to dispatch (and re-trace) a jitted ``jnp.argmin`` on a
+    Python list per call; the device-side selection path lives in the
+    compiled round programs (``repro.selection``)."""
+    return int(np.argmin(np.asarray(losses)))
 
 
 @partial(jax.jit, static_argnums=(0,))

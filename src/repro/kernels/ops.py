@@ -79,14 +79,28 @@ def slstm_scan(pre, r, *, n_heads: int, interpret: Optional[bool] = None):
     return _ss.slstm_scan(pre, r, n_heads=n_heads, interpret=interpret)
 
 
+def largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of n at most ``cap``.  Kernel grids require
+    N % block == 0 (and shared-set sizes like D_o = 1500 are not always
+    multiples of the default tile); the selection subsystem's shard-count
+    clamp (``repro.selection.effective_shards``) delegates here too."""
+    cap = max(1, min(cap, n))
+    while n % cap:
+        cap -= 1
+    return cap
+
+
 @partial(jax.jit, static_argnames=("block_n", "interpret"))
 def tamper_distance(ref, recv, *, block_n: int = 256,
                     interpret: Optional[bool] = None):
     """Relative L2 distance ||ref-recv|| / ||ref|| between activation sets.
-    ref/recv: (..., D) — flattened to (N, D)."""
+    ref/recv: (..., D) — flattened to (N, D).  The fused selection cascade's
+    verify stage (``repro.selection``) maps this over the R candidate
+    handoffs inside the compiled round program."""
     interpret = _default_interpret() if interpret is None else interpret
     d = ref.shape[-1]
     a = ref.reshape(-1, d)
     b = recv.reshape(-1, d)
-    sums = _tc.tamper_check_sums(a, b, block_n=block_n, interpret=interpret)
+    sums = _tc.tamper_check_sums(a, b, block_n=largest_divisor(a.shape[0], block_n),
+                                 interpret=interpret)
     return jnp.sqrt(sums[0]) / jnp.maximum(jnp.sqrt(sums[1]), 1e-12)

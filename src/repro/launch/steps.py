@@ -122,22 +122,51 @@ def launch_round_spec(model: Model, lr: float = 1e-3,
     train step per cluster and the shared-set validation loss.  With
     ``constrain_val`` the validation forward is pinned to the (auto) "data"
     axis — leaving it unconstrained inside a manual pod shard_map makes
-    GSPMD replicate the forward per device (§Perf hillclimb C it.4)."""
+    GSPMD replicate the forward per device (§Perf hillclimb C it.4).
+
+    ``validate_sharded`` slices the validation batch into (up to) k equal
+    shards for the median-of-means selection family; there is no
+    ``message_stats`` hook — the launch layer runs plain SPMD train steps,
+    not the SL message exchange — so anomaly-scoring policies
+    (loss_plus_distance) are rejected at build time with a clear error."""
     train = make_train_step(model, lr)
 
-    def validate(params, val_batch):
+    def _constrain(val_batch):
         if constrain_val:
             val_batch = jax.tree.map(
                 lambda x: jax.lax.with_sharding_constraint(
                     x, P("data", *([None] * (x.ndim - 1)))), val_batch)
-        vloss, _ = model.loss(params, val_batch)
+        return val_batch
+
+    def validate(params, val_batch):
+        vloss, _ = model.loss(params, _constrain(val_batch))
         return vloss, None
 
-    return RoundSpec(train, validate)
+    def validate_sharded(params, val_batch, k):
+        from ..selection import effective_shards
+        val_batch = _constrain(val_batch)
+        b = jax.tree.leaves(val_batch)[0].shape[0]
+        kk = effective_shards(k, b)
+        shards = jax.tree.map(
+            lambda x: x.reshape((kk, b // kk) + x.shape[1:]), val_batch)
+        losses = jax.vmap(lambda vb: model.loss(params, vb)[0])(shards)
+        # the reported vloss stays the exact full-batch loss: Model.loss is
+        # a valid-token-weighted (masked) mean, so a mean of per-shard means
+        # would over-weight padding-light shards; the shards feed only the
+        # median-of-means score
+        vloss, _ = model.loss(params, val_batch)
+        return vloss, losses, None
+
+    def train_summary(aux):
+        return aux            # (R,) per-cluster train loss
+
+    return RoundSpec(train, validate, validate_sharded=validate_sharded,
+                     train_summary=train_summary)
 
 
 def make_pigeon_round_step_shardmap(model: Model, mesh, lr: float = 1e-3,
-                                    for_execution: bool = False) -> Callable:
+                                    for_execution: bool = False,
+                                    selection: str = "argmin") -> Callable:
     """Cluster parallelism as a *manual* pod-axis shard_map (§Perf hillclimb
     C iteration 3): each pod runs its cluster slice's train+validate program
     (data/model axes stay GSPMD-auto), and the only cross-pod collectives
@@ -151,10 +180,12 @@ def make_pigeon_round_step_shardmap(model: Model, mesh, lr: float = 1e-3,
     because the dry-run driver only lowers/compiles this step — that is
     supported on every backend."""
     from ..core.runner import check_partial_auto_backend
+    from ..selection import resolve_policy
     if for_execution:
         check_partial_auto_backend(mesh, ("pod",))
     runner = RoundRunner(launch_round_spec(model, lr, constrain_val=True),
-                         placement="sharded", mesh=mesh, params_stacked=True)
+                         placement="sharded", mesh=mesh, params_stacked=True,
+                         select=resolve_policy(selection))
     return runner.round_fn()
 
 
@@ -194,7 +225,8 @@ def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3) -> Callable:
     return plus_round
 
 
-def make_pigeon_round_step(model: Model, lr: float = 1e-3) -> Callable:
+def make_pigeon_round_step(model: Model, lr: float = 1e-3,
+                           selection: str = "argmin") -> Callable:
     """One Pigeon-SL global round over R stacked cluster replicas (R is
     inferred from the stacked leading dim at trace time).
 
@@ -205,14 +237,19 @@ def make_pigeon_round_step(model: Model, lr: float = 1e-3) -> Callable:
     Returns (new_stacked_params, val_losses, selected_idx).
 
     Thin adapter over the RoundRunner's vmap placement — train + validate +
-    argmin + winner broadcast all come from ``core/runner.py``, the same
-    body the protocol engine runs.  The winner broadcast is always the
-    one-hot psum contraction (a single masked all-reduce per leaf instead of
-    the gather+full-replicate path GSPMD emits for dynamic indexing), which
-    retired the "pigeon_psum" named optimization — it is the only strategy.
+    policy selection + winner broadcast all come from ``core/runner.py``,
+    the same body the protocol engine runs; ``selection`` names any
+    loss-based ``repro.selection`` policy (argmin / median_of_means /
+    trimmed — the same knob as the protocol drivers).  The winner broadcast
+    is always the one-hot psum contraction (a single masked all-reduce per
+    leaf instead of the gather+full-replicate path GSPMD emits for dynamic
+    indexing), which retired the "pigeon_psum" named optimization — it is
+    the only strategy.
     """
+    from ..selection import resolve_policy
     runner = RoundRunner(launch_round_spec(model, lr), placement="vmap",
-                         params_stacked=True)
+                         params_stacked=True,
+                         select=resolve_policy(selection))
     return runner.round_fn()
 
 
@@ -236,9 +273,11 @@ def apply_shape_settings(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
 def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
                 pigeon_clusters: int = 0, lr: float = 1e-3,
                 seq_shard_cache: bool = False,
-                optimizations: Tuple[str, ...] = ()) -> LoweringSpec:
+                optimizations: Tuple[str, ...] = (),
+                selection: str = "argmin") -> LoweringSpec:
     """Build the (fn, ShapeDtypeStruct args, shardings) triple for one
-    (architecture x input-shape x mesh) combination."""
+    (architecture x input-shape x mesh) combination.  ``selection`` names
+    the loss-based selection policy the pigeon round steps compile in."""
     shape = SHAPES[shape_name]
     cfg = apply_shape_settings(cfg, shape)
     if optimizations:
@@ -277,9 +316,10 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
                 # dryrun only lowers/compiles this spec; anyone *executing*
                 # it should build the step with for_execution=True (or call
                 # check_partial_auto_backend) — CPU + auto axes > 1 cannot run
-                fn = make_pigeon_round_step_shardmap(model, mesh, lr)
+                fn = make_pigeon_round_step_shardmap(model, mesh, lr,
+                                                     selection=selection)
             else:
-                fn = make_pigeon_round_step(model, lr)
+                fn = make_pigeon_round_step(model, lr, selection=selection)
             return LoweringSpec(fn, (stacked, batches, val_batch),
                                 (p_shard, b_shard, v_shard), None)
         p_shard = shd.param_shardings(params_shape, mesh)

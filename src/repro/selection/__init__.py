@@ -1,0 +1,38 @@
+"""Pluggable cluster-selection subsystem.
+
+One subsystem owns the round-acceptance cascade — score -> rank -> verify ->
+commit — in both its execution forms:
+
+  * the **fused on-device cascade** (``cascade.py``) compiled into the
+    RoundRunner's round program: ranks as data, handoff distances via the
+    ``kernels/tamper_check`` Pallas kernel, rejection as a ``jnp.where``
+    mask, one stacked host fetch per round;
+  * the **host reference selector** (``selector.py``): the pre-refactor
+    ``run_pigeon`` loop, used by the sequential oracle and the param-tamper
+    fallback (handoff tampering consumes the protocol key per visited
+    candidate, which is inherently host-sequenced).
+
+Policies (``policies.py``) plug the score/eligibility stages; every protocol
+driver accepts ``selection=`` (a registered name or a policy instance) with
+``"argmin"`` the bit-identical default.
+"""
+from .cascade import (N_FETCH_TAIL, masked_first_accept, pack_fetch,
+                      unpack_fetch)
+from .policies import (ARGMIN, LOSS_PLUS_DISTANCE, MEDIAN_OF_MEANS,
+                       SELECTION_REGISTRY, TRIMMED, LossPlusDistancePolicy,
+                       MedianOfMeansPolicy, ScoreContext, SelectionPolicy,
+                       TrimmedPolicy, register_policy, resolve_policy,
+                       robust_z, selection_policies)
+from .selector import (SelectionOutcome, effective_shards, host_score_context,
+                       score_and_rank, select_host)
+
+__all__ = [
+    "SelectionPolicy", "MedianOfMeansPolicy", "LossPlusDistancePolicy",
+    "TrimmedPolicy", "ScoreContext", "robust_z",
+    "ARGMIN", "MEDIAN_OF_MEANS", "LOSS_PLUS_DISTANCE", "TRIMMED",
+    "SELECTION_REGISTRY", "register_policy", "resolve_policy",
+    "selection_policies",
+    "masked_first_accept", "pack_fetch", "unpack_fetch", "N_FETCH_TAIL",
+    "SelectionOutcome", "select_host", "host_score_context", "score_and_rank",
+    "effective_shards",
+]

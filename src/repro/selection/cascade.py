@@ -1,0 +1,72 @@
+"""The masked on-device acceptance cascade (rank -> verify -> commit).
+
+Section III-C's selection loop — argsort the cluster scores, walk candidates
+in rank order, discard any whose parameter handoff fails the tamper check,
+commit the first survivor (or roll back to theta^t if none survives) — used
+to run as a host loop with one device sync per visited candidate.  Here the
+whole cascade is expressed as masked array arithmetic so it compiles into
+the round program: candidate ranks are *data* (``argsort``), rejection is a
+``jnp.where`` mask, and the only host interaction is the single stacked
+fetch of ``(val_losses, train_summary, selected, detections, accepted)`` the
+drivers record into ``History``.
+
+The cascade's decision contract matches the host reference selector
+(``repro.selection.selector``) exactly:
+
+  * candidates are visited in ascending masked-score order (ineligible
+    clusters sort last via +inf and are never visited);
+  * ``detections`` counts the visited candidates that failed verification
+    before the accepted one — R_eligible when nothing survives;
+  * ``accepted`` is False only when every eligible candidate fails, in which
+    case ``selected`` still reports the rank-0 candidate (the argmin) for
+    History/honesty bookkeeping while the commit keeps theta^t.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# fetch layout: [vlosses (R,), train_summary (R,), selected, detections,
+# accepted] — one f32 vector, one host sync per round.
+N_FETCH_TAIL = 3
+
+
+def masked_first_accept(scores: jnp.ndarray, eligible: jnp.ndarray,
+                        passed: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(selected, detections, accepted) of the rank/verify/commit walk.
+
+    ``scores``: (R,) f32, lower = better.  ``eligible``: (R,) bool policy
+    mask (all-False falls back to all-True).  ``passed``: (R,) bool
+    per-candidate verification verdicts (the handoff tamper check; all-True
+    when verification is disabled)."""
+    eligible = jnp.where(jnp.any(eligible), eligible,
+                         jnp.ones_like(eligible))
+    masked = jnp.where(eligible, scores.astype(jnp.float32), jnp.inf)
+    ranks = jnp.argsort(masked)                      # stable: eligible first
+    ok = (passed & eligible)[ranks]
+    first = jnp.argmax(ok)                           # 0 when none pass
+    accepted = jnp.any(ok)
+    selected = ranks[jnp.where(accepted, first, 0)].astype(jnp.int32)
+    detections = jnp.where(accepted, first,
+                           jnp.sum(eligible)).astype(jnp.int32)
+    return selected, detections, accepted
+
+
+def pack_fetch(vlosses: jnp.ndarray, train_summary: jnp.ndarray,
+               selected: jnp.ndarray, detections: jnp.ndarray,
+               accepted: jnp.ndarray) -> jnp.ndarray:
+    """Stack the round's host-visible outcome into one (2R + 3,) f32 vector
+    so the drivers pay exactly one device->host sync per round."""
+    tail = jnp.stack([selected, detections, accepted]).astype(jnp.float32)
+    return jnp.concatenate([vlosses.astype(jnp.float32),
+                            train_summary.astype(jnp.float32), tail])
+
+
+def unpack_fetch(fetched, r: int):
+    """Host-side view of :func:`pack_fetch` (``fetched`` already a numpy
+    array): (vlosses, train_summary, selected, detections, accepted)."""
+    assert fetched.shape[-1] == 2 * r + N_FETCH_TAIL
+    return (fetched[:r], fetched[r:2 * r], int(fetched[2 * r]),
+            int(fetched[2 * r + 1]), bool(fetched[2 * r + 2]))

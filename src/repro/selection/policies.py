@@ -1,0 +1,216 @@
+"""Selection policies: pluggable cluster-acceptance scoring (Section III-C
+and beyond).
+
+A :class:`SelectionPolicy` owns the *score* and *eligibility* stages of the
+round-acceptance cascade (score -> rank -> verify -> commit).  The stages are
+pure ``jnp`` functions of a :class:`ScoreContext`, so one policy object
+serves every execution form: the fused on-device cascade compiled into the
+:class:`~repro.core.runner.RoundRunner`'s round program (both placements, and
+vmapped once more by the multi-seed sweep), and the host-side reference
+selector (``repro.selection.selector``) used by the sequential oracle and the
+param-tamper fallback.
+
+Registered policies (``selection=`` on every protocol driver):
+
+  * ``argmin``           — the paper's rule: argmin shared-set validation
+                           loss.  The bit-identical default.
+  * ``median_of_means``  — shard the shared set D_o into ``shards`` equal
+                           slices and score each cluster by the *median* of
+                           its per-shard mean losses: a few poisoned/outlier
+                           validation samples cannot drag a cluster's score.
+  * ``loss_plus_distance`` — validation-loss z-score composited with the
+                           cluster's worst activation-message anomaly
+                           (within-batch dispersion collapse = replay;
+                           support residual = stealth noise blends), both
+                           robust-z-scored across the round's clients.
+                           Targets the stealth/replay families that evade
+                           pure loss argmin (robustness-matrix finding).
+  * ``trimmed``          — drop clusters whose validation loss is a robust
+                           z-score outlier (|z| > ``z_tol``) before argmin;
+                           a suspiciously *low* loss no longer wins outright.
+
+Scores follow the loss convention: lower is better.  Ineligible clusters are
+never visited by the verify cascade and can never be selected (unless every
+cluster is ineligible, which falls back to all-eligible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Union
+
+import jax.numpy as jnp
+
+# indices into the message-stats lane of ScoreContext (see
+# repro.core.split.MESSAGE_STAT_NAMES)
+_STAT_DISPERSION = 0
+_STAT_SUPPORT = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreContext:
+    """Per-round features a policy may score.  ``vlosses`` is always present;
+    the optional features are populated only when the policy declares it
+    needs them (``shard_count`` / ``needs_message_stats``), so the default
+    argmin round program carries no extra compute."""
+    vlosses: jnp.ndarray                          # (R,) shared-set val losses
+    shard_losses: Optional[jnp.ndarray] = None    # (R, K) per-shard losses
+    message_stats: Optional[jnp.ndarray] = None   # (R, M_bar, S) train-message stats
+
+
+def robust_z(x: jnp.ndarray, axis=None, eps: float = 1e-6) -> jnp.ndarray:
+    """Median/MAD z-score (1.4826 * MAD estimates sigma under normality).
+    ``eps`` keeps degenerate all-equal features at z = 0 instead of NaN."""
+    x = x.astype(jnp.float32)
+    med = jnp.median(x, axis=axis, keepdims=axis is not None)
+    mad = jnp.median(jnp.abs(x - med), axis=axis, keepdims=axis is not None)
+    return (x - med) / (1.4826 * mad + eps)
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionPolicy:
+    """Base policy: argmin validation loss (the paper's Section III-C rule).
+
+    Subclasses override :meth:`score` (lower = better) and/or
+    :meth:`eligible`, plus the feature-requirement properties.  Frozen
+    dataclasses: policy objects are hashable and cache as compiled-program
+    keys (``repro.core.runner.protocol_runner``)."""
+    name: str = "argmin"
+
+    # -- feature requirements (drive what the round program computes) -------
+    @property
+    def shard_count(self) -> int:
+        """> 0: the round program validates in this many D_o shards
+        (requires the RoundSpec's ``validate_sharded`` hook)."""
+        return 0
+
+    @property
+    def needs_message_stats(self) -> bool:
+        """True: the round program surfaces per-client transmitted-message
+        statistics from the training phase (``with_stats`` train programs)."""
+        return False
+
+    # -- the score / eligibility stages --------------------------------------
+    def score(self, ctx: ScoreContext) -> jnp.ndarray:
+        """(R,) f32 scores, lower = better.  Pure jnp: runs inside the
+        compiled round under vmap/shard_map (features arrive pre-gathered
+        across the cluster axis) and on host arrays in the reference
+        selector."""
+        return ctx.vlosses.astype(jnp.float32)
+
+    def eligible(self, ctx: ScoreContext, scores: jnp.ndarray) -> jnp.ndarray:
+        """(R,) bool mask of clusters the cascade may visit/select."""
+        return jnp.ones(scores.shape, dtype=bool)
+
+
+@dataclasses.dataclass(frozen=True)
+class MedianOfMeansPolicy(SelectionPolicy):
+    """Median over ``shards`` equal D_o slices of the per-shard mean loss."""
+    name: str = "median_of_means"
+    shards: int = 4
+
+    @property
+    def shard_count(self) -> int:
+        return self.shards
+
+    def score(self, ctx: ScoreContext) -> jnp.ndarray:
+        assert ctx.shard_losses is not None, \
+            f"{self.name} needs per-shard validation losses"
+        return jnp.median(ctx.shard_losses.astype(jnp.float32), axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class LossPlusDistancePolicy(SelectionPolicy):
+    """Bounded validation-loss z-score + ``weight`` x the cluster's worst
+    activation-message anomaly.
+
+    Anomaly per client = max(z(support residual), -z(dispersion), 0), robust
+    z-scores taken across all R x M_bar clients of the round (malicious
+    clients are a pigeonhole-bounded minority of *clients*, so the median is
+    a safe reference even when most *clusters* are tainted).  A replayed
+    message collapses dispersion (z << 0); a stealth noise blend leaves the
+    honest activation support (z >> 0).  The cluster inherits its worst
+    client's anomaly: one tainted member taints the cluster.
+
+    Two guards make the composite robust at small scale, where the loss MAD
+    can be tiny (huge loss z-scores) and the anomalous clients themselves
+    inflate the dispersion MAD (deflated anomaly z-scores): the loss term is
+    squashed through tanh(z / loss_scale), bounding its pull to (-1, 1)
+    while preserving the argmin ordering among unflagged clusters, and the
+    anomaly is hinged at ``margin`` so honest statistical noise (|z| ~ 1)
+    contributes exactly zero — a flagged cluster cannot buy its way back
+    with a low loss."""
+    name: str = "loss_plus_distance"
+    weight: float = 4.0
+    margin: float = 1.5
+    loss_scale: float = 3.0
+    z_clip: float = 1e4
+
+    @property
+    def needs_message_stats(self) -> bool:
+        return True
+
+    def score(self, ctx: ScoreContext) -> jnp.ndarray:
+        assert ctx.message_stats is not None, \
+            f"{self.name} needs transmitted-message statistics"
+        stats = ctx.message_stats.astype(jnp.float32)    # (R, M_bar, S)
+        r, m_bar = stats.shape[0], stats.shape[1]
+        flat = stats.reshape(r * m_bar, -1)
+        z_disp = robust_z(flat[:, _STAT_DISPERSION])
+        z_sup = robust_z(flat[:, _STAT_SUPPORT])
+        anomaly = jnp.maximum(jnp.maximum(z_sup, -z_disp), 0.0)
+        anomaly = jnp.clip(anomaly, 0.0, self.z_clip).reshape(r, m_bar)
+        cluster_dist = jnp.maximum(jnp.max(anomaly, axis=1)
+                                   - jnp.float32(self.margin), 0.0)
+        loss_term = jnp.tanh(robust_z(ctx.vlosses)
+                             / jnp.float32(self.loss_scale))
+        return loss_term + jnp.float32(self.weight) * cluster_dist
+
+
+@dataclasses.dataclass(frozen=True)
+class TrimmedPolicy(SelectionPolicy):
+    """Argmin after dropping robust-z validation-loss outliers."""
+    name: str = "trimmed"
+    z_tol: float = 3.0
+
+    def eligible(self, ctx: ScoreContext, scores: jnp.ndarray) -> jnp.ndarray:
+        return jnp.abs(robust_z(ctx.vlosses)) <= jnp.float32(self.z_tol)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+SELECTION_REGISTRY: Dict[str, SelectionPolicy] = {}
+
+
+def register_policy(policy: SelectionPolicy) -> SelectionPolicy:
+    assert policy.name not in SELECTION_REGISTRY, \
+        f"duplicate selection policy {policy.name!r}"
+    SELECTION_REGISTRY[policy.name] = policy
+    return policy
+
+
+ARGMIN = register_policy(SelectionPolicy())
+MEDIAN_OF_MEANS = register_policy(MedianOfMeansPolicy())
+LOSS_PLUS_DISTANCE = register_policy(LossPlusDistancePolicy())
+TRIMMED = register_policy(TrimmedPolicy())
+
+
+def selection_policies() -> Dict[str, SelectionPolicy]:
+    return dict(SELECTION_REGISTRY)
+
+
+def resolve_policy(selection: Union[str, SelectionPolicy, None]) -> SelectionPolicy:
+    """Driver-argument resolution: a registered name, a policy instance
+    (possibly parameterised, e.g. ``LossPlusDistancePolicy(weight=2.0)``),
+    or None (the default argmin)."""
+    if selection is None:
+        return ARGMIN
+    if isinstance(selection, SelectionPolicy):
+        return selection
+    try:
+        return SELECTION_REGISTRY[selection]
+    except KeyError:
+        raise ValueError(
+            f"unknown selection policy {selection!r}; registered: "
+            f"{sorted(SELECTION_REGISTRY)}") from None

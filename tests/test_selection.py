@@ -1,0 +1,314 @@
+"""Selection subsystem: policy units, the masked acceptance cascade, and the
+fused-vs-host equivalence contract.
+
+The load-bearing guarantee: ``selection="argmin"`` (the default) run through
+the fused on-device cascade is bit-identical — History records (val_losses,
+train_losses, selected, detections, accepted, test_acc) and CommMeter counts
+— to the host-side reference cascade (``repro.selection.select_host``, the
+pre-refactor ``run_pigeon`` loop), under both engines and both placements.
+The new policies are checked for the behaviours they exist for: trimmed
+drops score outliers, median_of_means resists poisoned validation shards,
+and loss_plus_distance flags the stealth/replay message anomalies that evade
+pure loss argmin.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Attack, LABEL_FLIP, PARAM_TAMPER, REPLAY,
+                        ProtocolConfig, ThreatModel, from_cnn, run_pigeon,
+                        run_pigeon_sweep, run_splitfed, stealth)
+from repro.core.protocol import evaluate
+from repro.core.validation import select_cluster
+from repro.selection import (LossPlusDistancePolicy, MedianOfMeansPolicy,
+                             ScoreContext, SelectionPolicy, TrimmedPolicy,
+                             effective_shards, masked_first_accept,
+                             pack_fetch, resolve_policy, robust_z,
+                             selection_policies, unpack_fetch)
+
+POLICIES = ("argmin", "median_of_means", "loss_plus_distance", "trimmed")
+
+
+# ---------------------------------------------------------------------------
+# units: registry, cascade, policy stages
+# ---------------------------------------------------------------------------
+
+def test_registry_resolves_names_and_instances():
+    assert set(POLICIES) <= set(selection_policies())
+    assert resolve_policy("argmin") is resolve_policy(None)
+    custom = LossPlusDistancePolicy(weight=2.0)
+    assert resolve_policy(custom) is custom
+    with pytest.raises(ValueError, match="unknown selection policy"):
+        resolve_policy("warp")
+
+
+def test_select_cluster_is_host_argmin():
+    assert select_cluster([3.0, 1.0, 2.0]) == 1
+    assert select_cluster([1.0, 1.0]) == 0          # ties toward lower index
+    assert isinstance(select_cluster(np.float32([2.0, 1.5])), int)
+
+
+def test_masked_first_accept_walks_rank_order():
+    scores = jnp.asarray([3.0, 1.0, 2.0, 4.0])
+    ones = jnp.ones(4, bool)
+    # everything passes: plain argmin
+    sel, det, acc = masked_first_accept(scores, ones, ones)
+    assert (int(sel), int(det), bool(acc)) == (1, 0, True)
+    # rank-0 candidate fails verification: reselect the runner-up, 1 detection
+    passed = jnp.asarray([True, False, True, True])
+    sel, det, acc = masked_first_accept(scores, ones, passed)
+    assert (int(sel), int(det), bool(acc)) == (2, 1, True)
+    # nothing passes: rollback, selected still reports the argmin
+    sel, det, acc = masked_first_accept(scores, ones, jnp.zeros(4, bool))
+    assert (int(sel), int(det), bool(acc)) == (1, 4, False)
+
+
+def test_masked_first_accept_respects_eligibility():
+    scores = jnp.asarray([3.0, 1.0, 2.0, 4.0])
+    elig = jnp.asarray([True, False, True, True])   # trim the argmin
+    sel, det, acc = masked_first_accept(scores, elig, jnp.ones(4, bool))
+    assert (int(sel), int(det), bool(acc)) == (2, 0, True)
+    # ineligible candidates are never visited: failures among them don't
+    # count as detections, and an all-fail walk counts only eligible visits
+    sel, det, acc = masked_first_accept(scores, elig, jnp.zeros(4, bool))
+    assert (int(det), bool(acc)) == (3, False)
+    # all-ineligible falls back to all-eligible
+    sel, det, acc = masked_first_accept(scores, jnp.zeros(4, bool),
+                                        jnp.ones(4, bool))
+    assert (int(sel), bool(acc)) == (1, True)
+
+
+def test_pack_unpack_fetch_roundtrip():
+    fetch = pack_fetch(jnp.asarray([1.0, 2.0]), jnp.asarray([3.0, 4.0]),
+                       jnp.int32(1), jnp.int32(0), jnp.asarray(True))
+    vl, tl, sel, det, acc = unpack_fetch(np.asarray(fetch), 2)
+    assert list(vl) == [1.0, 2.0] and list(tl) == [3.0, 4.0]
+    assert (sel, det, acc) == (1, 0, True)
+
+
+def test_effective_shards_divides():
+    assert effective_shards(4, 100) == 4
+    assert effective_shards(4, 1500) == 4
+    assert effective_shards(7, 100) == 5
+    assert effective_shards(3, 7) == 1
+
+
+def test_robust_z_degenerate_is_zero():
+    z = robust_z(jnp.zeros(8))
+    np.testing.assert_allclose(np.asarray(z), 0.0)
+
+
+def test_trimmed_drops_low_outlier():
+    # one suspiciously low loss among an otherwise tight field
+    vl = jnp.asarray([1.00, 1.02, 0.10, 1.01])
+    pol = TrimmedPolicy(z_tol=3.0)
+    ctx = ScoreContext(vlosses=vl)
+    elig = np.asarray(pol.eligible(ctx, pol.score(ctx)))
+    assert not elig[2] and elig[[0, 1, 3]].all()
+
+
+def test_median_of_means_resists_poisoned_shard():
+    # cluster 0: great on 3 shards, catastrophic on one (targeted poisoning
+    # of a validation slice); cluster 1: uniformly mediocre.  Plain mean
+    # picks 0 at the wrong moments; the shard median picks 1.
+    shard = jnp.asarray([[0.1, 0.1, 0.1, 9.0],
+                         [0.5, 0.5, 0.5, 0.5]])
+    ctx = ScoreContext(vlosses=jnp.mean(shard, axis=1), shard_losses=shard)
+    scores = np.asarray(MedianOfMeansPolicy(shards=4).score(ctx))
+    assert scores[0] < scores[1]            # median ignores the bad shard
+    assert float(jnp.mean(shard, axis=1)[0]) > float(jnp.mean(shard, axis=1)[1])
+
+
+def test_loss_plus_distance_flags_message_anomalies():
+    """Synthetic message statistics: a replay client (dispersion collapse)
+    and a stealth client (support residual) must blow up their clusters'
+    scores even when those clusters hold the loss argmin."""
+    vl = jnp.asarray([0.9, 1.0, 1.1, 1.05])        # poisoned clusters win on loss
+    disp = np.full((4, 2), 0.5) + np.random.default_rng(0).normal(0, 0.02, (4, 2))
+    sup = np.zeros((4, 2))
+    disp[0, 1] = 0.0                               # replay in cluster 0
+    sup[1, 0] = 0.02                               # stealth in cluster 1
+    stats = jnp.asarray(np.stack([disp, sup], axis=-1), dtype=jnp.float32)
+    pol = LossPlusDistancePolicy()
+    scores = np.asarray(pol.score(ScoreContext(vlosses=vl, message_stats=stats)))
+    assert scores[0] > max(scores[2], scores[3])
+    assert scores[1] > max(scores[2], scores[3])
+    assert int(np.argmin(scores)) in (2, 3)
+
+
+# ---------------------------------------------------------------------------
+# fused-vs-host equivalence (the bit-identity contract)
+# ---------------------------------------------------------------------------
+
+def assert_records_identical(h_a, h_b, keys=("clusters", "val_losses",
+                                             "train_losses", "selected",
+                                             "accepted", "selected_honest",
+                                             "detections", "comm",
+                                             "test_acc")):
+    assert len(h_a.rounds) == len(h_b.rounds)
+    for ra, rb in zip(h_a.rounds, h_b.rounds):
+        for k in keys:
+            if k in ra or k in rb:
+                assert ra[k] == rb[k], (k, ra["round"], ra[k], rb[k])
+
+
+@pytest.mark.parametrize("placement", ["vmap", "sharded"])
+@pytest.mark.parametrize("selection", POLICIES)
+def test_fused_cascade_identical_to_host_pigeon(tiny_task, tiny_pcfg,
+                                                placement, selection):
+    """The compiled score->rank->verify->commit cascade must reproduce the
+    host reference selector exactly — selection, History floats, CommMeter —
+    for every policy under both placements.  (Bit-identity is the argmin
+    acceptance criterion; the stricter all-policy check documents that the
+    fused and host cascades share one decision procedure.)"""
+    data, module = tiny_task
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched",
+              placement=placement, selection=selection)
+    h_fused = run_pigeon(module, data, tiny_pcfg, **kw)
+    h_host = run_pigeon(module, data, tiny_pcfg, _force_host_selection=True,
+                        **kw)
+    assert_records_identical(h_fused, h_host)
+
+
+def test_fused_argmin_matches_sequential_oracle(tiny_task, tiny_pcfg):
+    """Default-path smoke against the sequential oracle: same selections and
+    bit-identical comm counts (losses agree to float tolerance, as between
+    the two engines before the refactor)."""
+    data, module = tiny_task
+    h_seq = run_pigeon(module, data, tiny_pcfg, malicious={1},
+                       attack=Attack(LABEL_FLIP), engine="sequential")
+    h_fused = run_pigeon(module, data, tiny_pcfg, malicious={1},
+                         attack=Attack(LABEL_FLIP), engine="batched")
+    for rs, rb in zip(h_seq.rounds, h_fused.rounds):
+        assert rs["selected"] == rb["selected"]
+        assert rs["accepted"] and rb["accepted"]
+        assert rs["comm"] == rb["comm"]
+        np.testing.assert_allclose(rs["val_losses"], rb["val_losses"],
+                                   rtol=2e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("selection", POLICIES)
+def test_policies_agree_across_engines(tiny_task, tiny_pcfg, selection):
+    """Every policy must pick the same clusters on the sequential oracle and
+    the fused batched path (scores equal within float tolerance)."""
+    data, module = tiny_task
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), selection=selection)
+    h_seq = run_pigeon(module, data, tiny_pcfg, engine="sequential", **kw)
+    h_bat = run_pigeon(module, data, tiny_pcfg, engine="batched", **kw)
+    assert [r["selected"] for r in h_seq.rounds] == \
+        [r["selected"] for r in h_bat.rounds]
+
+
+def test_param_tamper_rollback_records_accepted_false(tiny_task, tiny_pcfg):
+    """The all-tampered round keeps theta^t: it must record accepted=False
+    and must NOT charge the R*d_CL broadcast that never happens (the
+    pre-subsystem accounting bug), under both engines identically."""
+    data, module = tiny_task
+    pcfg = dataclasses.replace(tiny_pcfg, T=3)
+    kw = dict(malicious={0, 1, 3}, attack=Attack(PARAM_TAMPER))
+    h_seq = run_pigeon(module, data, pcfg, engine="sequential", **kw)
+    h_bat = run_pigeon(module, data, pcfg, engine="batched", **kw)
+    assert_records_identical(h_seq, h_bat,
+                             keys=("selected", "accepted", "detections",
+                                   "comm"))
+    rejected = [r for r in h_bat.rounds if not r["accepted"]]
+    accepted = [r for r in h_bat.rounds if r["accepted"]]
+    assert rejected, "expected at least one all-tampered round"
+    assert accepted, "expected at least one accepted round"
+    for r in rejected:
+        assert r["detections"] == pcfg.R
+        assert r["selected"] == int(np.argmin(r["val_losses"]))
+    # the phantom broadcast is gone: a rejected round charges only the
+    # intra-cluster handoffs — exactly R*d_CL less than an accepted round
+    gamma0, _ = module.init(jax.random.PRNGKey(0))
+    from repro.core.protocol import _count_params
+    d_cl = _count_params(gamma0)
+    assert (accepted[0]["comm"]["param_floats"]
+            - rejected[0]["comm"]["param_floats"]) == pcfg.R * d_cl
+
+
+@pytest.mark.parametrize("selection", ["argmin", "median_of_means",
+                                       "loss_plus_distance"])
+def test_fused_cascade_identical_to_host_splitfed(tiny_task, tiny_pcfg,
+                                                  selection):
+    data, module = tiny_task
+    pcfg = dataclasses.replace(tiny_pcfg, lr=0.5)
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched",
+              selection=selection)
+    h_fused = run_splitfed(module, data, pcfg, **kw)
+    h_host = run_splitfed(module, data, pcfg, _force_host_selection=True,
+                          **kw)
+    assert_records_identical(h_fused, h_host,
+                             keys=("selected", "val_losses",
+                                   "selected_honest", "test_acc"))
+
+
+@pytest.mark.parametrize("selection", ["argmin", "trimmed",
+                                       "loss_plus_distance"])
+def test_sweep_selection_matches_per_seed(tiny_task, tiny_pcfg, selection):
+    """The multi-seed sweep binds the same policy programs: each replica
+    reproduces the corresponding single-seed fused run."""
+    data, module = tiny_task
+    hists = run_pigeon_sweep(module, data, tiny_pcfg, malicious={1},
+                             attack=Attack(LABEL_FLIP), seeds=(0, 1),
+                             selection=selection)
+    for i, seed in enumerate((0, 1)):
+        h_ref = run_pigeon(module, data,
+                           dataclasses.replace(tiny_pcfg, seed=seed),
+                           malicious={1}, attack=Attack(LABEL_FLIP),
+                           engine="batched", selection=selection)
+        for rr, rw in zip(h_ref.rounds, hists[i].rounds):
+            assert rr["selected"] == rw["selected"]
+            np.testing.assert_allclose(rr["val_losses"], rw["val_losses"],
+                                       rtol=2e-5, atol=1e-6)
+
+
+def test_unknown_selection_rejected(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    with pytest.raises(ValueError, match="selection policy"):
+        run_pigeon(module, data, tiny_pcfg, malicious=set(), selection="warp")
+
+
+# ---------------------------------------------------------------------------
+# the stealth/replay recovery property (the robustness-matrix finding)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["stealth", "replay"])
+def test_loss_plus_distance_recovers_stealth_replay(family):
+    """PR 2's robustness matrix showed stealth/replay evade loss argmin
+    (selection honesty ~0).  loss_plus_distance must flag their message
+    anomalies and keep selection honest, at a trimmed-down version of the
+    matrix scale (M=8, N=3, 3 malicious clients spread over the clusters)."""
+    from repro.data import build_image_task
+    m = 8
+    data, cfg = build_image_task("mnist", m_clients=m, d_m=80, d_o=60,
+                                 n_test=100, seed=0)
+    module = from_cnn(cfg)
+    pcfg = ProtocolConfig(M=m, N=3, T=3, E=2, B=8, lr=0.03, seed=0)
+    attack = stealth(0.97) if family == "stealth" else Attack(REPLAY)
+    tm = ThreatModel.build({i: attack for i in (0, 1, 2)})
+    h = run_pigeon(module, data, pcfg, threat_model=tm, engine="batched",
+                   selection="loss_plus_distance")
+    honest = [r["selected_honest"] for r in h.rounds]
+    assert sum(honest) / len(honest) >= 0.8, honest
+
+
+# ---------------------------------------------------------------------------
+# evaluate: batched predict-and-count reduction
+# ---------------------------------------------------------------------------
+
+def test_evaluate_matches_host_argmax(tiny_task):
+    data, module = tiny_task
+    gamma, phi = module.init(jax.random.PRNGKey(0))
+    acc = evaluate(module, gamma, phi, data.x_test, data.y_test, batch=64)
+    # reference: full logits transfer + host argmax (the old implementation)
+    correct = total = 0
+    for i in range(0, data.x_test.shape[0], 64):
+        logits = np.asarray(module.predict(
+            gamma, phi, jnp.asarray(data.x_test[i:i + 64])))
+        correct += (logits.argmax(-1) == data.y_test[i:i + 64]).sum()
+        total += data.y_test[i:i + 64].shape[0]
+    assert acc == pytest.approx(correct / total, abs=1e-9)
