@@ -16,17 +16,21 @@ def main() -> None:
                     help="paper-scale Table II parameters (hours on CPU)")
     ap.add_argument("--only", default=None,
                     help="table1|fig3|fig4|fig5|ablation|roofline|robustness|"
-                         "pipeline|placements")
+                         "robustness_quant|pipeline|placements")
     ap.add_argument("--selection", default=None,
                     help="comma-separated selection policies for the "
                          "robustness matrix's policy axis (default: "
                          "argmin,loss_plus_distance)")
+    ap.add_argument("--quant", default=None,
+                    help="comma-separated cut-layer wire formats for the "
+                         "robustness_quant matrix's format axis "
+                         "(default: int8; e.g. int8,fp8_e4m3)")
     args = ap.parse_args()
 
     selections = None
     if args.selection:
-        if args.only not in (None, "robustness"):
-            ap.error("--selection only applies to the robustness matrix; "
+        if args.only not in (None, "robustness", "robustness_quant"):
+            ap.error("--selection only applies to the robustness matrices; "
                      f"it has no effect on --only {args.only}")
         from repro.selection import resolve_policy
         selections = tuple(s.strip() for s in args.selection.split(",") if s.strip())
@@ -34,6 +38,17 @@ def main() -> None:
             ap.error(f"--selection {args.selection!r} parses to no policy names")
         for s in selections:
             resolve_policy(s)        # fail fast on typos, like --only
+
+    formats = None
+    if args.quant:
+        if args.only not in (None, "robustness_quant"):
+            ap.error("--quant only applies to the robustness_quant matrix; "
+                     f"it has no effect on --only {args.only}")
+        from repro.core import resolve_quant
+        formats = tuple(q.strip() for q in args.quant.split(",") if q.strip())
+        if not formats:
+            ap.error(f"--quant {args.quant!r} parses to no format names")
+        formats = tuple(resolve_quant(q) for q in formats)  # fail fast
 
     from . import (ablation_shared_set, fig3_mnist_attacks, fig4_cifar_attacks,
                    fig5_fig6_vary_n, pipeline_overlap, placement_grid,
@@ -49,6 +64,12 @@ def main() -> None:
         "robustness": lambda: robustness_matrix.run(
             args.full, selections if selections is not None
             else robustness_matrix.DEFAULT_SELECTIONS),
+        "robustness_quant": lambda: robustness_matrix.run_quant(
+            args.full,
+            selections if selections is not None
+            else robustness_matrix.DEFAULT_SELECTIONS,
+            formats if formats is not None
+            else robustness_matrix.DEFAULT_QUANT_FORMATS),
         "pipeline": lambda: pipeline_overlap.run(args.full),
         "placements": lambda: placement_grid.run(args.full),
     }

@@ -16,6 +16,8 @@ from .attacks import (ACTIVATION, GRADIENT, HONEST, KINDS, LABEL_FLIP, NONE,
                       PARAM_TAMPER, Attack, AttackVec, attack_vec,
                       attack_vec_for_clusters)
 from .clustering import cluster_is_honest, has_honest_cluster, make_clusters
+from .comm import (QUANT_FORMATS, CommConfig, fp8_supported, message_bytes,
+                   resolve_quant)
 from .engine import (batched_round, onehot_select, run_pigeon_sweep,
                      train_round_batched)
 from .protocol import (ENGINES, ClientData, CommMeter, History, ProtocolConfig,
@@ -37,7 +39,8 @@ __all__ = [
     "ThreatModel", "ClientThreat", "Schedule", "ALWAYS", "every_k",
     "after_warmup", "ramp",
     "make_clusters", "has_honest_cluster", "cluster_is_honest",
-    "ClientData", "CommMeter", "History", "ProtocolConfig", "ENGINES",
+    "ClientData", "CommMeter", "CommConfig", "QUANT_FORMATS", "fp8_supported",
+    "message_bytes", "resolve_quant", "History", "ProtocolConfig", "ENGINES",
     "run_pigeon", "run_pigeon_plus", "run_splitfed", "run_vanilla_sl",
     "run_pigeon_sweep", "batched_round", "train_round_batched", "onehot_select",
     "PLACEMENTS", "RoundRunner", "RoundSpec", "VerifyConfig", "cluster_map",

@@ -39,8 +39,9 @@ from ..adversary import ThreatModel, resolve_threat_model
 from .attacks import HONEST, Attack
 from .clustering import cluster_is_honest, make_clusters
 from .protocol import (ClientData, CommMeter, History, ProtocolConfig,
-                       _count_params, account_client_turn, account_validation,
-                       cut_width, sample_batch_idx)
+                       _count_params, account_client_turn,
+                       account_handoff_recheck, account_param_transfer,
+                       account_validation, cut_width, sample_batch_idx)
 from .runner import (cluster_map, onehot_select, protocol_accept_runner,
                      protocol_round_spec, protocol_runner)
 from .split import (SplitModule, client_update_vec_impl,
@@ -166,7 +167,8 @@ def train_round_batched(module: SplitModule, theta, clusters, data: ClientData,
         key, prefetched = assemble_round(rng, key, data, clusters, pcfg, tm, t)
     xs, ys, avec, keys = prefetched
     (gs, ps), aux, vlosses, vacts = protocol_runner(
-        module, pcfg.lr, placement, with_stats).candidates(
+        module, pcfg.lr, placement, with_stats,
+        quant=pcfg.comm.quant).candidates(
         theta, (xs, ys, avec, keys), (x0, y0))
     losses, stats = (aux if with_stats else (aux, None))
 
@@ -212,7 +214,8 @@ def pigeon_round_accept(module: SplitModule, theta, clusters, data: ClientData,
     if prefetched is None:
         key, prefetched = assemble_round(rng, key, data, clusters, pcfg, tm, t)
     runner = protocol_accept_runner(module, pcfg.lr, placement, policy,
-                                    pcfg.tamper_check, pcfg.tamper_tol)
+                                    pcfg.tamper_check, pcfg.tamper_tol,
+                                    quant=pcfg.comm.quant)
     theta_next, fetch = runner.accept(theta, prefetched, (x0, y0))
 
     d_cl = _count_params(theta[0])
@@ -228,9 +231,7 @@ def pigeon_round_accept(module: SplitModule, theta, clusters, data: ClientData,
     # charges per visit (detections failures + the accepted one).
     if pcfg.tamper_check:
         visited = detections + (1 if accepted else 0)
-        d_o = int(x0.shape[0])
-        meter.validation_floats += visited * pcfg.R * d_o * d_c
-        meter.client_passes += visited * pcfg.R * d_o
+        account_handoff_recheck(meter, pcfg, int(x0.shape[0]), d_c, visited)
     record = dict(val_losses=[float(v) for v in vlosses],
                   train_losses=[float(v) for v in tlosses],
                   selected=selected, detections=detections, accepted=accepted)
@@ -247,7 +248,8 @@ def train_cluster_batched(module: SplitModule, theta, cluster, data: ClientData,
     no cluster axis to shard).  Key/RNG consumption matches the sequential
     ``split(key)`` + ``train_cluster`` pair exactly."""
     key, payload = assemble_round(rng, key, data, [cluster], pcfg, tm, t)
-    (gs, ps), losses, _, _ = protocol_runner(module, pcfg.lr, "vmap").candidates(
+    (gs, ps), losses, _, _ = protocol_runner(
+        module, pcfg.lr, "vmap", quant=pcfg.comm.quant).candidates(
         theta, payload,
         (jnp.asarray(data.x0[:1]), jnp.asarray(data.y0[:1])))
     d_cl = _count_params(theta[0])
@@ -264,7 +266,8 @@ def train_cluster_batched(module: SplitModule, theta, cluster, data: ClientData,
 
 @lru_cache(maxsize=None)
 def splitfed_round_spec(module: SplitModule, lr: float,
-                        with_stats: bool = False) -> "RoundSpec":
+                        with_stats: bool = False,
+                        quant: Optional[str] = None) -> "RoundSpec":
     """SplitFed's per-cluster programs as a RoundRunner binding: every client
     trains *in parallel* from the cluster's incoming theta (vmap over the
     client axis, vs the Pigeon chain's scan), the RoundSpec ``combine`` hook
@@ -283,10 +286,10 @@ def splitfed_round_spec(module: SplitModule, lr: float,
         def per_client(x, y, av, k):
             if with_stats:
                 g, p, loss, stats = client_update_vec_stats_impl(
-                    module, av, gamma, phi, (x, y), lr, k)
+                    module, av, gamma, phi, (x, y), lr, k, quant=quant)
                 return (g, p), (loss, stats)
             g, p, loss = client_update_vec_impl(module, av, gamma, phi,
-                                                (x, y), lr, k)
+                                                (x, y), lr, k, quant=quant)
             return (g, p), loss
 
         (gs, ps), aux = jax.vmap(per_client)(xs_c, ys_c, av_c, keys_c)
@@ -321,22 +324,23 @@ def splitfed_round_spec(module: SplitModule, lr: float,
 
 @lru_cache(maxsize=None)
 def splitfed_runner(module: SplitModule, lr: float, placement: str = "vmap",
-                    with_stats: bool = False):
-    """Cached per (module, lr, placement, stats), like
+                    with_stats: bool = False, quant: Optional[str] = None):
+    """Cached per (module, lr, placement, stats, quant), like
     :func:`protocol_runner`."""
     from .runner import RoundRunner
-    return RoundRunner(splitfed_round_spec(module, lr, with_stats),
+    return RoundRunner(splitfed_round_spec(module, lr, with_stats, quant),
                        placement=placement)
 
 
 @lru_cache(maxsize=None)
 def splitfed_accept_runner(module: SplitModule, lr: float, placement: str,
-                           select):
+                           select, quant: Optional[str] = None):
     """SplitFed's fused-selection runner: the policy cascade with the verify
     stage off (no chained handoff to tamper with)."""
     from .runner import RoundRunner, VerifyConfig
     spec = splitfed_round_spec(module, lr,
-                               with_stats=select.needs_message_stats)
+                               with_stats=select.needs_message_stats,
+                               quant=quant)
     return RoundRunner(spec, placement=placement, select=select,
                        verify=VerifyConfig(enabled=False))
 
@@ -393,7 +397,8 @@ def splitfed_round_batched(module: SplitModule, theta, clusters, data: ClientDat
                                                   pcfg, tm, t)
     xs, ys, avec, keys = prefetched
     (g_avg, p_avg), aux, vlosses, _ = splitfed_runner(
-        module, pcfg.lr, placement, with_stats).candidates(
+        module, pcfg.lr, placement, with_stats,
+        quant=pcfg.comm.quant).candidates(
         theta, (xs, ys, avec, keys), (x0, y0))
     stats = np.asarray(aux[1]) if with_stats else None
     vlosses = np.asarray(vlosses)
@@ -421,7 +426,8 @@ def splitfed_round_accept(module: SplitModule, theta, clusters,
     if prefetched is None:
         key, prefetched = assemble_splitfed_round(rng, key, data, clusters,
                                                   pcfg, tm, t)
-    runner = splitfed_accept_runner(module, pcfg.lr, placement, policy)
+    runner = splitfed_accept_runner(module, pcfg.lr, placement, policy,
+                                    quant=pcfg.comm.quant)
     theta_next, fetch = runner.accept(theta, prefetched, (x0, y0))
     vlosses, tlosses, selected, detections, accepted = unpack_fetch(
         np.asarray(fetch), len(clusters))
@@ -436,7 +442,8 @@ def splitfed_round_accept(module: SplitModule, theta, clusters,
 # ---------------------------------------------------------------------------
 
 def sweep_round(module: SplitModule, lr: float, theta_s, inputs, val,
-                placement: str = "vmap", policy=None):
+                placement: str = "vmap", policy=None,
+                quant: Optional[str] = None):
     """One global round for S independent protocol replicas through the
     RoundRunner's sweep entry: per seed, the cluster-parallel round + policy
     selection + winner carry, all inside one compiled program.  Under
@@ -447,7 +454,7 @@ def sweep_round(module: SplitModule, lr: float, theta_s, inputs, val,
     sels_S)``."""
     with_stats = policy is not None and policy.needs_message_stats
     return protocol_runner(module, lr, placement, with_stats,
-                           policy).sweep(theta_s, inputs, val)
+                           policy, quant).sweep(theta_s, inputs, val)
 
 
 @lru_cache(maxsize=None)
@@ -480,7 +487,8 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
                      seeds: Sequence[int] = (0, 1, 2),
                      verbose: bool = False, placement: str = "vmap",
                      threat_model: Optional[ThreatModel] = None,
-                     selection="argmin") -> List[History]:
+                     selection="argmin",
+                     quant: Optional[str] = None) -> List[History]:
     """S whole Pigeon-SL replicas (different seeds) advanced in lockstep: one
     compiled call per global round trains S x R clusters and performs the
     per-seed argmin selection on device.  ``placement="vmap"`` runs the
@@ -499,8 +507,11 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
     across seeds).
     """
     from ..selection import resolve_policy
+    from .comm import CommConfig
     from .runner import check_placement
     check_placement(placement)
+    if quant is not None:
+        pcfg = dataclasses.replace(pcfg, comm=CommConfig(quant=quant))
     policy = resolve_policy(selection)
     tm = resolve_threat_model(malicious, attack, threat_model)
     if tm.has_param_tamper:
@@ -535,7 +546,7 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
         thetas, aux, vlosses, sels = sweep_round(
             module, pcfg.lr, thetas,
             (jnp.stack(xs), jnp.stack(ys), avec, jnp.stack(key_rows)),
-            (x0, y0), placement, policy)
+            (x0, y0), placement, policy, pcfg.comm.quant)
         gammas, phis = thetas
         tloss_rm = aux[0] if isinstance(aux, tuple) else aux
         tlosses = jnp.mean(tloss_rm, axis=-1)       # (S, R): mean over clients
@@ -550,9 +561,8 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
             # run_pigeon inspects exactly one candidate per round in the
             # honest/message-attack cases the sweep supports: the next-round
             # first clients' re-transmission of its handoff activations.
-            meter.validation_floats += pcfg.R * d_o * d_c
-            meter.client_passes += pcfg.R * d_o
-        meter.param_floats += pcfg.R * d_cl
+            account_handoff_recheck(meter, pcfg, d_o, d_c, visited=1)
+        account_param_transfer(meter, pcfg.R * d_cl)
 
         vlosses = np.asarray(vlosses)
         sels = np.asarray(sels)

@@ -21,6 +21,7 @@ from ..adversary import ThreatModel, resolve_threat_model
 from ..selection import resolve_policy, select_host
 from .attacks import Attack, HONEST
 from .clustering import cluster_is_honest, make_clusters
+from .comm import CommConfig, FLOAT_BYTES, message_bytes
 from .split import SplitModule, client_update, client_update_stats
 from .validation import validation_loss
 
@@ -40,10 +41,16 @@ class ProtocolConfig:
     tamper_tol: float = 1e-4
     eval_every: int = 1
     eval_batch: int = 500
+    comm: CommConfig = CommConfig()
 
     @property
     def R(self) -> int:
         return self.N + 1
+
+    @property
+    def quant(self) -> Optional[str]:
+        """Cut-layer wire format (``None`` = f32) — see :mod:`core.comm`."""
+        return self.comm.quant
 
 
 @dataclasses.dataclass
@@ -59,16 +66,33 @@ class ClientData:
 
 @dataclasses.dataclass
 class CommMeter:
-    """Message accounting in float-counts (Table I units: d_c, d_CL)."""
+    """Message accounting in float-counts (Table I units: d_c, d_CL) and in
+    wire bytes.  Float counts are format-independent — they count message
+    *elements*, so Table I's formulas stay valid under any ``CommConfig``;
+    the ``*_bytes`` fields measure the actual wire (quantized cut-layer
+    exchanges charge ``itemsize*elements + 4 bytes/row``; defense-critical
+    validation pushes and parameter handoffs always travel f32)."""
     activation_floats: int = 0      # cut-layer activations, both directions
     gradient_floats: int = 0        # cut-layer gradients
     param_floats: int = 0           # client-side parameter handoffs (d_CL)
     validation_floats: int = 0      # shared-set activations for validation/check
     client_passes: int = 0          # forward(+backward) passes through gamma (F_CL)
+    activation_bytes: int = 0       # wire bytes of the uplink cut activations
+    gradient_bytes: int = 0         # wire bytes of the downlink cut gradients
+    param_bytes: int = 0            # wire bytes of parameter handoffs (f32)
+    validation_bytes: int = 0       # wire bytes of validation pushes (f32)
 
     def total_comm(self) -> int:
         return (self.activation_floats + self.gradient_floats
                 + self.param_floats + self.validation_floats)
+
+    def total_bytes(self) -> int:
+        return (self.activation_bytes + self.gradient_bytes
+                + self.param_bytes + self.validation_bytes)
+
+    def exchange_bytes(self) -> int:
+        """Wire bytes of the two quantizable cut-layer message streams."""
+        return self.activation_bytes + self.gradient_bytes
 
 
 @dataclasses.dataclass
@@ -123,19 +147,62 @@ def account_client_turn(meter: CommMeter, pcfg: ProtocolConfig, d_c: int,
     """Table I accounting for one client's turn (E batches of B samples:
     activations up, cut gradients down, plus the intra-cluster parameter
     handoff).  Shared by the sequential and batched engines so their
-    CommMeter counts are bit-identical by construction."""
+    CommMeter counts are bit-identical by construction.  Byte charges read
+    ``pcfg.comm.quant``: each of the E batches is one (B, d_c) quantized
+    message per direction (1 byte/element + one f32 scale per sample);
+    handoffs stay f32."""
+    quant = pcfg.comm.quant
     n_samples = pcfg.E * pcfg.B
     meter.client_passes += n_samples
     meter.activation_floats += n_samples * d_c
     meter.gradient_floats += n_samples * d_c
+    meter.activation_bytes += pcfg.E * message_bytes(quant, pcfg.B, d_c)
+    meter.gradient_bytes += pcfg.E * message_bytes(quant, pcfg.B, d_c)
     if handoff:
-        meter.param_floats += d_cl
+        account_param_transfer(meter, d_cl)
 
 
 def account_validation(meter: CommMeter, d_o: int, d_c: int) -> None:
-    """One cluster's shared-set validation push (Section III-C)."""
+    """One cluster's shared-set validation push (Section III-C) — always f32:
+    quantizing the message the tamper check and selection scores read would
+    let an attacker hide inside quantization noise."""
     meter.validation_floats += d_o * d_c
+    meter.validation_bytes += d_o * d_c * FLOAT_BYTES
     meter.client_passes += d_o
+
+
+def account_param_transfer(meter: CommMeter, n_floats: int) -> None:
+    """A parameter transfer of ``n_floats`` f32 values (handoffs, broadcasts,
+    FedAvg uploads) — the single site that keeps ``param_floats`` and
+    ``param_bytes`` consistent."""
+    meter.param_floats += n_floats
+    meter.param_bytes += n_floats * FLOAT_BYTES
+
+
+def account_handoff_recheck(meter: CommMeter, pcfg: ProtocolConfig, d_o: int,
+                            d_c: int, visited: int = 1) -> None:
+    """Tamper-check replay of the R-candidate handoff chain for ``visited``
+    inspected candidates (shared-set push per cluster, f32)."""
+    meter.validation_floats += visited * pcfg.R * d_o * d_c
+    meter.validation_bytes += visited * pcfg.R * d_o * d_c * FLOAT_BYTES
+    meter.client_passes += visited * pcfg.R * d_o
+
+
+def account_splitfed_round(meter: CommMeter, pcfg: ProtocolConfig, clusters,
+                           d_o: int, d_c: int, d_cl: int) -> None:
+    """One SplitFed round's message accounting — analytic, so it is
+    engine-independent (bit-identical across sequential/batched/fused by
+    construction): every client runs its E x B exchanges in parallel from the
+    same incoming params and uploads its client-side params for the FedAvg
+    combine (``handoff=True``); each cluster pushes one shared-set
+    validation; the selected cluster's client params broadcast to all M
+    clients for the next round."""
+    for cluster in clusters:
+        for _ in cluster:
+            account_client_turn(meter, pcfg, d_c, d_cl, handoff=True)
+        account_validation(meter, d_o, d_c)
+    n_clients = sum(len(c) for c in clusters)
+    account_param_transfer(meter, n_clients * d_cl)
 
 
 def res_params(res: Dict[str, Any]) -> Tuple[Pytree, Pytree]:
@@ -177,6 +244,8 @@ def _eval_count_fn(module: SplitModule):
 
 def evaluate(module: SplitModule, gamma, phi, x_test: np.ndarray, y_test: np.ndarray,
              batch: int = 500) -> float:
+    if x_test.shape[0] == 0:
+        return 0.0      # empty test set: zero correct out of zero, not a crash
     count = _eval_count_fn(module)
     correct = None
     total = 0
@@ -210,11 +279,13 @@ def train_cluster(module: SplitModule, gamma, phi, cluster: Sequence[int],
         a = tm.attack_for(client, t)
         if collect_stats:
             gamma, phi, loss, st = client_update_stats(module, a, gamma, phi,
-                                                       (xs, ys), pcfg.lr, sub)
+                                                       (xs, ys), pcfg.lr, sub,
+                                                       quant=pcfg.comm.quant)
             stats.append(np.asarray(st))
         else:
             gamma, phi, loss = client_update(module, a, gamma, phi, (xs, ys),
-                                             pcfg.lr, sub)
+                                             pcfg.lr, sub,
+                                             quant=pcfg.comm.quant)
         losses.append(float(loss))
         account_client_turn(meter, pcfg, d_c, d_cl, handoff=j < len(cluster) - 1)
     if collect_stats:
@@ -271,9 +342,14 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                engine: str = "sequential", placement: str = "vmap",
                prefetch: int = 0,
                threat_model: Optional[ThreatModel] = None,
-               selection="argmin",
+               selection="argmin", quant: Optional[str] = None,
                _force_host_selection: bool = False) -> History:
     """Pigeon-SL (Algorithm 1).  Execution knobs beyond the paper:
+
+    * ``quant`` — cut-layer wire format shorthand (``"int8"`` /
+      ``"fp8_e4m3"``; ``None`` keeps ``pcfg.comm``): overrides the
+      ``ProtocolConfig.comm`` transport config for this run.  See
+      :mod:`repro.core.comm` for what is (and is not) quantized.
 
     * ``engine`` — ``"sequential"`` (reference oracle) or ``"batched"`` (one
       compiled program per round via the RoundRunner).
@@ -310,6 +386,8 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
       half-loaded.
     """
     _check_engine(engine, placement, prefetch)
+    if quant is not None:
+        pcfg = dataclasses.replace(pcfg, comm=CommConfig(quant=quant))
     policy = resolve_policy(selection)
     tm = resolve_threat_model(malicious, attack, threat_model)
     # The fused on-device cascade covers every message-level threat model;
@@ -351,6 +429,21 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
             warnings.warn(f"ignoring corrupt checkpoint {checkpoint_path!r} "
                           f"({e}); starting from round 0", stacklevel=2)
             start_round = 0
+    if start_round >= pcfg.T:
+        # The checkpoint already covers the final round: training would be a
+        # zero-iteration loop returning an empty History.  Surface the
+        # restored state instead of silently discarding it.
+        import warnings
+        warnings.warn(
+            f"resume: checkpoint {checkpoint_path!r} is at round "
+            f"{start_round - 1} >= T-1 = {pcfg.T - 1}; nothing left to train "
+            f"— returning the restored final state", stacklevel=2)
+        hist = History()
+        hist.rounds.append(dict(
+            round=start_round - 1, resumed_terminal=True,
+            test_acc=evaluate(module, theta[0], theta[1], data.x_test,
+                              data.y_test, pcfg.eval_batch)))
+        return hist
     x0, y0 = jnp.asarray(data.x0), jnp.asarray(data.y0)
     d_o = data.x0.shape[0]
     hist = History()
@@ -431,10 +524,13 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
             if accepted:
                 # broadcast to next first clients (no broadcast happens when
                 # every cluster failed the tamper check and theta^t is kept)
-                meter.param_floats += pcfg.R * d_cl
+                account_param_transfer(meter, pcfg.R * d_cl)
 
-            # Pigeon-SL+: R-1 extra sub-rounds on the selected cluster
-            if plus:
+            # Pigeon-SL+: R-1 extra sub-rounds on the selected cluster —
+            # only when the round was accepted: a rejected round keeps
+            # theta^t, and re-training the (tamper-flagged) selected cluster
+            # from it would hand a detected attacker R-1 free extra turns.
+            if plus and accepted:
                 for _ in range(pcfg.R - 1):
                     if engine == "batched":
                         from .engine import train_cluster_batched
@@ -447,7 +543,8 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                                                 sel_cluster, data, pcfg,
                                                 tm, t, rng, sub, meter, d_c)
                     theta = (g, p)
-                    meter.param_floats += _count_params(g)   # subround handoff to 1st client
+                    # subround handoff to the 1st client
+                    account_param_transfer(meter, _count_params(g))
 
             rec = dict(
                 round=t,
@@ -489,7 +586,7 @@ def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                     resume: bool = False, engine: str = "sequential",
                     placement: str = "vmap", prefetch: int = 0,
                     threat_model: Optional[ThreatModel] = None,
-                    selection="argmin") -> History:
+                    selection="argmin", quant: Optional[str] = None) -> History:
     """Pigeon-SL+ (throughput-matched variant): ``run_pigeon`` with the R-1
     extra selected-cluster sub-rounds enabled.  ``prefetch`` is accepted for
     API symmetry but bounded to synchronous assembly — the sub-rounds sample
@@ -499,7 +596,7 @@ def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                       verbose=verbose, checkpoint_path=checkpoint_path,
                       resume=resume, engine=engine, placement=placement,
                       prefetch=prefetch, threat_model=threat_model,
-                      selection=selection)
+                      selection=selection, quant=quant)
 
 
 # ---------------------------------------------------------------------------
@@ -509,7 +606,10 @@ def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
 def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                    malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                    verbose: bool = False,
-                   threat_model: Optional[ThreatModel] = None) -> History:
+                   threat_model: Optional[ThreatModel] = None,
+                   quant: Optional[str] = None) -> History:
+    if quant is not None:
+        pcfg = dataclasses.replace(pcfg, comm=CommConfig(quant=quant))
     tm = resolve_threat_model(malicious, attack, threat_model)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
@@ -523,7 +623,8 @@ def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
         key, sub = jax.random.split(key)
         gamma, phi, train_loss = train_cluster(module, gamma, phi, order, data, pcfg,
                                                tm, t, rng, sub, meter, d_c)
-        meter.param_floats += _count_params(gamma)   # hand-off into the next round
+        # hand-off into the next round
+        account_param_transfer(meter, _count_params(gamma))
         rec = dict(round=t, train_loss=train_loss, comm=dataclasses.asdict(meter))
         if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
             rec["test_acc"] = evaluate(module, gamma, phi, data.x_test, data.y_test,
@@ -543,7 +644,7 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                  verbose: bool = False, engine: str = "sequential",
                  placement: str = "vmap", prefetch: int = 0,
                  threat_model: Optional[ThreatModel] = None,
-                 selection="argmin",
+                 selection="argmin", quant: Optional[str] = None,
                  _force_host_selection: bool = False) -> History:
     """Clients inside a cluster train *in parallel* from the same incoming
     params; the cluster model is the FedAvg of its clients.  Cluster
@@ -560,6 +661,8 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     round's selection — there is no tamper-check key split and no sub-round
     — so the feeder runs at full depth under every threat model."""
     _check_engine(engine, placement, prefetch)
+    if quant is not None:
+        pcfg = dataclasses.replace(pcfg, comm=CommConfig(quant=quant))
     policy = resolve_policy(selection)
     fused_selection = engine == "batched" and not _force_host_selection
     tm = resolve_threat_model(malicious, attack, threat_model)
@@ -569,6 +672,9 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     theta = module.init(k0)
     x0, y0 = jnp.asarray(data.x0), jnp.asarray(data.y0)
     hist = History()
+    d_o = data.x0.shape[0]
+    d_cl = _count_params(theta[0])
+    d_c = cut_width(module, theta[0], data.x0)
 
     feeder = None
     if engine == "batched" and prefetch > 0:
@@ -585,6 +691,7 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
 
     try:
         for t in range(pcfg.T):
+            meter = CommMeter()
             if feeder is not None:
                 clusters, prefetched = feeder.get(t)
             else:
@@ -621,12 +728,13 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                             if policy.needs_message_stats:
                                 g, p, _, st = client_update_stats(
                                     module, a, theta[0], theta[1], (xs, ys),
-                                    pcfg.lr, sub)
+                                    pcfg.lr, sub, quant=pcfg.comm.quant)
                                 sts.append(np.asarray(st))
                             else:
                                 g, p, _ = client_update(module, a, theta[0],
                                                         theta[1], (xs, ys),
-                                                        pcfg.lr, sub)
+                                                        pcfg.lr, sub,
+                                                        quant=pcfg.comm.quant)
                             gs.append(g)
                             ps.append(p)
                         g_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *gs)
@@ -645,10 +753,12 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                 theta = res_params(results[selected])
                 val_losses = [res["vloss"] for res in results]
                 sel_cluster = results[selected]["cluster"]
+            account_splitfed_round(meter, pcfg, clusters, d_o, d_c, d_cl)
             rec = dict(round=t, selected=selected,
                        val_losses=val_losses,
                        selected_honest=cluster_is_honest(sel_cluster,
-                                                         tm.malicious))
+                                                         tm.malicious),
+                       comm=dataclasses.asdict(meter))
             if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
                 rec["test_acc"] = evaluate(module, theta[0], theta[1],
                                            data.x_test, data.y_test,

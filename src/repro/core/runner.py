@@ -758,7 +758,8 @@ def make_train_summary(with_stats: bool):
     return train_summary
 
 @lru_cache(maxsize=None)
-def protocol_round_spec(module, lr: float, with_stats: bool = False) -> RoundSpec:
+def protocol_round_spec(module, lr: float, with_stats: bool = False,
+                        quant: Optional[str] = None) -> RoundSpec:
     """Pigeon per-cluster programs over a ``SplitModule``: the within-cluster
     client-chain scan with the AttackVec threat-model lanes from the
     adversary subsystem (``inputs = (xs, ys, avec, keys)``, every leaf with
@@ -782,9 +783,10 @@ def protocol_round_spec(module, lr: float, with_stats: bool = False) -> RoundSpe
             x, y, av, k = inp
             if with_stats:
                 g, p, loss, stats = client_update_vec_stats_impl(
-                    module, av, g, p, (x, y), lr, k)
+                    module, av, g, p, (x, y), lr, k, quant=quant)
                 return (g, p), (loss, stats)
-            g, p, loss = client_update_vec_impl(module, av, g, p, (x, y), lr, k)
+            g, p, loss = client_update_vec_impl(module, av, g, p, (x, y), lr,
+                                                k, quant=quant)
             return (g, p), loss
 
         (g, p), aux = jax.lax.scan(per_client, (gamma, phi),
@@ -819,23 +821,25 @@ def protocol_round_spec(module, lr: float, with_stats: bool = False) -> RoundSpe
 
 @lru_cache(maxsize=None)
 def protocol_runner(module, lr: float, placement: str = "vmap",
-                    with_stats: bool = False, select=None) -> RoundRunner:
-    """Cached per (module, lr, placement, stats, policy) so every round
-    reuses one compiled program — the protocol layout (theta broadcast into
-    all clusters)."""
-    return RoundRunner(protocol_round_spec(module, lr, with_stats),
+                    with_stats: bool = False, select=None,
+                    quant: Optional[str] = None) -> RoundRunner:
+    """Cached per (module, lr, placement, stats, policy, quant) so every
+    round reuses one compiled program — the protocol layout (theta broadcast
+    into all clusters)."""
+    return RoundRunner(protocol_round_spec(module, lr, with_stats, quant),
                        placement=placement, select=select)
 
 
 @lru_cache(maxsize=None)
 def protocol_accept_runner(module, lr: float, placement: str, select,
-                           tamper_check: bool, tamper_tol: float
-                           ) -> RoundRunner:
+                           tamper_check: bool, tamper_tol: float,
+                           quant: Optional[str] = None) -> RoundRunner:
     """The fused-acceptance runner the protocol drivers use on the default
     batched path: the policy's score/eligibility stages + the masked
     rank/verify/commit cascade compiled into one round program."""
     spec = protocol_round_spec(module, lr,
-                               with_stats=select.needs_message_stats)
+                               with_stats=select.needs_message_stats,
+                               quant=quant)
     # recompute=False: this runner only ever runs under the no-param-tamper
     # precondition (engine.pigeon_round_accept asserts it), where the
     # re-transmission equals the validation activations by construction.

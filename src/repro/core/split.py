@@ -127,7 +127,7 @@ def message_stats(acts_sent: jnp.ndarray) -> jnp.ndarray:
 def _sl_exchange(module: SplitModule, gamma: Pytree, phi: Pytree,
                  x: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
                  poison, send_labels, send_acts, recv_grad,
-                 with_stats: bool = False):
+                 with_stats: bool = False, quant: Optional[str] = None):
     """One FwdProp/BackProp exchange.  Returns (g_gamma, g_phi, loss), plus
     the transmitted message's :func:`message_stats` when ``with_stats``.
 
@@ -144,17 +144,37 @@ def _sl_exchange(module: SplitModule, gamma: Pytree, phi: Pytree,
     The per-exchange key splits into an activation-side and a gradient-side
     stream so stochastic attacks on either leg draw independent noise.
 
+    ``quant`` compresses the two cut-layer wire messages through the
+    ``kernels/quant_exchange`` round trip (per-sample symmetric int8 /
+    fp8-e4m3, one f32 scale per row).  The transform models the physical
+    wire: sender-side attacks (``send_acts``) apply *before* transmission and
+    then quantize with the message — so the AP observes, scores and
+    backpropagates through exactly the dequantized message a real receiver
+    would reconstruct — while the client-side ``recv_grad`` hook applies
+    *after* the cut gradient is dequantized.  Under ``with_stats`` the fused
+    kernel emits :func:`message_stats` of that dequantized uplink message in
+    the same pass, so anomaly scores stay free.
+
     Single source of truth for the four-message exchange: the static
     (per-``Attack``) and vectorised (per-``AttackVec``) entry points below
     differ only in which hook implementations they bind, so the engines'
     bit-for-bit equivalence contract cannot drift between two copies.
     """
+    from ..kernels import ops as kops
     k_act, k_grad = jax.random.split(key)
     x_used = poison(x)
     y_sent = send_labels(y)
 
     acts, client_vjp = jax.vjp(lambda g: module.client_forward(g, x_used), gamma)
     acts_sent = send_acts(acts, k_act)
+    stats = None
+    if quant is not None:
+        flat = acts_sent.reshape(acts_sent.shape[0], -1).astype(jnp.float32)
+        if with_stats:
+            deq, _, stats = kops.quant_roundtrip_stats(flat, quant)
+        else:
+            deq, _ = kops.quant_roundtrip(flat, quant)
+        acts_sent = deq.reshape(acts_sent.shape).astype(acts_sent.dtype)
 
     def ap_fn(phi_, acts_):
         return module.ap_loss(phi_, acts_, y_sent)
@@ -162,16 +182,22 @@ def _sl_exchange(module: SplitModule, gamma: Pytree, phi: Pytree,
     loss, ap_grads = jax.value_and_grad(ap_fn, argnums=(0, 1))(phi, acts_sent)
     g_phi, g_acts = ap_grads
 
+    if quant is not None:
+        gflat = g_acts.reshape(g_acts.shape[0], -1).astype(jnp.float32)
+        gdeq, _ = kops.quant_roundtrip(gflat, quant)
+        g_acts = gdeq.reshape(g_acts.shape).astype(g_acts.dtype)
     g_acts_recv = recv_grad(g_acts, k_grad)
     (g_gamma,) = client_vjp(g_acts_recv.astype(acts.dtype))
     if with_stats:
-        return g_gamma, g_phi, loss, message_stats(acts_sent)
+        if stats is None:
+            stats = message_stats(acts_sent)
+        return g_gamma, g_phi, loss, stats
     return g_gamma, g_phi, loss
 
 
 def sl_minibatch_grads(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytree,
                        x: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
-                       with_stats: bool = False):
+                       with_stats: bool = False, quant: Optional[str] = None):
     """The exchange with a static ``Attack`` (one compiled program per spec)."""
     return _sl_exchange(
         module, gamma, phi, x, y, key,
@@ -179,7 +205,7 @@ def sl_minibatch_grads(module: SplitModule, attack: Attack, gamma: Pytree, phi: 
         lambda y_: flip_labels(attack, y_, module.n_classes),
         lambda a, k: tamper_activation(attack, a, k),
         lambda g, k: tamper_gradient(attack, g, k),
-        with_stats=with_stats)
+        with_stats=with_stats, quant=quant)
 
 
 def sgd_update(params: Pytree, grads: Pytree, lr: float) -> Pytree:
@@ -214,25 +240,27 @@ def _client_update(grads_fn, gamma: Pytree, phi: Pytree,
     return gamma, phi, jnp.mean(aux)
 
 
-@partial(jax.jit, static_argnums=(0, 1, 5))
+@partial(jax.jit, static_argnums=(0, 1, 5), static_argnames=("quant",))
 def client_update(module: SplitModule, attack: Attack, gamma: Pytree, phi: Pytree,
-                  data: Tuple[jnp.ndarray, jnp.ndarray], lr: float, key: jax.Array
+                  data: Tuple[jnp.ndarray, jnp.ndarray], lr: float, key: jax.Array,
+                  *, quant: Optional[str] = None
                   ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
-    return _client_update(partial(sl_minibatch_grads, module, attack),
+    return _client_update(partial(sl_minibatch_grads, module, attack, quant=quant),
                           gamma, phi, data, lr, key)
 
 
-@partial(jax.jit, static_argnums=(0, 1, 5))
+@partial(jax.jit, static_argnums=(0, 1, 5), static_argnames=("quant",))
 def client_update_stats(module: SplitModule, attack: Attack, gamma: Pytree,
                         phi: Pytree, data: Tuple[jnp.ndarray, jnp.ndarray],
-                        lr: float, key: jax.Array):
+                        lr: float, key: jax.Array, *,
+                        quant: Optional[str] = None):
     """:func:`client_update` + the client's mean transmitted-message
     statistics — the sequential oracle's path for selection policies that
     score activation-message anomalies.  The parameter/loss arithmetic is
     bit-identical to :func:`client_update` (the stats ride alongside the
     same scan)."""
     return _client_update(
-        partial(sl_minibatch_grads, module, attack, with_stats=True),
+        partial(sl_minibatch_grads, module, attack, with_stats=True, quant=quant),
         gamma, phi, data, lr, key, with_stats=True)
 
 
@@ -246,36 +274,40 @@ def client_update_stats(module: SplitModule, attack: Attack, gamma: Pytree,
 
 def sl_minibatch_grads_vec(module: SplitModule, av: AttackVec, gamma: Pytree,
                            phi: Pytree, x: jnp.ndarray, y: jnp.ndarray,
-                           key: jax.Array, with_stats: bool = False):
+                           key: jax.Array, with_stats: bool = False,
+                           quant: Optional[str] = None):
     return _sl_exchange(
         module, gamma, phi, x, y, key,
         lambda x_: poison_inputs_vec(av, x_),
         lambda y_: flip_labels_vec(av, y_, module.n_classes),
         lambda a, k: tamper_activation_vec(av, a, k),
         lambda g, k: tamper_gradient_vec(av, g, k),
-        with_stats=with_stats)
+        with_stats=with_stats, quant=quant)
 
 
 def client_update_vec_impl(module: SplitModule, av: AttackVec, gamma: Pytree,
                            phi: Pytree, data: Tuple[jnp.ndarray, jnp.ndarray],
-                           lr: float, key: jax.Array
+                           lr: float, key: jax.Array, *,
+                           quant: Optional[str] = None
                            ) -> Tuple[Pytree, Pytree, jnp.ndarray]:
     """Un-jitted body of :func:`client_update_vec` — the batched engine embeds
     it inside its own jitted round program (vmap over clusters, scan over the
     within-cluster client chain)."""
-    return _client_update(partial(sl_minibatch_grads_vec, module, av),
+    return _client_update(partial(sl_minibatch_grads_vec, module, av, quant=quant),
                           gamma, phi, data, lr, key)
 
 
 def client_update_vec_stats_impl(module: SplitModule, av: AttackVec,
                                  gamma: Pytree, phi: Pytree,
                                  data: Tuple[jnp.ndarray, jnp.ndarray],
-                                 lr: float, key: jax.Array):
+                                 lr: float, key: jax.Array, *,
+                                 quant: Optional[str] = None):
     """:func:`client_update_vec_impl` + mean message statistics (the batched
     engines' path for message-anomaly selection policies)."""
     return _client_update(
-        partial(sl_minibatch_grads_vec, module, av, with_stats=True),
+        partial(sl_minibatch_grads_vec, module, av, with_stats=True, quant=quant),
         gamma, phi, data, lr, key, with_stats=True)
 
 
-client_update_vec = partial(jax.jit, static_argnums=(0, 5))(client_update_vec_impl)
+client_update_vec = partial(jax.jit, static_argnums=(0, 5),
+                            static_argnames=("quant",))(client_update_vec_impl)

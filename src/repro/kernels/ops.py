@@ -7,7 +7,7 @@ tiling) and validated here in interpret mode against the ref.py oracles.
 from __future__ import annotations
 
 import math
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional
 
 import jax
@@ -88,6 +88,71 @@ def largest_divisor(n: int, cap: int) -> int:
     while n % cap:
         cap -= 1
     return cap
+
+
+@partial(jax.jit, static_argnames=("fmt", "block_n", "interpret"))
+def quant_roundtrip(x, fmt: str, *, block_n: int = 256,
+                    interpret: Optional[bool] = None):
+    """Per-row symmetric quantize->dequantize of a (N, D) message through
+    the ``quant_exchange`` kernel.  Returns (dequantized (N, D) f32,
+    per-row scales (N,) f32) — the message a receiver reconstructs from
+    ``1 byte/element + 4 bytes/row`` on the wire."""
+    from . import quant_exchange as _qx
+    interpret = _default_interpret() if interpret is None else interpret
+    return _qx.quant_dequant(x, fmt,
+                             block_n=largest_divisor(x.shape[0], block_n),
+                             interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("fmt", "block_n", "interpret"))
+def quant_roundtrip_stats(x, fmt: str, *, block_n: int = 256,
+                          interpret: Optional[bool] = None):
+    """:func:`quant_roundtrip` fused with the AP-observable message
+    statistics of the *dequantized* message (``core.split.message_stats``:
+    dispersion + support residual) — anomaly-scoring selection policies pay
+    nothing extra under quantization.  Returns (deq, scales, stats (2,))."""
+    from . import quant_exchange as _qx
+    interpret = _default_interpret() if interpret is None else interpret
+    return _qx.quant_dequant_stats(x, fmt,
+                                   block_n=largest_divisor(x.shape[0], block_n),
+                                   interpret=interpret)
+
+
+@lru_cache(maxsize=None)
+def _quant_exchange_fn(fmt: str):
+    """Straight-through both-direction wire model for fused SPMD train steps
+    (the launch layer): the forward quantizes the uplink activation message,
+    the backward quantizes the downlink cut-gradient cotangent — one
+    ``value_and_grad`` over the composed split model then sees exactly the
+    two messages a real AP/client pair would exchange."""
+
+    def _qdq(x):
+        flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        deq, _ = quant_roundtrip(flat, fmt)
+        return deq.reshape(x.shape).astype(x.dtype)
+
+    @jax.custom_vjp
+    def exchange(x):
+        return _qdq(x)
+
+    def fwd(x):
+        return _qdq(x), None
+
+    def bwd(_, g):
+        return (_qdq(g),)
+
+    exchange.defvjp(fwd, bwd)
+    return exchange
+
+
+def quant_cut_exchange(x, fmt: Optional[str]):
+    """Apply the quantized cut-layer wire to an activation tensor (leading
+    batch axis, any trailing shape).  ``fmt=None`` is the f32 identity."""
+    if fmt is None:
+        return x
+    from . import quant_exchange as _qx
+    _qx.check_format(fmt)
+    return _quant_exchange_fn(fmt)(x)
 
 
 @partial(jax.jit, static_argnames=("block_n", "interpret"))

@@ -1,0 +1,163 @@
+"""Fused quantize->dequantize Pallas TPU kernel for the cut-layer exchange.
+
+The SL wire cost is dominated by the two per-batch cut-layer messages
+(activations up, cut gradients down — Table I's 2*E*B*d_c floats per client
+turn).  This kernel models the compressed wire: per-row (per-sample)
+symmetric quantization to int8 or fp8-e4m3 with one f32 scale per row,
+immediately dequantized — the AP-side program consumes exactly the message a
+real receiver would reconstruct, and the byte accounting charges
+``1 byte/element + 4 bytes/row`` instead of 4 bytes/element.
+
+Two variants share the row-block arithmetic:
+
+  * :func:`quant_dequant` — one pass, grid over row blocks, emits the
+    dequantized message (N, D) and the per-row scales (N,).
+  * :func:`quant_dequant_stats` — a two-phase grid ``(2, nb)`` that
+    additionally fuses the AP-observable anomaly statistics of the
+    *dequantized* message (``core.split.message_stats``: dispersion +
+    support residual), so anomaly-scoring selection policies pay nothing
+    extra for them under quantization.  Phase 0 quantizes and accumulates
+    the column sums (the batch mean); phase 1 re-reads the dequantized
+    blocks and accumulates the mean-relative distances and support norms,
+    finalising the (2,) stats vector at the last grid step — the
+    ``tamper_check`` scratch-accumulator pattern, one level up.
+
+Layout: x (N, D) f32; TPU note: int8/fp8 tiles want (32, 128) minimum —
+``block_n`` below is the row-block size, the feature dim stays whole.
+Validated in interpret mode on CPU against the ``ref.py`` oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INT8 = "int8"
+FP8_E4M3 = "fp8_e4m3"
+QUANT_FORMATS = (INT8, FP8_E4M3)
+
+#: symmetric clip range per format (int8: +-127; fp8-e4m3: +-448)
+QMAX = {INT8: 127.0, FP8_E4M3: 448.0}
+
+_EPS = 1e-12
+
+
+def fp8_supported() -> bool:
+    """fp8-e4m3 needs a jax/ml_dtypes build exposing ``float8_e4m3fn``."""
+    return hasattr(jnp, "float8_e4m3fn")
+
+
+def check_format(fmt: str) -> None:
+    if fmt not in QUANT_FORMATS:
+        raise ValueError(f"quant format {fmt!r} must be one of {QUANT_FORMATS}")
+    if fmt == FP8_E4M3 and not fp8_supported():
+        raise NotImplementedError(
+            "fp8_e4m3 quantization needs a jax build with jnp.float8_e4m3fn; "
+            "use quant='int8' on this backend")
+
+
+def _qdq_block(a: jnp.ndarray, fmt: str):
+    """Per-row symmetric quantize->dequantize of one (rows, D) f32 block.
+    Returns (dequantized block, per-row scales).  The round trip through the
+    narrow dtype is explicit, so the dequantized values are exactly what a
+    receiver reconstructs from the wire bytes."""
+    qmax = QMAX[fmt]
+    amax = jnp.max(jnp.abs(a), axis=1)
+    scale = jnp.maximum(amax, _EPS) / qmax
+    s = scale[:, None]
+    if fmt == INT8:
+        q = jnp.clip(jnp.round(a / s), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = jnp.clip(a / s, -qmax, qmax).astype(jnp.float8_e4m3fn)
+    return q.astype(jnp.float32) * s, scale
+
+
+def _quant_kernel(x_ref, deq_ref, scale_ref, *, fmt):
+    a = x_ref[...].astype(jnp.float32)
+    deq, scale = _qdq_block(a, fmt)
+    deq_ref[...] = deq
+    scale_ref[...] = scale
+
+
+def quant_dequant(x: jnp.ndarray, fmt: str, *, block_n: int = 256,
+                  interpret: bool = False):
+    """x: (N, D) -> (dequantized (N, D) f32, scales (N,) f32)."""
+    check_format(fmt)
+    n, d = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, fmt=fmt),
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+                   pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.float32),
+                   jax.ShapeDtypeStruct((n,), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def _quant_stats_kernel(x_ref, deq_ref, scale_ref, stats_ref, colsum_scr,
+                        acc_scr, *, fmt, n_total):
+    p = pl.program_id(0)          # phase: 0 quantize+mean, 1 stats
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when((p == 0) & (i == 0))
+    def _init():
+        colsum_scr[...] = jnp.zeros_like(colsum_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    a = x_ref[...].astype(jnp.float32)
+    deq, scale = _qdq_block(a, fmt)
+    deq_ref[...] = deq
+    scale_ref[...] = scale
+
+    @pl.when(p == 0)
+    def _accumulate_mean():
+        colsum_scr[...] = colsum_scr[...] + jnp.sum(deq, axis=0, keepdims=True)
+
+    @pl.when(p == 1)
+    def _accumulate_stats():
+        mu = colsum_scr[...] / n_total
+        dev = deq - mu
+        acc_scr[0] = acc_scr[0] + jnp.sum(jnp.sqrt(jnp.sum(dev * dev, axis=1)))
+        acc_scr[1] = acc_scr[1] + jnp.sum(jnp.minimum(deq, 0.0) ** 2)
+        acc_scr[2] = acc_scr[2] + jnp.sum(deq * deq)
+
+    @pl.when((p == 1) & (i == nb - 1))
+    def _finish():
+        mu = colsum_scr[...] / n_total
+        mu_norm = jnp.maximum(jnp.sqrt(jnp.sum(mu * mu)), _EPS)
+        dispersion = (acc_scr[0] / n_total) / mu_norm
+        total = jnp.maximum(jnp.sqrt(acc_scr[2]), _EPS)
+        support = jnp.sqrt(acc_scr[1]) / total
+        stats_ref[...] = jnp.stack([dispersion, support])
+
+
+def quant_dequant_stats(x: jnp.ndarray, fmt: str, *, block_n: int = 256,
+                        interpret: bool = False):
+    """x: (N, D) -> (dequantized (N, D) f32, scales (N,) f32, stats (2,) f32)
+    where stats == ``core.split.message_stats`` of the dequantized message."""
+    check_format(fmt)
+    n, d = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0
+    return pl.pallas_call(
+        functools.partial(_quant_stats_kernel, fmt=fmt, n_total=float(n)),
+        grid=(2, n // block_n),
+        in_specs=[pl.BlockSpec((block_n, d), lambda p, i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_n, d), lambda p, i: (i, 0)),
+                   pl.BlockSpec((block_n,), lambda p, i: (i,)),
+                   pl.BlockSpec((2,), lambda p, i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.float32),
+                   jax.ShapeDtypeStruct((n,), jnp.float32),
+                   jax.ShapeDtypeStruct((2,), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32),
+                        pltpu.VMEM((3,), jnp.float32)],
+        interpret=interpret,
+    )(x)

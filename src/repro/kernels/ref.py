@@ -68,6 +68,35 @@ def decode_attention_reference(q, k, v, index, window: int = 0,
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def quant_roundtrip_reference(x: jnp.ndarray, fmt: str):
+    """Per-row symmetric quantize->dequantize oracle.  x: (N, D) ->
+    (dequantized (N, D) f32, per-row scales (N,) f32).  int8 rounds to the
+    nearest code in [-127, 127]; fp8_e4m3 routes through the narrow dtype
+    itself so its rounding is the hardware's."""
+    a = x.astype(jnp.float32)
+    qmax = {"int8": 127.0, "fp8_e4m3": 448.0}[fmt]
+    scale = jnp.maximum(jnp.max(jnp.abs(a), axis=1), 1e-12) / qmax
+    s = scale[:, None]
+    if fmt == "int8":
+        q = jnp.clip(jnp.round(a / s), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = jnp.clip(a / s, -qmax, qmax).astype(jnp.float8_e4m3fn)
+    return q.astype(jnp.float32) * s, scale
+
+
+def message_stats_reference(flat: jnp.ndarray) -> jnp.ndarray:
+    """(dispersion, support_residual) of a (N, D) message — the pure-jnp
+    mirror of ``core.split.message_stats`` the fused quant+stats kernel is
+    checked against."""
+    a = flat.astype(jnp.float32)
+    mu = jnp.mean(a, axis=0, keepdims=True)
+    mu_norm = jnp.maximum(jnp.linalg.norm(mu), 1e-12)
+    disp = jnp.mean(jnp.linalg.norm(a - mu, axis=1)) / mu_norm
+    total = jnp.maximum(jnp.linalg.norm(a), 1e-12)
+    support = jnp.linalg.norm(jnp.minimum(a, 0.0)) / total
+    return jnp.stack([disp, support])
+
+
 def slstm_scan_reference(pre, r, n_heads: int):
     """pre: (T, B, 4d); r: (H, dh, 4dh) — mirrors models.xlstm._slstm_step."""
     t, b, d4 = pre.shape

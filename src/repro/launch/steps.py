@@ -90,12 +90,32 @@ def decode_structs(cfg: ModelConfig, model: Model, shape: InputShape):
 # step functions
 # ---------------------------------------------------------------------------
 
-def make_train_step(model: Model, lr: float = 1e-3) -> Callable:
-    def train_step(params, batch):
+def make_train_step(model: Model, lr: float = 1e-3,
+                    quant: Optional[str] = None) -> Callable:
+    """One fused SPMD train step.  With ``quant`` the loss routes through the
+    model's gamma/phi cut and ``kernels.ops.quant_cut_exchange`` — a
+    straight-through wire model whose forward quantizes the uplink activation
+    message and whose backward quantizes the downlink cut-gradient cotangent,
+    so this single ``value_and_grad`` sees exactly the two messages a real
+    AP/client pair would exchange.  ``quant=None`` keeps the plain
+    ``model.loss`` path bit-for-bit."""
+
+    def loss_fn_of(batch):
+        if quant is None:
+            return lambda p: model.loss(p, batch)
+        from ..kernels import ops as kops
+
         def loss_fn(p):
-            loss, metrics = model.loss(p, batch)
-            return loss, metrics
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            gamma, phi = model.split_params(p)
+            acts = model.client_forward(gamma, batch)
+            acts = kops.quant_cut_exchange(acts, quant)
+            return model.ap_forward(phi, acts, batch)
+
+        return loss_fn
+
+    def train_step(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn_of(batch), has_aux=True)(params)
         new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
         return new_params, loss
     return train_step
@@ -117,7 +137,8 @@ def make_serve_step(model: Model) -> Callable:
 
 
 def launch_round_spec(model: Model, lr: float = 1e-3,
-                      constrain_val: bool = False) -> "RoundSpec":
+                      constrain_val: bool = False,
+                      quant: Optional[str] = None) -> "RoundSpec":
     """The launch-layer binding of the RoundRunner's RoundSpec: one SPMD
     train step per cluster and the shared-set validation loss.  With
     ``constrain_val`` the validation forward is pinned to the (auto) "data"
@@ -128,8 +149,12 @@ def launch_round_spec(model: Model, lr: float = 1e-3,
     shards for the median-of-means selection family; there is no
     ``message_stats`` hook — the launch layer runs plain SPMD train steps,
     not the SL message exchange — so anomaly-scoring policies
-    (loss_plus_distance) are rejected at build time with a clear error."""
-    train = make_train_step(model, lr)
+    (loss_plus_distance) are rejected at build time with a clear error.
+
+    ``quant`` applies the straight-through quantized cut-layer wire to the
+    per-cluster train steps only — the shared-set validation forward stays
+    exact (it is the defense-critical message; see :mod:`repro.core.comm`)."""
+    train = make_train_step(model, lr, quant=quant)
 
     def _constrain(val_batch):
         if constrain_val:
@@ -166,7 +191,8 @@ def launch_round_spec(model: Model, lr: float = 1e-3,
 
 def make_pigeon_round_step_shardmap(model: Model, mesh, lr: float = 1e-3,
                                     for_execution: bool = False,
-                                    selection: str = "argmin") -> Callable:
+                                    selection: str = "argmin",
+                                    quant: Optional[str] = None) -> Callable:
     """Cluster parallelism as a *manual* pod-axis shard_map (§Perf hillclimb
     C iteration 3): each pod runs its cluster slice's train+validate program
     (data/model axes stay GSPMD-auto), and the only cross-pod collectives
@@ -183,13 +209,15 @@ def make_pigeon_round_step_shardmap(model: Model, mesh, lr: float = 1e-3,
     from ..selection import resolve_policy
     if for_execution:
         check_partial_auto_backend(mesh, ("pod",))
-    runner = RoundRunner(launch_round_spec(model, lr, constrain_val=True),
+    runner = RoundRunner(launch_round_spec(model, lr, constrain_val=True,
+                                           quant=quant),
                          placement="sharded", mesh=mesh, params_stacked=True,
                          select=resolve_policy(selection))
     return runner.round_fn()
 
 
-def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3) -> Callable:
+def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3,
+                                quant: Optional[str] = None) -> Callable:
     """Beyond-paper Pigeon-SL+ round for the multi-pod mapping.
 
     Paper's Pigeon-SL+ trains ONLY the selected cluster for R-1 extra
@@ -200,7 +228,7 @@ def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3) -> Callable:
     the paper's semantics (extra updates flow only into the winning
     cluster's parameters).
     """
-    base = make_pigeon_round_step(model, lr)
+    base = make_pigeon_round_step(model, lr, quant=quant)
 
     def plus_round(stacked_params, batches, val_batch, plus_batches):
         rebro, vlosses, sel = base(stacked_params, batches, val_batch)
@@ -208,7 +236,8 @@ def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3) -> Callable:
         # plain DP step over (pod, data): treat the cluster dim of
         # plus_batches as additional batch parallelism.
         def one(params, batch):
-            new_params, loss = make_train_step(model, lr)(params, batch)
+            new_params, loss = make_train_step(model, lr, quant=quant)(params,
+                                                                       batch)
             return new_params, loss
 
         new_stacked, losses = jax.vmap(one)(rebro, plus_batches)
@@ -226,7 +255,8 @@ def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3) -> Callable:
 
 
 def make_pigeon_round_step(model: Model, lr: float = 1e-3,
-                           selection: str = "argmin") -> Callable:
+                           selection: str = "argmin",
+                           quant: Optional[str] = None) -> Callable:
     """One Pigeon-SL global round over R stacked cluster replicas (R is
     inferred from the stacked leading dim at trace time).
 
@@ -247,8 +277,8 @@ def make_pigeon_round_step(model: Model, lr: float = 1e-3,
     the only strategy.
     """
     from ..selection import resolve_policy
-    runner = RoundRunner(launch_round_spec(model, lr), placement="vmap",
-                         params_stacked=True,
+    runner = RoundRunner(launch_round_spec(model, lr, quant=quant),
+                         placement="vmap", params_stacked=True,
                          select=resolve_policy(selection))
     return runner.round_fn()
 
@@ -274,10 +304,13 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
                 pigeon_clusters: int = 0, lr: float = 1e-3,
                 seq_shard_cache: bool = False,
                 optimizations: Tuple[str, ...] = (),
-                selection: str = "argmin") -> LoweringSpec:
+                selection: str = "argmin",
+                quant: Optional[str] = None) -> LoweringSpec:
     """Build the (fn, ShapeDtypeStruct args, shardings) triple for one
     (architecture x input-shape x mesh) combination.  ``selection`` names
-    the loss-based selection policy the pigeon round steps compile in."""
+    the loss-based selection policy the pigeon round steps compile in;
+    ``quant`` compiles the quantized cut-layer wire into the train steps
+    (train/pigeon shapes only — prefill/decode have no cut exchange)."""
     shape = SHAPES[shape_name]
     cfg = apply_shape_settings(cfg, shape)
     if optimizations:
@@ -305,7 +338,7 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
             p_shard, b_shard, v_shard = shd.pigeon_round_shardings(
                 stacked, batches, val_batch, mesh, cluster_axis="pod")
             if "pigeon_plus" in cfg.optimizations:
-                fn = make_pigeon_plus_round_step(model, lr)
+                fn = make_pigeon_plus_round_step(model, lr, quant=quant)
                 plus_batches = batch_struct(cfg, dataclasses.replace(
                     shape, global_batch=per_cluster_b), cluster_dim=r)
                 pb_shard = shd.batch_shardings(plus_batches, mesh,
@@ -317,15 +350,17 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
                 # it should build the step with for_execution=True (or call
                 # check_partial_auto_backend) — CPU + auto axes > 1 cannot run
                 fn = make_pigeon_round_step_shardmap(model, mesh, lr,
-                                                     selection=selection)
+                                                     selection=selection,
+                                                     quant=quant)
             else:
-                fn = make_pigeon_round_step(model, lr, selection=selection)
+                fn = make_pigeon_round_step(model, lr, selection=selection,
+                                            quant=quant)
             return LoweringSpec(fn, (stacked, batches, val_batch),
                                 (p_shard, b_shard, v_shard), None)
         p_shard = shd.param_shardings(params_shape, mesh)
         batch = batch_struct(cfg, shape)
         b_shard = shd.batch_shardings(batch, mesh)
-        fn = make_train_step(model, lr)
+        fn = make_train_step(model, lr, quant=quant)
         return LoweringSpec(fn, (params_shape, batch), (p_shard, b_shard), None)
 
     if shape.kind == "prefill":

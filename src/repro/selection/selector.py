@@ -131,7 +131,8 @@ def select_host(policy: SelectionPolicy, module, results: List[Dict[str, Any]],
     first survivor.  Mutates ``meter`` with the per-visit re-transmission
     accounting (Table I's 2R*D_o validation term)."""
     from ..core import attacks as atk
-    from ..core.protocol import res_params, res_vacts
+    from ..core.protocol import (account_handoff_recheck, res_params,
+                                 res_vacts)
     from ..core.validation import check_handoff, handoff_activations
     ctx = host_score_context(policy, module, results, x0, y0)
     scores, elig, order = score_and_rank(policy, ctx)
@@ -156,8 +157,7 @@ def select_host(policy: SelectionPolicy, module, results: List[Dict[str, Any]],
             # >=1 of the R recipients is honest, so a tampered handoff is
             # always visible against the validation-time activations.
             recv = handoff_activations(module, handed, x0)
-            meter.validation_floats += pcfg.R * d_o * d_c
-            meter.client_passes += pcfg.R * d_o
+            account_handoff_recheck(meter, pcfg, d_o, d_c, visited=1)
             ok, dist = check_handoff(res_vacts(res), [recv], pcfg.tamper_tol)
             if not ok:
                 detection_events += 1

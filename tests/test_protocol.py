@@ -222,3 +222,52 @@ def test_pigeon_checkpoint_resume(task, tmp_path):
     # only the missing round runs
     assert len(h_res.rounds) == 1
     assert h_res.rounds[0]["round"] == 3
+
+
+def test_evaluate_empty_test_set_returns_zero(task):
+    """Regression: an empty test set used to crash with float(None) — the
+    accumulator never initialised.  Zero correct out of zero is 0.0."""
+    from repro.core.protocol import evaluate
+    data, module = task
+    gamma, phi = module.init(jax.random.PRNGKey(0))
+    empty_x = data.x_test[:0]
+    empty_y = data.y_test[:0]
+    assert evaluate(module, gamma, phi, empty_x, empty_y) == 0.0
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_rejected_plus_round_skips_subrounds(task, engine):
+    """Regression: a rejected Pigeon-SL+ round used to run the R-1 extra
+    sub-rounds anyway, handing the tamper-flagged selected cluster free
+    turns.  With every client param-tampering, every round is rejected and
+    the plus run must be identical to the plain run — zero sub-round client
+    passes, same comm record, same key stream."""
+    from repro.core import run_pigeon_plus
+    data, module = task
+    pcfg = dataclasses.replace(PCFG, T=2, E=2)
+    mal = set(range(pcfg.M))
+    h = run_pigeon(module, data, pcfg, malicious=mal,
+                   attack=Attack(PARAM_TAMPER), engine=engine)
+    h_plus = run_pigeon_plus(module, data, pcfg, malicious=mal,
+                             attack=Attack(PARAM_TAMPER), engine=engine)
+    assert all(not r["accepted"] for r in h.rounds)
+    for r, rp in zip(h.rounds, h_plus.rounds):
+        assert not rp["accepted"]
+        assert rp["comm"] == r["comm"]          # no extra client passes
+        assert rp["selected"] == r["selected"]
+
+
+def test_splitfed_records_comm(task):
+    """Regression: run_splitfed never instantiated a CommMeter, so its
+    History had no communication record at all."""
+    data, module = task
+    pcfg = dataclasses.replace(PCFG, T=2)
+    h = run_splitfed(module, data, pcfg)
+    d_c = cut_width(module, module.init(jax.random.PRNGKey(0))[0], data.x0)
+    for r in h.rounds:
+        comm = r["comm"]
+        # M clients x E batches x 2 messages x B*d_c floats each round
+        assert comm["activation_floats"] == pcfg.M * pcfg.E * pcfg.B * d_c
+        assert comm["gradient_floats"] == comm["activation_floats"]
+        assert comm["client_passes"] > 0
+        assert comm["param_bytes"] > 0

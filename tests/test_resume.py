@@ -206,3 +206,26 @@ def test_resume_missing_checkpoint_starts_fresh(tiny_task, tiny_pcfg, tmp_path):
                    attack=Attack(LABEL_FLIP), engine="batched",
                    checkpoint_path=path, resume=True)
     assert [r["round"] for r in h.rounds] == list(range(tiny_pcfg.T))
+
+
+def test_resume_past_final_round_returns_restored_state(tiny_task, tiny_pcfg,
+                                                        tmp_path):
+    """Regression: resuming a checkpoint whose saved round already covers
+    T-1 used to return an empty History silently.  It now warns and returns
+    the restored final state with its test accuracy."""
+    import warnings
+
+    data, module = tiny_task
+    path = str(tmp_path / "done_ckpt")
+    h_full = run_pigeon(module, data, tiny_pcfg, checkpoint_path=path)
+    assert len(h_full.rounds) == tiny_pcfg.T
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        h_res = run_pigeon(module, data, tiny_pcfg, checkpoint_path=path,
+                           resume=True)
+    assert any("nothing left to train" in str(w.message) for w in caught)
+    assert len(h_res.rounds) == 1
+    rec = h_res.rounds[0]
+    assert rec["resumed_terminal"] is True
+    assert rec["round"] == tiny_pcfg.T - 1
+    assert rec["test_acc"] == h_full.rounds[-1]["test_acc"]
