@@ -10,12 +10,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.core import Attack, ProtocolConfig
+from repro.telemetry import Stopwatch, provenance
 
 EXP_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                        "experiments")
@@ -68,6 +68,10 @@ def moving_average(xs: List[float], w: int) -> List[float]:
 
 
 def save_result(name: str, payload: Dict[str, Any]) -> str:
+    # every result JSON carries a provenance stamp (jax/jaxlib versions,
+    # backend, device kind, git sha, timestamp) so numbers in experiments/
+    # stay attributable after the environment moves on
+    payload.setdefault("provenance", provenance())
     os.makedirs(EXP_DIR, exist_ok=True)
     path = os.path.join(EXP_DIR, f"{name}.json")
     with open(path, "w") as f:
@@ -79,13 +83,9 @@ def csv_row(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.0f},{derived}", flush=True)
 
 
-class RoundTimer:
-    def __enter__(self):
-        self.t0 = time.time()
-        return self
-
-    def __exit__(self, *a):
-        self.elapsed = time.time() - self.t0
+class RoundTimer(Stopwatch):
+    """A :class:`repro.telemetry.Stopwatch` (monotonic ``perf_counter`` —
+    wall-clock ``time.time()`` can step under NTP) reporting per-round us."""
 
     def us_per(self, rounds: int) -> float:
         return self.elapsed / max(rounds, 1) * 1e6

@@ -25,7 +25,19 @@ def main() -> None:
                     help="comma-separated cut-layer wire formats for the "
                          "robustness_quant matrix's format axis "
                          "(default: int8; e.g. int8,fp8_e4m3)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a JSONL telemetry trace (round spans + "
+                         "per-round metrics + provenance) of the table1 "
+                         "accounting runs to PATH")
     args = ap.parse_args()
+
+    telemetry = None
+    if args.trace:
+        if args.only not in (None, "table1"):
+            ap.error("--trace only applies to the table1 accounting runs; "
+                     f"it has no effect on --only {args.only}")
+        from repro.telemetry import Telemetry
+        telemetry = Telemetry(jsonl=args.trace, jit_stats=True)
 
     selections = None
     if args.selection:
@@ -55,7 +67,7 @@ def main() -> None:
                    robustness_matrix, roofline_report, table1_overhead)
 
     benches = {
-        "table1": lambda: table1_overhead.run(args.full),
+        "table1": lambda: table1_overhead.run(args.full, telemetry=telemetry),
         "fig3": lambda: fig3_mnist_attacks.run(args.full),
         "fig4": lambda: fig4_cifar_attacks.run(args.full),
         "fig5": lambda: fig5_fig6_vary_n.run(args.full),

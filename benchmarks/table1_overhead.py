@@ -17,7 +17,6 @@ grows with R and shrinks as per-client compute grows.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 
@@ -25,11 +24,15 @@ from repro.core import (HONEST, ProtocolConfig, from_cnn, run_pigeon,
                         run_vanilla_sl)
 from repro.core.protocol import _count_params, cut_width
 from repro.data import build_image_task
+from repro.telemetry import Stopwatch
 
 from .common import RoundTimer, csv_row, save_result
 
 
-def run(full: bool = False, seed: int = 0):
+def run(full: bool = False, seed: int = 0, telemetry=None):
+    """``telemetry`` (an optional :class:`repro.telemetry.Telemetry`) traces
+    the three accounting runs only — never the ``engine_speedup`` timing
+    loops, whose numbers must not absorb sink I/O."""
     data, cnn_cfg = build_image_task("mnist", m_clients=8, d_m=300, d_o=150,
                                      n_test=500, seed=seed)
     module = from_cnn(cnn_cfg)
@@ -44,7 +47,8 @@ def run(full: bool = False, seed: int = 0):
 
     rows = []
     with RoundTimer() as t:
-        h = run_vanilla_sl(module, data, pcfg, malicious=set())
+        h = run_vanilla_sl(module, data, pcfg, malicious=set(),
+                           telemetry=telemetry)
     c = h.rounds[0]["comm"]
     rows.append(("vanilla_sl",
                  dict(measured_comm=c["activation_floats"] + c["param_floats"]
@@ -54,7 +58,7 @@ def run(full: bool = False, seed: int = 0):
                       formula_comp=m * dt)))
     us = t.us_per(1)
 
-    h = run_pigeon(module, data, pcfg, malicious=set())
+    h = run_pigeon(module, data, pcfg, malicious=set(), telemetry=telemetry)
     c = h.rounds[0]["comm"]
     rows.append(("pigeon_sl",
                  dict(measured_comm=c["activation_floats"] + c["param_floats"]
@@ -63,7 +67,8 @@ def run(full: bool = False, seed: int = 0):
                       measured_comp=c["client_passes"],
                       formula_comp=m * dt + 2 * r * d_o)))
 
-    h = run_pigeon(module, data, pcfg, malicious=set(), plus=True)
+    h = run_pigeon(module, data, pcfg, malicious=set(), plus=True,
+                   telemetry=telemetry)
     c = h.rounds[0]["comm"]
     rows.append(("pigeon_sl_plus",
                  dict(measured_comm=c["activation_floats"] + c["param_floats"]
@@ -118,9 +123,10 @@ def engine_speedup(full: bool = False, seed: int = 0):
             run_pigeon(module, data, warm, malicious=set(), engine=engine)
             best = float("inf")
             for _ in range(repeats):     # best-of-N vs scheduler noise
-                t0 = time.time()
-                run_pigeon(module, data, pcfg, malicious=set(), engine=engine)
-                best = min(best, (time.time() - t0) / pcfg.T * 1e3)
+                with Stopwatch() as sw:
+                    run_pigeon(module, data, pcfg, malicious=set(),
+                               engine=engine)
+                best = min(best, sw.elapsed / pcfg.T * 1e3)
             ms[engine] = best
         speedup = ms["sequential"] / ms["batched"]
         results[f"R{n + 1}_E{e}_B{b}"] = dict(

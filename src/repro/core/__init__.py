@@ -12,6 +12,8 @@ from ..adversary import (ALWAYS, BACKDOOR, GRAD_NOISE, GRAD_SCALE, REPLAY,
 from ..selection import (LossPlusDistancePolicy, MedianOfMeansPolicy,
                          SelectionPolicy, TrimmedPolicy, resolve_policy,
                          selection_policies)
+from ..telemetry import Telemetry
+
 from .attacks import (ACTIVATION, GRADIENT, HONEST, KINDS, LABEL_FLIP, NONE,
                       PARAM_TAMPER, Attack, AttackVec, attack_vec,
                       attack_vec_for_clusters)
@@ -41,6 +43,7 @@ __all__ = [
     "make_clusters", "has_honest_cluster", "cluster_is_honest",
     "ClientData", "CommMeter", "CommConfig", "QUANT_FORMATS", "fp8_supported",
     "message_bytes", "resolve_quant", "History", "ProtocolConfig", "ENGINES",
+    "Telemetry",
     "run_pigeon", "run_pigeon_plus", "run_splitfed", "run_vanilla_sl",
     "run_pigeon_sweep", "batched_round", "train_round_batched", "onehot_select",
     "PLACEMENTS", "RoundRunner", "RoundSpec", "VerifyConfig", "cluster_map",

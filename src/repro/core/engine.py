@@ -46,6 +46,7 @@ from .runner import (cluster_map, onehot_select, protocol_accept_runner,
                      protocol_round_spec, protocol_runner)
 from .split import (SplitModule, client_update_vec_impl,
                     client_update_vec_stats_impl)
+from ..telemetry import NULL_SESSION
 
 Pytree = Any
 
@@ -147,7 +148,8 @@ def train_round_batched(module: SplitModule, theta, clusters, data: ClientData,
                         pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                         rng: np.random.Generator, key: jax.Array, meter: CommMeter,
                         d_c: int, x0, y0, placement: str = "vmap",
-                        prefetched=None, with_stats: bool = False
+                        prefetched=None, with_stats: bool = False,
+                        telemetry=None
                         ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
     """Batched replacement for the sequential per-cluster loop of
     ``run_pigeon``: one compiled call produces all R candidate
@@ -163,13 +165,18 @@ def train_round_batched(module: SplitModule, theta, clusters, data: ClientData,
     were already consumed by the feeder thread in this exact order.
     ``with_stats`` additionally surfaces per-client transmitted-message
     statistics in each result (anomaly-scoring selection policies)."""
+    tel = NULL_SESSION if telemetry is None else telemetry
     if prefetched is None:
-        key, prefetched = assemble_round(rng, key, data, clusters, pcfg, tm, t)
+        with tel.span("round.assemble", round=t):
+            key, prefetched = assemble_round(rng, key, data, clusters, pcfg,
+                                             tm, t)
     xs, ys, avec, keys = prefetched
-    (gs, ps), aux, vlosses, vacts = protocol_runner(
-        module, pcfg.lr, placement, with_stats,
-        quant=pcfg.comm.quant).candidates(
-        theta, (xs, ys, avec, keys), (x0, y0))
+    with tel.span("round.step", round=t) as sp:
+        (gs, ps), aux, vlosses, vacts = protocol_runner(
+            module, pcfg.lr, placement, with_stats,
+            quant=pcfg.comm.quant).candidates(
+            theta, (xs, ys, avec, keys), (x0, y0))
+        sp.fence(vlosses)
     losses, stats = (aux if with_stats else (aux, None))
 
     d_cl = _count_params(theta[0])
@@ -198,7 +205,8 @@ def pigeon_round_accept(module: SplitModule, theta, clusters, data: ClientData,
                         pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                         rng: np.random.Generator, key: jax.Array,
                         meter: CommMeter, d_c: int, x0, y0, policy,
-                        placement: str = "vmap", prefetched=None):
+                        placement: str = "vmap", prefetched=None,
+                        telemetry=None):
     """The default batched round: training, validation AND the whole
     acceptance cascade (policy score -> rank -> handoff verify -> commit)
     in one compiled program, with a single stacked host fetch.  Returns
@@ -211,12 +219,20 @@ def pigeon_round_accept(module: SplitModule, theta, clusters, data: ClientData,
     from ..selection import unpack_fetch
     assert not tm.has_param_tamper, \
         "param-tamper threat models must use the host selection cascade"
+    tel = NULL_SESSION if telemetry is None else telemetry
     if prefetched is None:
-        key, prefetched = assemble_round(rng, key, data, clusters, pcfg, tm, t)
+        with tel.span("round.assemble", round=t):
+            key, prefetched = assemble_round(rng, key, data, clusters, pcfg,
+                                             tm, t)
     runner = protocol_accept_runner(module, pcfg.lr, placement, policy,
                                     pcfg.tamper_check, pcfg.tamper_tol,
                                     quant=pcfg.comm.quant)
-    theta_next, fetch = runner.accept(theta, prefetched, (x0, y0))
+    with tel.span("round.step", round=t) as sp:
+        theta_next, fetch = runner.accept(theta, prefetched, (x0, y0))
+        # fence the fetch only: the step span absorbs the device round
+        # (block_until_ready waits, it does not transfer), leaving the fetch
+        # span below with just the D2H copy — still ONE host sync per round
+        sp.fence(fetch)
 
     d_cl = _count_params(theta[0])
     for cluster in clusters:
@@ -224,17 +240,21 @@ def pigeon_round_accept(module: SplitModule, theta, clusters, data: ClientData,
             account_client_turn(meter, pcfg, d_c, d_cl,
                                 handoff=j < len(cluster) - 1)
 
-    vlosses, tlosses, selected, detections, accepted = unpack_fetch(
-        np.asarray(fetch), len(clusters))          # the round's one host sync
-    # Table I accounting for the handoff re-checks: one R-recipient
-    # re-transmission per visited candidate, exactly as the host cascade
-    # charges per visit (detections failures + the accepted one).
-    if pcfg.tamper_check:
-        visited = detections + (1 if accepted else 0)
-        account_handoff_recheck(meter, pcfg, int(x0.shape[0]), d_c, visited)
-    record = dict(val_losses=[float(v) for v in vlosses],
-                  train_losses=[float(v) for v in tlosses],
-                  selected=selected, detections=detections, accepted=accepted)
+    with tel.span("round.fetch", round=t):
+        vlosses, tlosses, selected, detections, accepted = unpack_fetch(
+            np.asarray(fetch), len(clusters))      # the round's one host sync
+    with tel.span("round.select", round=t):
+        # Table I accounting for the handoff re-checks: one R-recipient
+        # re-transmission per visited candidate, exactly as the host cascade
+        # charges per visit (detections failures + the accepted one).
+        if pcfg.tamper_check:
+            visited = detections + (1 if accepted else 0)
+            account_handoff_recheck(meter, pcfg, int(x0.shape[0]), d_c,
+                                    visited)
+        record = dict(val_losses=[float(v) for v in vlosses],
+                      train_losses=[float(v) for v in tlosses],
+                      selected=selected, detections=detections,
+                      accepted=accepted)
     return key, theta_next, record
 
 
@@ -385,21 +405,26 @@ def splitfed_round_batched(module: SplitModule, theta, clusters, data: ClientDat
                            pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                            rng: np.random.Generator,
                            key: jax.Array, x0, y0, placement: str = "vmap",
-                           prefetched=None, with_stats: bool = False
+                           prefetched=None, with_stats: bool = False,
+                           telemetry=None
                            ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
     """Batched SplitFed round through the placement-aware RoundRunner (the
     FedAvg combine hook makes the cluster model the mean of its clients),
     selection left to the caller — the host reference path.
     ``prefetched`` carries a payload pre-assembled by the RoundFeeder — the
     feeder thread already consumed the RNG/key streams in this order."""
+    tel = NULL_SESSION if telemetry is None else telemetry
     if prefetched is None:
-        key, prefetched = assemble_splitfed_round(rng, key, data, clusters,
-                                                  pcfg, tm, t)
+        with tel.span("round.assemble", round=t):
+            key, prefetched = assemble_splitfed_round(rng, key, data,
+                                                      clusters, pcfg, tm, t)
     xs, ys, avec, keys = prefetched
-    (g_avg, p_avg), aux, vlosses, _ = splitfed_runner(
-        module, pcfg.lr, placement, with_stats,
-        quant=pcfg.comm.quant).candidates(
-        theta, (xs, ys, avec, keys), (x0, y0))
+    with tel.span("round.step", round=t) as sp:
+        (g_avg, p_avg), aux, vlosses, _ = splitfed_runner(
+            module, pcfg.lr, placement, with_stats,
+            quant=pcfg.comm.quant).candidates(
+            theta, (xs, ys, avec, keys), (x0, y0))
+        sp.fence(vlosses)
     stats = np.asarray(aux[1]) if with_stats else None
     vlosses = np.asarray(vlosses)
     results = []
@@ -416,21 +441,27 @@ def splitfed_round_accept(module: SplitModule, theta, clusters,
                           data: ClientData, pcfg: ProtocolConfig,
                           tm: ThreatModel, t: int, rng: np.random.Generator,
                           key: jax.Array, x0, y0, policy,
-                          placement: str = "vmap", prefetched=None):
+                          placement: str = "vmap", prefetched=None,
+                          telemetry=None):
     """SplitFed's default batched round: FedAvg per cluster + the policy
     selection cascade in one compiled program, one stacked host fetch.
     Returns ``(key, theta', record)`` like :func:`pigeon_round_accept`
     (``detections`` always 0 and ``accepted`` always True — no handoff
     verify stage)."""
     from ..selection import unpack_fetch
+    tel = NULL_SESSION if telemetry is None else telemetry
     if prefetched is None:
-        key, prefetched = assemble_splitfed_round(rng, key, data, clusters,
-                                                  pcfg, tm, t)
+        with tel.span("round.assemble", round=t):
+            key, prefetched = assemble_splitfed_round(rng, key, data,
+                                                      clusters, pcfg, tm, t)
     runner = splitfed_accept_runner(module, pcfg.lr, placement, policy,
                                     quant=pcfg.comm.quant)
-    theta_next, fetch = runner.accept(theta, prefetched, (x0, y0))
-    vlosses, tlosses, selected, detections, accepted = unpack_fetch(
-        np.asarray(fetch), len(clusters))
+    with tel.span("round.step", round=t) as sp:
+        theta_next, fetch = runner.accept(theta, prefetched, (x0, y0))
+        sp.fence(fetch)
+    with tel.span("round.fetch", round=t):
+        vlosses, tlosses, selected, detections, accepted = unpack_fetch(
+            np.asarray(fetch), len(clusters))
     record = dict(val_losses=[float(v) for v in vlosses],
                   train_losses=[float(v) for v in tlosses],
                   selected=selected, detections=detections, accepted=accepted)
@@ -488,7 +519,8 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
                      verbose: bool = False, placement: str = "vmap",
                      threat_model: Optional[ThreatModel] = None,
                      selection="argmin",
-                     quant: Optional[str] = None) -> List[History]:
+                     quant: Optional[str] = None,
+                     telemetry=None) -> List[History]:
     """S whole Pigeon-SL replicas (different seeds) advanced in lockstep: one
     compiled call per global round trains S x R clusters and performs the
     per-seed argmin selection on device.  ``placement="vmap"`` runs the
@@ -530,65 +562,82 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
     d_cl = _count_params(jax.tree.map(lambda a: a[0], thetas[0]))
     d_c = cut_width(module, jax.tree.map(lambda a: a[0], thetas[0]), data.x0)
     hists = [History() for _ in seeds]
+    from ..telemetry import resolve_telemetry
+    tel = resolve_telemetry(telemetry, run="sweep", placement=placement,
+                            T=pcfg.T, M=pcfg.M, R=pcfg.R, seeds=list(seeds),
+                            selection=policy.name)
 
-    for t in range(pcfg.T):
-        clusters_s = [make_clusters(rngs[i], pcfg.M, pcfg.R)
-                      for i in range(len(seeds))]
-        xs, ys, key_rows, avecs = [], [], [], []
-        for i in range(len(seeds)):
-            keys[i], (x_i, y_i, avec_i, krow) = assemble_round(
-                rngs[i], keys[i], data, clusters_s[i], pcfg, tm, t)
-            xs.append(x_i)
-            ys.append(y_i)
-            key_rows.append(krow)
-            avecs.append(avec_i)
-        avec = jax.tree.map(lambda *ls: jnp.stack(ls), *avecs)
-        thetas, aux, vlosses, sels = sweep_round(
-            module, pcfg.lr, thetas,
-            (jnp.stack(xs), jnp.stack(ys), avec, jnp.stack(key_rows)),
-            (x0, y0), placement, policy, pcfg.comm.quant)
-        gammas, phis = thetas
-        tloss_rm = aux[0] if isinstance(aux, tuple) else aux
-        tlosses = jnp.mean(tloss_rm, axis=-1)       # (S, R): mean over clients
+    try:
+        for t in range(pcfg.T):
+            tel.profile_tick(t)
+            with tel.span("round.assemble", round=t):
+                clusters_s = [make_clusters(rngs[i], pcfg.M, pcfg.R)
+                              for i in range(len(seeds))]
+                xs, ys, key_rows, avecs = [], [], [], []
+                for i in range(len(seeds)):
+                    keys[i], (x_i, y_i, avec_i, krow) = assemble_round(
+                        rngs[i], keys[i], data, clusters_s[i], pcfg, tm, t)
+                    xs.append(x_i)
+                    ys.append(y_i)
+                    key_rows.append(krow)
+                    avecs.append(avec_i)
+                avec = jax.tree.map(lambda *ls: jnp.stack(ls), *avecs)
+            with tel.span("round.step", round=t) as sp:
+                thetas, aux, vlosses, sels = sweep_round(
+                    module, pcfg.lr, thetas,
+                    (jnp.stack(xs), jnp.stack(ys), avec,
+                     jnp.stack(key_rows)),
+                    (x0, y0), placement, policy, pcfg.comm.quant)
+                sp.fence(vlosses)
+            gammas, phis = thetas
+            tloss_rm = aux[0] if isinstance(aux, tuple) else aux
+            tlosses = jnp.mean(tloss_rm, axis=-1)   # (S, R): mean over clients
 
-        meter = CommMeter()
-        for cluster in clusters_s[0]:
-            for j in range(len(cluster)):
-                account_client_turn(meter, pcfg, d_c, d_cl,
-                                    handoff=j < len(cluster) - 1)
-            account_validation(meter, d_o, d_c)
-        if pcfg.tamper_check:
-            # run_pigeon inspects exactly one candidate per round in the
-            # honest/message-attack cases the sweep supports: the next-round
-            # first clients' re-transmission of its handoff activations.
-            account_handoff_recheck(meter, pcfg, d_o, d_c, visited=1)
-        account_param_transfer(meter, pcfg.R * d_cl)
+            meter = CommMeter()
+            for cluster in clusters_s[0]:
+                for j in range(len(cluster)):
+                    account_client_turn(meter, pcfg, d_c, d_cl,
+                                        handoff=j < len(cluster) - 1)
+                account_validation(meter, d_o, d_c)
+            if pcfg.tamper_check:
+                # run_pigeon inspects exactly one candidate per round in the
+                # honest/message-attack cases the sweep supports: the
+                # next-round first clients' re-transmission of its handoff
+                # activations.
+                account_handoff_recheck(meter, pcfg, d_o, d_c, visited=1)
+            account_param_transfer(meter, pcfg.R * d_cl)
 
-        vlosses = np.asarray(vlosses)
-        sels = np.asarray(sels)
-        tlosses = np.asarray(tlosses)
-        accs = None
-        if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
-            accs = evaluate_sweep(module, gammas, phis, data.x_test, data.y_test,
-                                  pcfg.eval_batch)
-        for i in range(len(seeds)):
-            sel = int(sels[i])
-            rec = dict(
-                round=t,
-                clusters=clusters_s[i],
-                val_losses=[float(v) for v in vlosses[i]],
-                train_losses=[float(v) for v in tlosses[i]],
-                selected=sel,
-                selected_honest=cluster_is_honest(clusters_s[i][sel], tm.malicious),
-                honest_cluster_exists=any(cluster_is_honest(c, tm.malicious)
-                                          for c in clusters_s[i]),
-                comm=dataclasses.asdict(meter),
-            )
-            if accs is not None:
-                rec["test_acc"] = float(accs[i])
-            hists[i].rounds.append(rec)
-        if verbose:
-            acc_str = ("" if accs is None
-                       else " acc=" + "/".join(f"{a:.3f}" for a in accs))
-            print(f"[sweep] t={t:3d} sel={sels.tolist()}{acc_str}")
+            vlosses = np.asarray(vlosses)
+            sels = np.asarray(sels)
+            tlosses = np.asarray(tlosses)
+            accs = None
+            if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+                with tel.span("round.eval", round=t):
+                    accs = evaluate_sweep(module, gammas, phis, data.x_test,
+                                          data.y_test, pcfg.eval_batch)
+            for i in range(len(seeds)):
+                sel = int(sels[i])
+                rec = dict(
+                    round=t,
+                    clusters=clusters_s[i],
+                    val_losses=[float(v) for v in vlosses[i]],
+                    train_losses=[float(v) for v in tlosses[i]],
+                    selected=sel,
+                    selected_honest=cluster_is_honest(clusters_s[i][sel],
+                                                      tm.malicious),
+                    honest_cluster_exists=any(
+                        cluster_is_honest(c, tm.malicious)
+                        for c in clusters_s[i]),
+                    comm=dataclasses.asdict(meter),
+                )
+                if accs is not None:
+                    rec["test_acc"] = float(accs[i])
+                hists[i].rounds.append(rec)
+                tel.record_round(t, rec, seed=seeds[i])
+            if verbose:
+                acc_str = ("" if accs is None
+                           else " acc=" + "/".join(f"{a:.3f}" for a in accs))
+                print(f"[sweep] t={t:3d} sel={sels.tolist()}{acc_str}")
+    finally:
+        tel.close()
     return hists

@@ -19,6 +19,7 @@ import numpy as np
 
 from ..adversary import ThreatModel, resolve_threat_model
 from ..selection import resolve_policy, select_host
+from ..telemetry import NULL_SESSION, Telemetry, resolve_telemetry
 from .attacks import Attack, HONEST
 from .clustering import cluster_is_honest, make_clusters
 from .comm import CommConfig, FLOAT_BYTES, message_bytes
@@ -42,6 +43,9 @@ class ProtocolConfig:
     eval_every: int = 1
     eval_batch: int = 500
     comm: CommConfig = CommConfig()
+    # Observability config (spans / sinks / profiler — see repro.telemetry);
+    # None = off.  A driver-level ``telemetry=`` kwarg takes precedence.
+    telemetry: Optional[Telemetry] = None
 
     @property
     def R(self) -> int:
@@ -308,30 +312,32 @@ def _train_round(module: SplitModule, theta, clusters, data: ClientData,
                  pcfg: ProtocolConfig, tm: ThreatModel, t: int,
                  rng: np.random.Generator, key: jax.Array, meter: CommMeter,
                  d_c: int, x0, y0, engine: str, placement: str = "vmap",
-                 prefetched=None, with_stats: bool = False):
+                 prefetched=None, with_stats: bool = False, telemetry=None):
     """Train all R clusters of round t from the same theta^t.  Returns
     (key', results) where results[r] holds gamma/phi/vloss/vacts/cluster/
     train_loss for cluster r.  Both engines consume the numpy RNG and the JAX
     key stream in the same order, so they are swappable mid-trajectory."""
+    tel = NULL_SESSION if telemetry is None else telemetry
     if engine == "batched":
         from .engine import train_round_batched
         return train_round_batched(module, theta, clusters, data, pcfg,
                                    tm, t, rng, key, meter, d_c, x0, y0,
                                    placement=placement, prefetched=prefetched,
-                                   with_stats=with_stats)
+                                   with_stats=with_stats, telemetry=tel)
     results = []
-    for cluster in clusters:
-        key, sub = jax.random.split(key)
-        out = train_cluster(module, theta[0], theta[1], cluster, data,
-                            pcfg, tm, t, rng, sub, meter, d_c,
-                            collect_stats=with_stats)
-        g, p, train_loss = out[:3]
-        vloss, vacts = validation_loss(module, g, p, x0, y0)
-        res = dict(gamma=g, phi=p, vloss=float(vloss), vacts=vacts,
-                   cluster=cluster, train_loss=train_loss)
-        if with_stats:
-            res["msg_stats"] = out[3]
-        results.append(res)
+    with tel.span("round.step", round=t):
+        for cluster in clusters:
+            key, sub = jax.random.split(key)
+            out = train_cluster(module, theta[0], theta[1], cluster, data,
+                                pcfg, tm, t, rng, sub, meter, d_c,
+                                collect_stats=with_stats)
+            g, p, train_loss = out[:3]
+            vloss, vacts = validation_loss(module, g, p, x0, y0)
+            res = dict(gamma=g, phi=p, vloss=float(vloss), vacts=vacts,
+                       cluster=cluster, train_loss=train_loss)
+            if with_stats:
+                res["msg_stats"] = out[3]
+            results.append(res)
     return key, results
 
 
@@ -343,8 +349,18 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                prefetch: int = 0,
                threat_model: Optional[ThreatModel] = None,
                selection="argmin", quant: Optional[str] = None,
+               telemetry=None,
                _force_host_selection: bool = False) -> History:
     """Pigeon-SL (Algorithm 1).  Execution knobs beyond the paper:
+
+    * ``telemetry`` — a :class:`repro.telemetry.Telemetry` config (or an
+      already-open session, which the driver borrows without closing):
+      phase spans, per-round metric events, JSONL/console/custom sinks and
+      opt-in profiler windows.  Overrides ``pcfg.telemetry``.  Telemetry is
+      a strict no-op on the math — it consumes no RNG and adds no
+      device→host fetches — so the History is bit-identical with it on or
+      off.  ``verbose=True`` is a back-compat alias for the console sink
+      (one uniform per-round line).
 
     * ``quant`` — cut-layer wire format shorthand (``"int8"`` /
       ``"fp8_e4m3"``; ``None`` keeps ``pcfg.comm``): overrides the
@@ -449,6 +465,12 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     hist = History()
     d_cl = _count_params(gamma0)
     d_c = cut_width(module, gamma0, data.x0)
+    tel = resolve_telemetry(
+        telemetry if telemetry is not None else pcfg.telemetry,
+        verbose=verbose, run=f"pigeon{'+' if plus else ''}",
+        engine=engine, placement=placement, prefetch=prefetch,
+        T=pcfg.T, M=pcfg.M, R=pcfg.R, selection=policy.name,
+        fused_selection=fused_selection)
 
     # Double-buffered host pipeline: assembly of round t+1 overlaps device
     # execution of round t.  Depth is bounded to zero (synchronous) at the
@@ -477,13 +499,17 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                 snap = protocol_state_metadata(rng, _state["key"])
             return clusters, payload, snap
 
-        feeder = RoundFeeder(_make_round, start_round, pcfg.T, depth=prefetch)
+        feeder = RoundFeeder(_make_round, start_round, pcfg.T, depth=prefetch,
+                             telemetry=tel)
 
     try:
         for t in range(start_round, pcfg.T):
+            tel.profile_tick(t)
             meter = CommMeter()
             if feeder is not None:
-                clusters, prefetched, stream_snap = feeder.get(t)
+                with tel.span("round.feeder_wait", round=t,
+                              depth=feeder.qsize()):
+                    clusters, prefetched, stream_snap = feeder.get(t)
             else:
                 clusters = make_clusters(rng, pcfg.M, pcfg.R)
                 prefetched = None
@@ -495,7 +521,8 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                 from .engine import pigeon_round_accept
                 key, theta, sel_rec = pigeon_round_accept(
                     module, theta, clusters, data, pcfg, tm, t, rng, key,
-                    meter, d_c, x0, y0, policy, placement, prefetched)
+                    meter, d_c, x0, y0, policy, placement, prefetched,
+                    telemetry=tel)
                 selected = sel_rec["selected"]
                 accepted = sel_rec["accepted"]
                 detection_events = sel_rec["detections"]
@@ -508,10 +535,11 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                 key, results = _train_round(
                     module, theta, clusters, data, pcfg, tm, t, rng, key,
                     meter, d_c, x0, y0, engine, placement, prefetched,
-                    with_stats=policy.needs_message_stats)
-                key, outcome = select_host(policy, module, results, theta,
-                                           tm, t, key, pcfg, meter, x0, y0,
-                                           d_c)
+                    with_stats=policy.needs_message_stats, telemetry=tel)
+                with tel.span("round.select", round=t):
+                    key, outcome = select_host(policy, module, results,
+                                               theta, tm, t, key, pcfg,
+                                               meter, x0, y0, d_c)
                 theta = outcome.theta
                 selected = outcome.selected
                 accepted = outcome.accepted
@@ -531,20 +559,22 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
             # theta^t, and re-training the (tamper-flagged) selected cluster
             # from it would hand a detected attacker R-1 free extra turns.
             if plus and accepted:
-                for _ in range(pcfg.R - 1):
-                    if engine == "batched":
-                        from .engine import train_cluster_batched
-                        key, g, p, _ = train_cluster_batched(
-                            module, theta, sel_cluster, data, pcfg, tm,
-                            t, rng, key, meter, d_c)
-                    else:
-                        key, sub = jax.random.split(key)
-                        g, p, _ = train_cluster(module, theta[0], theta[1],
-                                                sel_cluster, data, pcfg,
-                                                tm, t, rng, sub, meter, d_c)
-                    theta = (g, p)
-                    # subround handoff to the 1st client
-                    account_param_transfer(meter, _count_params(g))
+                with tel.span("round.subrounds", round=t, n=pcfg.R - 1):
+                    for _ in range(pcfg.R - 1):
+                        if engine == "batched":
+                            from .engine import train_cluster_batched
+                            key, g, p, _ = train_cluster_batched(
+                                module, theta, sel_cluster, data, pcfg, tm,
+                                t, rng, key, meter, d_c)
+                        else:
+                            key, sub = jax.random.split(key)
+                            g, p, _ = train_cluster(module, theta[0],
+                                                    theta[1], sel_cluster,
+                                                    data, pcfg, tm, t, rng,
+                                                    sub, meter, d_c)
+                        theta = (g, p)
+                        # subround handoff to the 1st client
+                        account_param_transfer(meter, _count_params(g))
 
             rec = dict(
                 round=t,
@@ -560,23 +590,25 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                 comm=dataclasses.asdict(meter),
             )
             if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
-                rec["test_acc"] = evaluate(module, theta[0], theta[1],
-                                           data.x_test, data.y_test, pcfg.eval_batch)
+                with tel.span("round.eval", round=t):
+                    rec["test_acc"] = evaluate(module, theta[0], theta[1],
+                                               data.x_test, data.y_test,
+                                               pcfg.eval_batch)
             hist.rounds.append(rec)
             if checkpoint_path is not None:
                 from ..checkpoint import protocol_state_metadata, save_checkpoint
                 state = (stream_snap if stream_snap is not None
                          else protocol_state_metadata(rng, key))
-                save_checkpoint(checkpoint_path, theta,
-                                {"round": t, **state})
-            if verbose:
-                acc = rec.get("test_acc", float("nan"))
-                print(f"[pigeon{'+' if plus else ''}] t={t:3d} acc={acc:.4f} "
-                      f"sel={selected} honest={rec['selected_honest']} "
-                      f"vloss={rec['val_losses']}")
+                with tel.span("round.checkpoint", round=t):
+                    save_checkpoint(checkpoint_path, theta,
+                                    {"round": t, **state})
+            tel.record_round(t, rec,
+                             feeder_depth=(feeder.qsize()
+                                           if feeder is not None else None))
     finally:
         if feeder is not None:
             feeder.close()
+        tel.close()
     return hist
 
 
@@ -586,7 +618,8 @@ def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                     resume: bool = False, engine: str = "sequential",
                     placement: str = "vmap", prefetch: int = 0,
                     threat_model: Optional[ThreatModel] = None,
-                    selection="argmin", quant: Optional[str] = None) -> History:
+                    selection="argmin", quant: Optional[str] = None,
+                    telemetry=None) -> History:
     """Pigeon-SL+ (throughput-matched variant): ``run_pigeon`` with the R-1
     extra selected-cluster sub-rounds enabled.  ``prefetch`` is accepted for
     API symmetry but bounded to synchronous assembly — the sub-rounds sample
@@ -596,7 +629,7 @@ def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                       verbose=verbose, checkpoint_path=checkpoint_path,
                       resume=resume, engine=engine, placement=placement,
                       prefetch=prefetch, threat_model=threat_model,
-                      selection=selection, quant=quant)
+                      selection=selection, quant=quant, telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -607,7 +640,7 @@ def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                    malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                    verbose: bool = False,
                    threat_model: Optional[ThreatModel] = None,
-                   quant: Optional[str] = None) -> History:
+                   quant: Optional[str] = None, telemetry=None) -> History:
     if quant is not None:
         pcfg = dataclasses.replace(pcfg, comm=CommConfig(quant=quant))
     tm = resolve_threat_model(malicious, attack, threat_model)
@@ -617,21 +650,32 @@ def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     gamma, phi = module.init(k0)
     hist = History()
     d_c = cut_width(module, gamma, data.x0)
-    for t in range(pcfg.T):
-        meter = CommMeter()
-        order = rng.permutation(pcfg.M).tolist()
-        key, sub = jax.random.split(key)
-        gamma, phi, train_loss = train_cluster(module, gamma, phi, order, data, pcfg,
-                                               tm, t, rng, sub, meter, d_c)
-        # hand-off into the next round
-        account_param_transfer(meter, _count_params(gamma))
-        rec = dict(round=t, train_loss=train_loss, comm=dataclasses.asdict(meter))
-        if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
-            rec["test_acc"] = evaluate(module, gamma, phi, data.x_test, data.y_test,
-                                       pcfg.eval_batch)
-        hist.rounds.append(rec)
-        if verbose:
-            print(f"[vanilla] t={t:3d} acc={rec.get('test_acc', float('nan')):.4f}")
+    tel = resolve_telemetry(
+        telemetry if telemetry is not None else pcfg.telemetry,
+        verbose=verbose, run="vanilla", T=pcfg.T, M=pcfg.M)
+    try:
+        for t in range(pcfg.T):
+            tel.profile_tick(t)
+            meter = CommMeter()
+            order = rng.permutation(pcfg.M).tolist()
+            key, sub = jax.random.split(key)
+            with tel.span("round.step", round=t):
+                gamma, phi, train_loss = train_cluster(
+                    module, gamma, phi, order, data, pcfg, tm, t, rng, sub,
+                    meter, d_c)
+            # hand-off into the next round
+            account_param_transfer(meter, _count_params(gamma))
+            rec = dict(round=t, train_loss=train_loss,
+                       comm=dataclasses.asdict(meter))
+            if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+                with tel.span("round.eval", round=t):
+                    rec["test_acc"] = evaluate(module, gamma, phi,
+                                               data.x_test, data.y_test,
+                                               pcfg.eval_batch)
+            hist.rounds.append(rec)
+            tel.record_round(t, rec)
+    finally:
+        tel.close()
     return hist
 
 
@@ -645,6 +689,7 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                  placement: str = "vmap", prefetch: int = 0,
                  threat_model: Optional[ThreatModel] = None,
                  selection="argmin", quant: Optional[str] = None,
+                 telemetry=None,
                  _force_host_selection: bool = False) -> History:
     """Clients inside a cluster train *in parallel* from the same incoming
     params; the cluster model is the FedAvg of its clients.  Cluster
@@ -675,6 +720,11 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     d_o = data.x0.shape[0]
     d_cl = _count_params(theta[0])
     d_c = cut_width(module, theta[0], data.x0)
+    tel = resolve_telemetry(
+        telemetry if telemetry is not None else pcfg.telemetry,
+        verbose=verbose, run="sfl", engine=engine, placement=placement,
+        prefetch=prefetch, T=pcfg.T, M=pcfg.M, R=pcfg.R,
+        selection=policy.name, fused_selection=fused_selection)
 
     feeder = None
     if engine == "batched" and prefetch > 0:
@@ -687,13 +737,17 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                 rng, _state["key"], data, clusters, pcfg, tm, t)
             return clusters, payload
 
-        feeder = RoundFeeder(_make_round, 0, pcfg.T, depth=prefetch)
+        feeder = RoundFeeder(_make_round, 0, pcfg.T, depth=prefetch,
+                             telemetry=tel)
 
     try:
         for t in range(pcfg.T):
+            tel.profile_tick(t)
             meter = CommMeter()
             if feeder is not None:
-                clusters, prefetched = feeder.get(t)
+                with tel.span("round.feeder_wait", round=t,
+                              depth=feeder.qsize()):
+                    clusters, prefetched = feeder.get(t)
             else:
                 clusters = make_clusters(rng, pcfg.M, pcfg.R)
                 prefetched = None
@@ -704,7 +758,7 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                 key, theta, sel_rec = splitfed_round_accept(
                     module, theta, clusters, data, pcfg, tm, t, rng, key,
                     x0, y0, policy, placement=placement,
-                    prefetched=prefetched)
+                    prefetched=prefetched, telemetry=tel)
                 selected = sel_rec["selected"]
                 val_losses = sel_rec["val_losses"]
                 sel_cluster = clusters[selected]
@@ -714,43 +768,48 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                     key, results = splitfed_round_batched(
                         module, theta, clusters, data, pcfg, tm, t, rng, key,
                         x0, y0, placement=placement, prefetched=prefetched,
-                        with_stats=policy.needs_message_stats)
+                        with_stats=policy.needs_message_stats, telemetry=tel)
                 else:
                     results = []
-                    for cluster in clusters:
-                        gs, ps, sts = [], [], []
-                        for client in cluster:
-                            xs, ys = _sample_batches(rng, data.x[client],
-                                                     data.y[client], pcfg.E,
-                                                     pcfg.B)
-                            key, sub = jax.random.split(key)
-                            a = tm.attack_for(client, t)
-                            if policy.needs_message_stats:
-                                g, p, _, st = client_update_stats(
-                                    module, a, theta[0], theta[1], (xs, ys),
-                                    pcfg.lr, sub, quant=pcfg.comm.quant)
-                                sts.append(np.asarray(st))
-                            else:
-                                g, p, _ = client_update(module, a, theta[0],
-                                                        theta[1], (xs, ys),
-                                                        pcfg.lr, sub,
-                                                        quant=pcfg.comm.quant)
-                            gs.append(g)
-                            ps.append(p)
-                        g_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *gs)
-                        p_avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *ps)
-                        vloss, vacts = validation_loss(module, g_avg, p_avg,
-                                                       x0, y0)
-                        res = dict(gamma=g_avg, phi=p_avg, vacts=vacts,
-                                   vloss=float(vloss), cluster=cluster)
-                        if sts:
-                            res["msg_stats"] = np.stack(sts)
-                        results.append(res)
+                    with tel.span("round.step", round=t):
+                        for cluster in clusters:
+                            gs, ps, sts = [], [], []
+                            for client in cluster:
+                                xs, ys = _sample_batches(rng, data.x[client],
+                                                         data.y[client],
+                                                         pcfg.E, pcfg.B)
+                                key, sub = jax.random.split(key)
+                                a = tm.attack_for(client, t)
+                                if policy.needs_message_stats:
+                                    g, p, _, st = client_update_stats(
+                                        module, a, theta[0], theta[1],
+                                        (xs, ys), pcfg.lr, sub,
+                                        quant=pcfg.comm.quant)
+                                    sts.append(np.asarray(st))
+                                else:
+                                    g, p, _ = client_update(
+                                        module, a, theta[0], theta[1],
+                                        (xs, ys), pcfg.lr, sub,
+                                        quant=pcfg.comm.quant)
+                                gs.append(g)
+                                ps.append(p)
+                            g_avg = jax.tree.map(
+                                lambda *xs: sum(xs) / len(xs), *gs)
+                            p_avg = jax.tree.map(
+                                lambda *xs: sum(xs) / len(xs), *ps)
+                            vloss, vacts = validation_loss(module, g_avg,
+                                                           p_avg, x0, y0)
+                            res = dict(gamma=g_avg, phi=p_avg, vacts=vacts,
+                                       vloss=float(vloss), cluster=cluster)
+                            if sts:
+                                res["msg_stats"] = np.stack(sts)
+                            results.append(res)
                 from ..selection import host_score_context, score_and_rank
-                ctx = host_score_context(policy, module, results, x0, y0)
-                scores, elig, order = score_and_rank(policy, ctx)
-                selected = int(next(c for c in order if elig[c]))
-                theta = res_params(results[selected])
+                with tel.span("round.select", round=t):
+                    ctx = host_score_context(policy, module, results, x0, y0)
+                    scores, elig, order = score_and_rank(policy, ctx)
+                    selected = int(next(c for c in order if elig[c]))
+                    theta = res_params(results[selected])
                 val_losses = [res["vloss"] for res in results]
                 sel_cluster = results[selected]["cluster"]
             account_splitfed_round(meter, pcfg, clusters, d_o, d_c, d_cl)
@@ -760,14 +819,16 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                                                          tm.malicious),
                        comm=dataclasses.asdict(meter))
             if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
-                rec["test_acc"] = evaluate(module, theta[0], theta[1],
-                                           data.x_test, data.y_test,
-                                           pcfg.eval_batch)
+                with tel.span("round.eval", round=t):
+                    rec["test_acc"] = evaluate(module, theta[0], theta[1],
+                                               data.x_test, data.y_test,
+                                               pcfg.eval_batch)
             hist.rounds.append(rec)
-            if verbose:
-                print(f"[sfl] t={t:3d} "
-                      f"acc={rec.get('test_acc', float('nan')):.4f}")
+            tel.record_round(t, rec,
+                             feeder_depth=(feeder.qsize()
+                                           if feeder is not None else None))
     finally:
         if feeder is not None:
             feeder.close()
+        tel.close()
     return hist

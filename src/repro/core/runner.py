@@ -59,6 +59,8 @@ Consumers:
 from __future__ import annotations
 
 import dataclasses
+import time
+import weakref
 from functools import lru_cache
 from typing import Any, Callable, Optional, Tuple
 
@@ -77,6 +79,16 @@ except AttributeError:                  # jax 0.4.x: experimental API
 Pytree = Any
 
 PLACEMENTS = ("vmap", "sharded")
+
+# Live-runner registry for telemetry introspection
+# (``repro.telemetry.metrics.jit_cache_stats``): weak references only, so
+# registration never extends a runner's lifetime past its cache entry.
+_LIVE_RUNNERS: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def live_runners() -> list:
+    """The RoundRunner instances currently alive (telemetry introspection)."""
+    return list(_LIVE_RUNNERS)
 
 
 def check_placement(placement: str) -> None:
@@ -449,6 +461,10 @@ class RoundRunner:
         self.select = ARGMIN if select is None else select
         self.verify = VerifyConfig() if verify is None else verify
         self._jitted: dict = {}
+        # first-call wall time per jitted entry (trace + XLA compile +
+        # first dispatch), read by telemetry's jit_cache_stats
+        self._trace_compile_s: dict = {}
+        _LIVE_RUNNERS.add(self)
 
     # -- pure, traceable bodies (jit / lower externally) --------------------
 
@@ -711,23 +727,35 @@ class RoundRunner:
             self._jitted[which] = fn
         return fn
 
+    def _call(self, which: str, *args):
+        """Invoke a jitted entry, recording the first call's wall time
+        (trace + XLA compile + first dispatch) for telemetry.  Only the
+        monotonic clock is read — no effect on the computation."""
+        fn = self._compiled(which)
+        if which in self._trace_compile_s:
+            return fn(*args)
+        t0 = time.perf_counter()
+        out = fn(*args)
+        self._trace_compile_s[which] = time.perf_counter() - t0
+        return out
+
     def candidates(self, params, inputs, val):
         self._check_executable((self.cluster_axis,))
-        return self._compiled("candidates")(params, inputs, val)
+        return self._call("candidates", params, inputs, val)
 
     def round(self, params, inputs, val):
         self._check_executable((self.cluster_axis,))
-        return self._compiled("round")(params, inputs, val)
+        return self._call("round", params, inputs, val)
 
     def accept(self, params, inputs, val):
         """Fused round acceptance: (committed_params, fetch) — see
         :meth:`accept_fn`."""
         self._check_executable((self.cluster_axis,))
-        return self._compiled("accept")(params, inputs, val)
+        return self._call("accept", params, inputs, val)
 
     def sweep(self, params, inputs, val):
         self._check_executable((self.seed_axis, self.cluster_axis))
-        return self._compiled("sweep")(params, inputs, val)
+        return self._call("sweep", params, inputs, val)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,7 @@ from typing import Any, Callable, Iterator, Optional, Tuple
 import numpy as np
 
 from ..core.protocol import ClientData
+from ..telemetry import NULL_SESSION
 from . import synthetic
 
 
@@ -127,9 +128,10 @@ class RoundFeeder:
     """
 
     def __init__(self, make_round: Callable[[int], Any], start: int, stop: int,
-                 depth: int = 1):
+                 depth: int = 1, telemetry=None):
         self._make_round = make_round
         self._next = start
+        self._tel = NULL_SESSION if telemetry is None else telemetry
         self._thread: Optional[threading.Thread] = None
         if depth <= 0 or stop <= start:
             return
@@ -143,7 +145,8 @@ class RoundFeeder:
     def _produce(self, start: int, stop: int) -> None:
         for t in range(start, stop):
             try:
-                item = (t, self._make_round(t), None)
+                with self._tel.span("feeder.assemble", round=t):
+                    item = (t, self._make_round(t), None)
             except BaseException as e:  # noqa: BLE001 — relayed to consumer
                 item = (t, None, e)
             while not self._stop.is_set():
@@ -170,6 +173,12 @@ class RoundFeeder:
         if got_t != t:
             raise RuntimeError(f"RoundFeeder produced t={got_t}, wanted t={t}")
         return payload
+
+    def qsize(self) -> int:
+        """Assembled rounds currently buffered ahead of the consumer (the
+        telemetry feeder-depth gauge); 0 when running synchronously."""
+        q = getattr(self, "_q", None)
+        return q.qsize() if q is not None and self._thread is not None else 0
 
     def close(self) -> None:
         """Stop the producer; safe to call repeatedly / after exhaustion."""

@@ -21,7 +21,6 @@ inference shapes — proving the "pod" axis shards.
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from typing import Any, Dict, Optional
 
@@ -29,6 +28,7 @@ import jax
 import numpy as np
 
 from ..configs import get_config, list_archs
+from ..telemetry import Stopwatch
 from . import hlo_analysis
 from .mesh import make_production_mesh
 from .roofline import model_flops_for, roofline_terms
@@ -37,14 +37,15 @@ from .steps import apply_shape_settings, input_specs
 
 
 def lower_and_compile(spec, save_hlo: Optional[str] = None) -> Dict[str, Any]:
-    t0 = time.time()
-    jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
-                     out_shardings=spec.out_shardings)
-    lowered = jitted.lower(*spec.args)
-    t_lower = time.time() - t0
-    t0 = time.time()
-    compiled = lowered.compile()
-    t_compile = time.time() - t0
+    # Stopwatch = monotonic perf_counter; time.time() can step under NTP and
+    # produced occasional negative lower/compile durations in CI logs.
+    with Stopwatch() as sw_lower:
+        jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                         out_shardings=spec.out_shardings)
+        lowered = jitted.lower(*spec.args)
+    with Stopwatch() as sw_compile:
+        compiled = lowered.compile()
+    t_lower, t_compile = sw_lower.elapsed, sw_compile.elapsed
     if save_hlo:
         os.makedirs(os.path.dirname(save_hlo), exist_ok=True)
         with open(save_hlo, "w") as f:

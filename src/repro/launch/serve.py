@@ -9,7 +9,6 @@ repro.launch.dryrun)."""
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +17,8 @@ import numpy as np
 from ..configs import get_smoke_config, list_archs
 from ..data import make_markov_tokens
 from ..models import build_model
+from ..telemetry import Stopwatch, Telemetry
+from .steps import instrument_step
 
 
 def main() -> None:
@@ -28,6 +29,8 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a JSONL span trace of every decode step")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -46,22 +49,30 @@ def main() -> None:
         lambda p, c, t, i: model.decode_step(p, c, t, i, memory),
         donate_argnums=(1,))
 
+    tel = None
+    if args.trace:
+        tel = Telemetry(jsonl=args.trace).session(
+            "serve", arch=cfg.name, batch=args.batch,
+            prompt_len=args.prompt_len, new_tokens=args.new_tokens)
+        decode = instrument_step(decode, tel, "serve.decode")
+
     # prefill by stepping the prompt through the decode path
-    t0 = time.time()
-    tok = jnp.asarray(prompts[:, :1])
-    for i in range(args.prompt_len):
-        logits, cache = decode(params, cache, jnp.asarray(prompts[:, i:i+1]), i)
-    generated = []
-    for j in range(args.new_tokens):
-        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-        generated.append(np.asarray(tok))
-        logits, cache = decode(params, cache, tok, args.prompt_len + j)
-    dt = time.time() - t0
+    with Stopwatch() as sw:
+        tok = jnp.asarray(prompts[:, :1])
+        for i in range(args.prompt_len):
+            logits, cache = decode(params, cache, jnp.asarray(prompts[:, i:i+1]), i)
+        generated = []
+        for j in range(args.new_tokens):
+            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+            generated.append(np.asarray(tok))
+            logits, cache = decode(params, cache, tok, args.prompt_len + j)
+    if tel is not None:
+        tel.close()
     gen = np.concatenate(generated, axis=1)
     total_tokens = args.batch * (args.prompt_len + args.new_tokens)
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
           f"new={args.new_tokens}")
-    print(f"throughput: {total_tokens / dt:.1f} tok/s (CPU, smoke scale)")
+    print(f"throughput: {total_tokens / sw.elapsed:.1f} tok/s (CPU, smoke scale)")
     for b in range(min(args.batch, 2)):
         print(f"  sample[{b}]: prompt={prompts[b].tolist()} "
               f"-> {gen[b][:16].tolist()}...")

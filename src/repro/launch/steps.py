@@ -44,6 +44,28 @@ from .shapes import SHAPES, InputShape, shape_settings
 Pytree = Any
 
 
+def instrument_step(fn: Callable, telemetry, name: str) -> Callable:
+    """Wrap a compiled step so every call emits one telemetry span.
+
+    ``telemetry`` is a :class:`repro.telemetry.TelemetrySession` (or None /
+    a null session, in which case ``fn`` is returned untouched — zero
+    overhead when tracing is off).  The span fences on the step's outputs
+    (``block_until_ready``, no transfer), so its duration covers the device
+    execution the async dispatch would otherwise hide."""
+    if telemetry is None or not getattr(telemetry, "enabled", False):
+        return fn
+
+    calls = iter(range(1 << 62))
+
+    def traced(*args, **kwargs):
+        with telemetry.span(name, call=next(calls)) as sp:
+            out = fn(*args, **kwargs)
+            sp.fence(out)
+            return out
+
+    return traced
+
+
 # ---------------------------------------------------------------------------
 # batch spec construction
 # ---------------------------------------------------------------------------

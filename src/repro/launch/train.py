@@ -15,13 +15,13 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 from ..configs import get_smoke_config, list_archs
 from ..core import (Attack, HONEST, ProtocolConfig, from_cnn, from_lm,
                     run_pigeon, run_splitfed, run_vanilla_sl)
 from ..data import build_image_task, build_lm_task
 from ..models import build_model
+from ..telemetry import Stopwatch, Telemetry
 
 
 def main() -> None:
@@ -46,6 +46,11 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a JSONL telemetry trace (spans + per-round "
+                         "metrics + provenance) to PATH")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of round 1 into DIR")
     args = ap.parse_args()
 
     if args.task:
@@ -69,19 +74,26 @@ def main() -> None:
                           seed=args.seed)
     attack = HONEST if args.attack == "none" else Attack(args.attack)
     malicious = set(range(args.malicious))
+    telemetry = None
+    if args.trace or args.profile_dir:
+        telemetry = Telemetry(jsonl=args.trace, profile_dir=args.profile_dir)
 
-    t0 = time.time()
-    if args.protocol == "vanilla":
-        hist = run_vanilla_sl(module, data, pcfg, malicious, attack, verbose=True)
-    elif args.protocol == "sfl":
-        hist = run_splitfed(module, data, pcfg, malicious, attack, verbose=True)
-    else:
-        hist = run_pigeon(module, data, pcfg, malicious, attack,
-                          plus=args.protocol == "pigeon+", verbose=True)
-    dt = time.time() - t0
+    with Stopwatch() as sw:
+        if args.protocol == "vanilla":
+            hist = run_vanilla_sl(module, data, pcfg, malicious, attack,
+                                  verbose=True, telemetry=telemetry)
+        elif args.protocol == "sfl":
+            hist = run_splitfed(module, data, pcfg, malicious, attack,
+                                verbose=True, telemetry=telemetry)
+        else:
+            hist = run_pigeon(module, data, pcfg, malicious, attack,
+                              plus=args.protocol == "pigeon+", verbose=True,
+                              telemetry=telemetry)
     final = hist.rounds[-1].get("test_acc")
     print(f"done: {args.protocol} rounds={args.rounds} "
-          f"final_test_acc={final} wall={dt:.1f}s")
+          f"final_test_acc={final} wall={sw.elapsed:.1f}s")
+    if args.trace:
+        print(f"telemetry trace: {args.trace}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(hist.rounds, f, indent=1, default=str)

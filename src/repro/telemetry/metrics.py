@@ -1,0 +1,110 @@
+"""Metrics registry: per-round gauges and run-cumulative counters.
+
+The registry is deliberately host-only and fetch-free: every value it
+records arrives as a plain Python number that the drivers *already* pulled
+from the device — the fused batched path's single stacked host fetch
+(``repro.selection.unpack_fetch``) plus the engine-independent CommMeter
+accounting.  Recording metrics therefore adds zero device→host syncs; the
+bit-identity contract (telemetry on == telemetry off) holds structurally.
+
+``round_gauges`` maps one driver History record + CommMeter into the
+per-round gauge dict the session emits; ``jit_cache_stats`` snapshots the
+protocol layer's compiled-program caches (how many distinct round programs
+exist, and how often the runner caches hit — jit cache hits mean the round
+re-used a compiled program instead of re-tracing).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+
+class MetricsRegistry:
+    """Counters accumulate across the run; gauges hold the latest value.
+    Both are plain floats/ints keyed by dotted names."""
+
+    def __init__(self) -> None:
+        self.counters: Dict[str, float] = {}
+        self.gauges: Dict[str, float] = {}
+
+    def inc(self, name: str, value: float = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + value
+
+    def set(self, name: str, value: float) -> None:
+        self.gauges[name] = value
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"counters": dict(self.counters), "gauges": dict(self.gauges)}
+
+    def observe_round(self, rec: Dict[str, Any]) -> None:
+        """Fold one driver round record into the cumulative counters."""
+        self.inc("rounds")
+        if rec.get("accepted", True):
+            self.inc("rounds_accepted")
+        self.inc("detections", int(rec.get("detections", 0)))
+        if rec.get("selected_honest"):
+            self.inc("honest_selections")
+
+
+_ROUND_FIELDS = ("selected", "accepted", "detections", "selected_honest",
+                 "honest_cluster_exists", "test_acc", "train_loss",
+                 "val_losses", "train_losses")
+
+
+def round_gauges(rec: Dict[str, Any],
+                 feeder_depth: Optional[int] = None) -> Dict[str, Any]:
+    """Per-round gauges out of a driver History record: validation losses,
+    selected cluster, detections/accepted/honesty, the CommMeter float+byte
+    deltas (the per-round meter IS the delta — drivers reset it each round)
+    and the feeder queue depth.  Values are the Python scalars the drivers
+    already fetched; nothing here touches a device array."""
+    out: Dict[str, Any] = {}
+    for k in _ROUND_FIELDS:
+        if k in rec:
+            out[k] = rec[k]
+    if "comm" in rec:
+        out["comm"] = dict(rec["comm"])
+    if feeder_depth is not None:
+        out["feeder_depth"] = int(feeder_depth)
+    return out
+
+
+def jit_cache_stats() -> Dict[str, Any]:
+    """Snapshot of the protocol layer's compiled-program caches:
+
+    * ``runner_cache_hits``/``misses`` — the lru-cached runner factories
+      (hits = rounds that re-used an existing RoundRunner instead of
+      building and re-tracing one);
+    * ``runners`` / ``programs`` / ``program_signatures`` — live RoundRunner
+      instances, their jitted entry points, and the total compiled-signature
+      count across them (``jitted._cache_size``);
+    * ``trace_compile_s`` — summed first-call wall time of every jitted
+      entry (trace + XLA compile; the runner records it once per program).
+
+    Purely host-side introspection — safe to call every round."""
+    from ..core import engine as _engine
+    from ..core import runner as _runner
+    stats: Dict[str, Any] = {}
+    hits = misses = 0
+    for fac in (_runner.protocol_runner, _runner.protocol_accept_runner,
+                _engine.splitfed_runner, _engine.splitfed_accept_runner):
+        info = fac.cache_info()
+        hits += info.hits
+        misses += info.misses
+    stats["runner_cache_hits"] = hits
+    stats["runner_cache_misses"] = misses
+    runners = programs = signatures = 0
+    compile_s = 0.0
+    for r in _runner.live_runners():
+        runners += 1
+        programs += len(r._jitted)
+        for f in r._jitted.values():
+            try:
+                signatures += f._cache_size()
+            except (AttributeError, TypeError):
+                pass
+        compile_s += sum(r._trace_compile_s.values())
+    stats["runners"] = runners
+    stats["programs"] = programs
+    stats["program_signatures"] = signatures
+    stats["trace_compile_s"] = round(compile_s, 6)
+    return stats

@@ -1,0 +1,71 @@
+"""Opt-in ``jax.profiler`` trace hooks.
+
+Span timings answer *where a round's wall-clock goes*; the XLA profiler
+answers *what the device did inside the step*.  The hook is deliberately
+windowed — profiling every round of a long run produces gigabytes of trace
+— and failure-tolerant: a missing profiler backend (no tensorboard plugin,
+unsupported platform) degrades to a warning once, never an exception, so a
+``Telemetry(profile_dir=...)`` config can be left in place on machines that
+cannot profile.
+
+Drivers call :meth:`ProfileHook.tick` once at the top of every round; the
+hook starts the trace when the window opens and stops it when the window
+closes (or on :meth:`close`, for runs shorter than the window).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Tuple
+
+
+DEFAULT_WINDOW = (1, 2)   # profile round 1 only: steady state, post-compile
+
+
+class ProfileHook:
+    """Round-windowed ``jax.profiler`` trace: profiles rounds ``t`` with
+    ``start <= t < stop`` into ``trace_dir``.  ``rounds=None`` uses
+    :data:`DEFAULT_WINDOW` — round 1 only, skipping round 0's trace/compile
+    so the trace shows the steady-state program."""
+
+    def __init__(self, trace_dir: str,
+                 rounds: Optional[Tuple[int, int]] = None):
+        self.trace_dir = trace_dir
+        self.start, self.stop = rounds if rounds is not None else DEFAULT_WINDOW
+        self._running = False
+        self._broken = False
+
+    def tick(self, t: int) -> None:
+        """Advance the window to round ``t`` (called once per round, at the
+        top, before any device work for the round is dispatched)."""
+        if self._broken:
+            return
+        if self._running and t >= self.stop:
+            self._stop()
+        if not self._running and self.start <= t < self.stop:
+            self._start()
+
+    def _start(self) -> None:
+        try:
+            import jax
+            jax.profiler.start_trace(self.trace_dir)
+            self._running = True
+        except Exception as e:  # noqa: BLE001 — profiling is best-effort
+            self._broken = True
+            warnings.warn(f"telemetry: jax.profiler trace unavailable "
+                          f"({type(e).__name__}: {e}); profiling disabled "
+                          f"for this run", stacklevel=3)
+
+    def _stop(self) -> None:
+        try:
+            import jax
+            jax.profiler.stop_trace()
+        except Exception as e:  # noqa: BLE001
+            self._broken = True
+            warnings.warn(f"telemetry: jax.profiler stop_trace failed "
+                          f"({type(e).__name__}: {e})", stacklevel=3)
+        finally:
+            self._running = False
+
+    def close(self) -> None:
+        if self._running:
+            self._stop()

@@ -1,0 +1,74 @@
+"""Run provenance: the environment stamp carried by every telemetry trace
+and benchmark JSON.
+
+A benchmark number or a JSONL trace without the software/hardware context
+that produced it cannot be compared across commits — perf trajectories in
+``experiments/`` span many PRs and (eventually) many machines.  The stamp
+records the jax/jaxlib versions, the backend and device kind, host CPU
+count, the repo's git revision and a timestamp; everything degrades to
+``None`` rather than raising, so provenance can never break a run.
+"""
+from __future__ import annotations
+
+import os
+import platform
+import subprocess
+import sys
+import time
+from functools import lru_cache
+from typing import Any, Dict, Optional
+
+
+@lru_cache(maxsize=1)
+def _git_sha() -> Optional[str]:
+    """Repo revision (with a ``-dirty`` suffix when the tree has local
+    modifications); None outside a git checkout or without git."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root, capture_output=True,
+            text=True, timeout=5, check=True).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=root, capture_output=True,
+            text=True, timeout=5, check=True).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+@lru_cache(maxsize=1)
+def _static_provenance() -> Dict[str, Any]:
+    out: Dict[str, Any] = {
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+        "git_sha": _git_sha(),
+    }
+    try:
+        import jax
+        out["jax"] = jax.__version__
+        try:
+            import jaxlib
+            out["jaxlib"] = jaxlib.version.__version__
+        except (ImportError, AttributeError):
+            out["jaxlib"] = None
+        out["backend"] = jax.default_backend()
+        devs = jax.devices()
+        out["device_kind"] = devs[0].device_kind if devs else None
+        out["device_count"] = len(devs)
+    except Exception:  # noqa: BLE001 — provenance must never break a run
+        out.setdefault("jax", None)
+    return out
+
+
+def provenance(**extra: Any) -> Dict[str, Any]:
+    """The environment stamp: jax/jaxlib versions, backend + device kind,
+    cpu count, git sha and timestamp (both epoch seconds and UTC ISO).  The
+    expensive lookups are cached; the timestamp is fresh per call."""
+    out = dict(_static_provenance())
+    now = time.time()
+    out["timestamp"] = now
+    out["timestamp_utc"] = time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                         time.gmtime(now))
+    out.update(extra)
+    return out
