@@ -16,7 +16,12 @@ def main() -> None:
                     help="paper-scale Table II parameters (hours on CPU)")
     ap.add_argument("--only", default=None,
                     help="table1|fig3|fig4|fig5|ablation|roofline|robustness|"
-                         "robustness_quant|pipeline|placements")
+                         "robustness_quant|pipeline|placements|fusion")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="enable JAX's persistent compilation cache in DIR "
+                         "(default: $REPRO_COMPILE_CACHE if set); repeated "
+                         "grid cells and re-runs then load compiled round "
+                         "programs from disk instead of re-compiling")
     ap.add_argument("--selection", default=None,
                     help="comma-separated selection policies for the "
                          "robustness matrix's policy axis (default: "
@@ -30,6 +35,9 @@ def main() -> None:
                          "per-round metrics + provenance) of the table1 "
                          "accounting runs to PATH")
     args = ap.parse_args()
+
+    from repro.core import enable_compile_cache
+    enable_compile_cache(args.compile_cache)   # no-op when dir/env unset
 
     telemetry = None
     if args.trace:
@@ -64,7 +72,8 @@ def main() -> None:
 
     from . import (ablation_shared_set, fig3_mnist_attacks, fig4_cifar_attacks,
                    fig5_fig6_vary_n, pipeline_overlap, placement_grid,
-                   robustness_matrix, roofline_report, table1_overhead)
+                   robustness_matrix, roofline_report, round_fusion,
+                   table1_overhead)
 
     benches = {
         "table1": lambda: table1_overhead.run(args.full, telemetry=telemetry),
@@ -84,6 +93,7 @@ def main() -> None:
             else robustness_matrix.DEFAULT_QUANT_FORMATS),
         "pipeline": lambda: pipeline_overlap.run(args.full),
         "placements": lambda: placement_grid.run(args.full),
+        "fusion": lambda: round_fusion.run(args.full),
     }
     if args.only and args.only not in benches:
         # an unknown name used to silently skip every benchmark and exit 0

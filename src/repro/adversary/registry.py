@@ -27,6 +27,7 @@ plus the host-side ``params`` hook for handoff tampering (Section III-C).
 from __future__ import annotations
 
 import dataclasses
+from functools import lru_cache
 from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence
 
 import jax
@@ -242,14 +243,27 @@ def _slot_lanes(attack: Attack) -> Dict[str, float]:
     return lanes
 
 
-def attack_vec_grid(grid: Sequence[Sequence[Attack]]) -> AttackVec:
-    """Compile an (R, M_bar) grid of per-slot specs (already
-    schedule-scaled; HONEST for honest slots) into one AttackVec."""
+@lru_cache(maxsize=512)
+def _attack_vec_grid_cached(grid: tuple) -> AttackVec:
     slots = [[_slot_lanes(a) for a in row] for row in grid]
     return AttackVec(**{
         name: jnp.asarray(np.array([[s[name] for s in row] for row in slots],
                                    dtype=_LANE_DTYPES[name]))
         for name in AttackVec._fields})
+
+
+def attack_vec_grid(grid: Sequence[Sequence[Attack]]) -> AttackVec:
+    """Compile an (R, M_bar) grid of per-slot specs (already
+    schedule-scaled; HONEST for honest slots) into one AttackVec.
+
+    Memoised on the spec grid: an honest or statically-malicious population
+    re-derives the SAME grid every round (scheduled strengths land in the
+    ``Attack`` specs, so time-varying threat models key distinct entries),
+    and compiling it costs one small host->device transfer per AttackVec
+    lane — measurably the single most expensive piece of per-round host
+    assembly.  The cached device arrays are round inputs, never donated, so
+    sharing them across rounds is safe."""
+    return _attack_vec_grid_cached(tuple(tuple(row) for row in grid))
 
 
 def attack_vec(attack: Attack, active) -> AttackVec:

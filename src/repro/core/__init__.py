@@ -20,6 +20,7 @@ from .attacks import (ACTIVATION, GRADIENT, HONEST, KINDS, LABEL_FLIP, NONE,
 from .clustering import cluster_is_honest, has_honest_cluster, make_clusters
 from .comm import (QUANT_FORMATS, CommConfig, fp8_supported, message_bytes,
                    resolve_quant)
+from .compile_cache import compile_cache_stats, enable_compile_cache
 from .engine import (batched_round, onehot_select, run_pigeon_sweep,
                      train_round_batched)
 from .protocol import (ENGINES, ClientData, CommMeter, History, ProtocolConfig,
@@ -43,6 +44,7 @@ __all__ = [
     "make_clusters", "has_honest_cluster", "cluster_is_honest",
     "ClientData", "CommMeter", "CommConfig", "QUANT_FORMATS", "fp8_supported",
     "message_bytes", "resolve_quant", "History", "ProtocolConfig", "ENGINES",
+    "enable_compile_cache", "compile_cache_stats",
     "Telemetry",
     "run_pigeon", "run_pigeon_plus", "run_splitfed", "run_vanilla_sl",
     "run_pigeon_sweep", "batched_round", "train_round_batched", "onehot_select",

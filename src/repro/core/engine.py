@@ -57,24 +57,35 @@ Pytree = Any
 
 def assemble_round_batches(rng: np.random.Generator, data: ClientData,
                            clusters: Sequence[Sequence[int]],
-                           pcfg: ProtocolConfig
+                           pcfg: ProtocolConfig, out=None
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sample every client's (E, B) mini-batches for the round, consuming the
     numpy RNG in the sequential engine's order (cluster-major, then client),
     stacked to (R, M_bar, E, B, ...).  Each gather writes straight into one
     preallocated per-round buffer (``np.take(..., out=...)``), so the host
     pays a single copy per sample instead of the old per-cluster
-    ``np.stack`` followed by another stack + device conversion."""
+    ``np.stack`` followed by another stack + device conversion.
+
+    ``out=(xs_view, ys_view)`` writes into caller-provided numpy buffers and
+    returns them WITHOUT the device conversion — the round-block assemblers
+    pass per-round views of one (K, R, M_bar, ...) block buffer so a K-round
+    block pays a single host->device transfer instead of K stacks of
+    already-transferred rounds."""
     r, m_bar = len(clusters), len(clusters[0])
-    xs = np.empty((r, m_bar, pcfg.E, pcfg.B) + data.x.shape[2:],
-                  dtype=data.x.dtype)
-    ys = np.empty((r, m_bar, pcfg.E, pcfg.B) + data.y.shape[2:],
-                  dtype=data.y.dtype)
+    if out is None:
+        xs = np.empty((r, m_bar, pcfg.E, pcfg.B) + data.x.shape[2:],
+                      dtype=data.x.dtype)
+        ys = np.empty((r, m_bar, pcfg.E, pcfg.B) + data.y.shape[2:],
+                      dtype=data.y.dtype)
+    else:
+        xs, ys = out
     for i, cluster in enumerate(clusters):
         for j, client in enumerate(cluster):
             idx = sample_batch_idx(rng, data.x[client].shape[0], pcfg.E, pcfg.B)
             np.take(data.x[client], idx, axis=0, out=xs[i, j])
             np.take(data.y[client], idx, axis=0, out=ys[i, j])
+    if out is not None:
+        return xs, ys
     return jnp.asarray(xs), jnp.asarray(ys)
 
 
@@ -104,14 +115,16 @@ def round_client_keys(key: jax.Array, clusters: Sequence[Sequence[int]]
 
 def assemble_round(rng: np.random.Generator, key: jax.Array, data: ClientData,
                    clusters: Sequence[Sequence[int]], pcfg: ProtocolConfig,
-                   tm: ThreatModel, t: int):
+                   tm: ThreatModel, t: int, out=None):
     """One round's complete host-side payload: stacked batches, derived
     per-client keys and the round's AttackVec.  THE single copy of the
-    RNG/key consumption order — both the synchronous path and the
-    RoundFeeder's background thread call this, so the bit-identical
-    prefetch-on/off contract is structural rather than test-enforced.
+    RNG/key consumption order — the synchronous path, the RoundFeeder's
+    background thread AND the round-block assembler all call this, so the
+    bit-identical prefetch-on/off and block-on/off contracts are structural
+    rather than test-enforced.  ``out`` is forwarded to
+    :func:`assemble_round_batches` (block-buffer views).
     Returns (advanced_key, (xs, ys, avec, keys))."""
-    xs, ys = assemble_round_batches(rng, data, clusters, pcfg)
+    xs, ys = assemble_round_batches(rng, data, clusters, pcfg, out=out)
     key, keys = round_client_keys(key, clusters)
     avec = tm.attack_vec_for_clusters(clusters, t)
     return key, (xs, ys, avec, keys)
@@ -388,14 +401,16 @@ def splitfed_keys(key: jax.Array, clusters: Sequence[Sequence[int]]
 def assemble_splitfed_round(rng: np.random.Generator, key: jax.Array,
                             data: ClientData,
                             clusters: Sequence[Sequence[int]],
-                            pcfg: ProtocolConfig, tm: ThreatModel, t: int):
+                            pcfg: ProtocolConfig, tm: ThreatModel, t: int,
+                            out=None):
     """One SplitFed round's host-side payload, consuming the numpy RNG and
     the key stream in the sequential loop's order (cluster-major batch
     sampling; one key split per client, no per-cluster sub-stream).  SplitFed
     sampling never depends on the previous round's selection, so the
     RoundFeeder can run this at any depth — no phase-boundary fallback.
-    Returns (advanced_key, (xs, ys, avec, keys))."""
-    xs, ys = assemble_round_batches(rng, data, clusters, pcfg)
+    ``out`` is forwarded to :func:`assemble_round_batches` (block-buffer
+    views).  Returns (advanced_key, (xs, ys, avec, keys))."""
+    xs, ys = assemble_round_batches(rng, data, clusters, pcfg, out=out)
     key, keys = splitfed_keys(key, clusters)
     avec = tm.attack_vec_for_clusters(clusters, t)
     return key, (xs, ys, avec, keys)
@@ -469,6 +484,153 @@ def splitfed_round_accept(module: SplitModule, theta, clusters,
 
 
 # ---------------------------------------------------------------------------
+# round-block execution: K host-assembled rounds, one scanned device program
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _stack_tree(payloads):
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *payloads)
+
+
+def stack_payloads(payloads):
+    """Stack K per-round payload pytrees along a new leading round axis —
+    the xs of the RoundRunner's ``lax.scan`` block entries (step i slices
+    back exactly round i's payload).  Jitted so the whole pytree stacks in
+    ONE dispatch (an eager per-leaf ``jnp.stack`` costs a dispatch per leaf,
+    which at small per-round compute eats the fusion win)."""
+    return _stack_tree(tuple(payloads))
+
+
+def assemble_block(rng: np.random.Generator, key: jax.Array, data: ClientData,
+                   pcfg: ProtocolConfig, tm: ThreatModel, t0: int, k: int):
+    """Host-side payload for a K-round block starting at round ``t0``:
+    cluster partitions, stacked mini-batches, derived per-client keys and
+    attack state for rounds ``t0 .. t0+k-1``, stacked to a leading K axis.
+
+    Consumes the numpy RNG and the JAX key stream in EXACTLY the synchronous
+    per-round order — for each round in turn: the cluster partition draw,
+    then that round's :func:`assemble_round` — so after assembly both streams
+    sit precisely where the per-round loop would leave them at the end of
+    round ``t0+k-1``.  (The fused acceptance path splits no keys after
+    assembly, which is why a single post-block stream snapshot gives the
+    same crash-atomic resume semantics as per-round checkpoints.)
+
+    Returns ``(advanced_key, clusters_k, block_inputs)`` where ``clusters_k``
+    is the K per-round cluster partitions (the host replay needs them for
+    History/honesty/CommMeter bookkeeping)."""
+    return _assemble_block_with(assemble_round, rng, key, data, pcfg, tm,
+                                t0, k)
+
+
+def assemble_splitfed_block(rng: np.random.Generator, key: jax.Array,
+                            data: ClientData, pcfg: ProtocolConfig,
+                            tm: ThreatModel, t0: int, k: int):
+    """SplitFed variant of :func:`assemble_block` (cluster-major batch
+    sampling, one key split per client — see
+    :func:`assemble_splitfed_round`)."""
+    return _assemble_block_with(assemble_splitfed_round, rng, key, data,
+                                pcfg, tm, t0, k)
+
+
+def _assemble_block_with(assemble_one, rng: np.random.Generator,
+                         key: jax.Array, data: ClientData,
+                         pcfg: ProtocolConfig, tm: ThreatModel,
+                         t0: int, k: int):
+    """Shared K-round assembly: the mini-batches of all K rounds are gathered
+    into ONE preallocated (K, R, M_bar, E, B, ...) host buffer (per-round
+    ``out=`` views of it), so the block pays a single host->device transfer
+    instead of K transfers followed by a device-side re-stack; the small
+    leaves (AttackVec state, per-client keys) are stacked on device."""
+    m_bar = pcfg.M // pcfg.R
+    xs_k = np.empty((k, pcfg.R, m_bar, pcfg.E, pcfg.B) + data.x.shape[2:],
+                    dtype=data.x.dtype)
+    ys_k = np.empty((k, pcfg.R, m_bar, pcfg.E, pcfg.B) + data.y.shape[2:],
+                    dtype=data.y.dtype)
+    clusters_k, small = [], []
+    for i in range(k):
+        clusters = make_clusters(rng, pcfg.M, pcfg.R)
+        key, (_, _, avec, keys) = assemble_one(rng, key, data, clusters,
+                                               pcfg, tm, t0 + i,
+                                               out=(xs_k[i], ys_k[i]))
+        clusters_k.append(clusters)
+        small.append((avec, keys))
+    avec_k, keys_k = stack_payloads(small)
+    return key, clusters_k, (jnp.asarray(xs_k), jnp.asarray(ys_k),
+                             avec_k, keys_k)
+
+
+def pigeon_block_accept(module: SplitModule, theta, clusters_k,
+                        pcfg: ProtocolConfig, tm: ThreatModel, t0: int,
+                        block_inputs, x0, y0, policy, placement: str = "vmap",
+                        telemetry=None):
+    """K consecutive fused acceptance rounds as ONE compiled ``lax.scan``
+    program with a single stacked ``(K, 2R+3)`` host fetch — the round-block
+    variant of :func:`pigeon_round_accept`.  Returns ``(theta_next,
+    records)`` with one per-round record dict (the History fields:
+    val_losses / train_losses / selected / detections / accepted) per
+    scanned round.
+
+    Unlike the per-round path, NO CommMeter accounting happens here: the
+    driver replays client turns, validation pushes, tamper re-checks and the
+    winner broadcast per round from ``records`` + ``clusters_k`` (the counts
+    are analytic in the record fields, so the replay is bit-identical to
+    per-round metering by construction).  Same precondition as the per-round
+    accept: no param-tamper threat models (those are host-sequenced and pin
+    ``block=1``)."""
+    from ..selection import unpack_block_fetch
+    assert not tm.has_param_tamper, \
+        "param-tamper threat models must use the host selection cascade"
+    tel = NULL_SESSION if telemetry is None else telemetry
+    runner = protocol_accept_runner(module, pcfg.lr, placement, policy,
+                                    pcfg.tamper_check, pcfg.tamper_tol,
+                                    quant=pcfg.comm.quant)
+    k = len(clusters_k)
+    with tel.span("block.step", round=t0, k=k) as sp:
+        theta_next, fetches = runner.accept_block(theta, block_inputs,
+                                                  (x0, y0))
+        sp.fence(fetches)
+    with tel.span("block.fetch", round=t0, k=k):
+        fetched = np.asarray(fetches)          # the block's ONE host sync
+    records = []
+    for vlosses, tlosses, selected, detections, accepted in \
+            unpack_block_fetch(fetched, len(clusters_k[0])):
+        records.append(dict(val_losses=[float(v) for v in vlosses],
+                            train_losses=[float(v) for v in tlosses],
+                            selected=selected, detections=detections,
+                            accepted=accepted))
+    return theta_next, records
+
+
+def splitfed_block_accept(module: SplitModule, theta, clusters_k,
+                          pcfg: ProtocolConfig, t0: int, block_inputs, x0, y0,
+                          policy, placement: str = "vmap", telemetry=None):
+    """SplitFed round-block: K FedAvg + selection-cascade rounds as one
+    scanned program, one stacked fetch — the block variant of
+    :func:`splitfed_round_accept` (verify stage off: no chained handoff).
+    Accounting is the driver's analytic per-round replay
+    (``account_splitfed_round``), exactly as in per-round mode."""
+    from ..selection import unpack_block_fetch
+    tel = NULL_SESSION if telemetry is None else telemetry
+    runner = splitfed_accept_runner(module, pcfg.lr, placement, policy,
+                                    quant=pcfg.comm.quant)
+    k = len(clusters_k)
+    with tel.span("block.step", round=t0, k=k) as sp:
+        theta_next, fetches = runner.accept_block(theta, block_inputs,
+                                                  (x0, y0))
+        sp.fence(fetches)
+    with tel.span("block.fetch", round=t0, k=k):
+        fetched = np.asarray(fetches)
+    records = []
+    for vlosses, tlosses, selected, detections, accepted in \
+            unpack_block_fetch(fetched, len(clusters_k[0])):
+        records.append(dict(val_losses=[float(v) for v in vlosses],
+                            train_losses=[float(v) for v in tlosses],
+                            selected=selected, detections=detections,
+                            accepted=accepted))
+    return theta_next, records
+
+
+# ---------------------------------------------------------------------------
 # multi-seed sweep: whole protocol replicas over (seed, cluster)
 # ---------------------------------------------------------------------------
 
@@ -520,7 +682,7 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
                      threat_model: Optional[ThreatModel] = None,
                      selection="argmin",
                      quant: Optional[str] = None,
-                     telemetry=None) -> List[History]:
+                     telemetry=None, block: int = 1) -> List[History]:
     """S whole Pigeon-SL replicas (different seeds) advanced in lockstep: one
     compiled call per global round trains S x R clusters and performs the
     per-seed argmin selection on device.  ``placement="vmap"`` runs the
@@ -537,11 +699,20 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
     (heterogeneous mixtures and schedules included).  Returns one
     ``History`` per seed (CommMeter accounting is analytic and identical
     across seeds).
+
+    ``block > 1`` chains up to ``block`` consecutive global rounds as one
+    scanned device program with a single stacked host fetch per block
+    (:meth:`repro.core.runner.RoundRunner.sweep_block`); blocks break at
+    eval sync rounds (``pcfg.eval_every``) so per-seed evaluation still sees
+    every required intermediate state, and the per-round Histories replayed
+    from the block fetch are bit-identical to ``block=1``.
     """
     from ..selection import resolve_policy
     from .comm import CommConfig
+    from .protocol import check_block
     from .runner import check_placement
     check_placement(placement)
+    block = check_block(block, "batched", eval_every=pcfg.eval_every)
     if quant is not None:
         pcfg = dataclasses.replace(pcfg, comm=CommConfig(quant=quant))
     policy = resolve_policy(selection)
@@ -566,6 +737,101 @@ def run_pigeon_sweep(module: SplitModule, data: ClientData, pcfg: ProtocolConfig
     tel = resolve_telemetry(telemetry, run="sweep", placement=placement,
                             T=pcfg.T, M=pcfg.M, R=pcfg.R, seeds=list(seeds),
                             selection=policy.name)
+
+    if block > 1:
+        # Round-block execution: chain K global rounds as one scanned sweep
+        # program (RoundRunner.sweep_block) with a single stacked host fetch,
+        # then replay the per-seed History records from it.  Per-round
+        # assembly order per seed (cluster draw, then batches/keys) is
+        # preserved exactly, so the trajectories are bit-identical to
+        # block=1.
+        from ..data.pipeline import plan_blocks
+        runner = protocol_runner(module, pcfg.lr, placement,
+                                 policy.needs_message_stats, policy,
+                                 pcfg.comm.quant)
+        segments = plan_blocks(0, pcfg.T, block,
+                               lambda t: (t % pcfg.eval_every == 0
+                                          or t == pcfg.T - 1))
+        try:
+            for t0, k in segments:
+                tel.profile_tick(t0)
+                with tel.span("block.assemble", round=t0, k=k):
+                    clusters_sk, payloads = [], []
+                    for i in range(k):
+                        clusters_s = [make_clusters(rngs[j], pcfg.M, pcfg.R)
+                                      for j in range(len(seeds))]
+                        xs, ys, key_rows, avecs = [], [], [], []
+                        for j in range(len(seeds)):
+                            keys[j], (x_j, y_j, avec_j, krow) = assemble_round(
+                                rngs[j], keys[j], data, clusters_s[j], pcfg,
+                                tm, t0 + i)
+                            xs.append(x_j)
+                            ys.append(y_j)
+                            key_rows.append(krow)
+                            avecs.append(avec_j)
+                        avec = jax.tree.map(lambda *ls: jnp.stack(ls), *avecs)
+                        payloads.append((jnp.stack(xs), jnp.stack(ys), avec,
+                                         jnp.stack(key_rows)))
+                        clusters_sk.append(clusters_s)
+                    block_inputs = stack_payloads(payloads)
+                with tel.span("block.step", round=t0, k=k) as sp:
+                    thetas, (vl_k, tl_k, sels_k) = runner.sweep_block(
+                        thetas, block_inputs, (x0, y0))
+                    sp.fence(sels_k)
+                with tel.span("block.fetch", round=t0, k=k):
+                    vl_k = np.asarray(vl_k)      # (K, S, R)
+                    tl_k = np.asarray(tl_k)      # (K, S, R)
+                    sels_k = np.asarray(sels_k)  # (K, S)
+                gammas, phis = thetas
+                for i in range(k):
+                    t = t0 + i
+                    clusters_s = clusters_sk[i]
+                    meter = CommMeter()
+                    for cluster in clusters_s[0]:
+                        for j in range(len(cluster)):
+                            account_client_turn(meter, pcfg, d_c, d_cl,
+                                                handoff=j < len(cluster) - 1)
+                        account_validation(meter, d_o, d_c)
+                    if pcfg.tamper_check:
+                        account_handoff_recheck(meter, pcfg, d_o, d_c,
+                                                visited=1)
+                    account_param_transfer(meter, pcfg.R * d_cl)
+                    accs = None
+                    if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+                        # plan_blocks ends every block at an eval sync round,
+                        # so thetas here is exactly the post-round-t state
+                        with tel.span("round.eval", round=t):
+                            accs = evaluate_sweep(module, gammas, phis,
+                                                  data.x_test, data.y_test,
+                                                  pcfg.eval_batch)
+                    for j in range(len(seeds)):
+                        sel = int(sels_k[i][j])
+                        rec = dict(
+                            round=t,
+                            clusters=clusters_s[j],
+                            val_losses=[float(v) for v in vl_k[i][j]],
+                            train_losses=[float(v) for v in tl_k[i][j]],
+                            selected=sel,
+                            selected_honest=cluster_is_honest(
+                                clusters_s[j][sel], tm.malicious),
+                            honest_cluster_exists=any(
+                                cluster_is_honest(c, tm.malicious)
+                                for c in clusters_s[j]),
+                            comm=dataclasses.asdict(meter),
+                        )
+                        if accs is not None:
+                            rec["test_acc"] = float(accs[j])
+                        hists[j].rounds.append(rec)
+                        tel.record_round(t, rec, seed=seeds[j])
+                    if verbose:
+                        acc_str = ("" if accs is None
+                                   else " acc=" + "/".join(f"{a:.3f}"
+                                                           for a in accs))
+                        print(f"[sweep] t={t:3d} sel={sels_k[i].tolist()}"
+                              f"{acc_str}")
+        finally:
+            tel.close()
+        return hists
 
     try:
         for t in range(pcfg.T):

@@ -146,6 +146,64 @@ def _check_engine(engine: str, placement: str = "vmap",
                          f"(the sequential oracle assembles per client turn)")
 
 
+def check_block(block: int, engine: str = "batched", *, plus: bool = False,
+                has_param_tamper: bool = False,
+                force_host_selection: bool = False, eval_every: int = 1,
+                checkpoint_path: Optional[str] = None,
+                checkpoint_every: int = 1) -> int:
+    """Validate the round-block knobs up front (mirroring
+    :func:`_check_engine`) and return the *effective* block size.
+
+    Impossible combinations raise; the forced-per-round cases — Pigeon-SL+
+    sub-round sampling and param-tamper handoff key splits, where the data
+    for round t+1 depends on round t's selection — warn and degrade to
+    ``block=1`` so callers can thread ``block=`` unconditionally, exactly as
+    ``prefetch`` degrades to synchronous assembly at the same phase
+    boundaries.  Sync-cadence degradations (``eval_every=1`` /
+    ``checkpoint_every=1`` make every round a host sync point, so blocks
+    shrink back to single rounds) keep the requested block but warn, since
+    they silently erase the fusion win."""
+    import warnings
+    if block < 1:
+        raise ValueError(f"block={block} must be >= 1")
+    if checkpoint_every < 1:
+        raise ValueError(f"checkpoint_every={checkpoint_every} must be >= 1")
+    if block == 1:
+        return 1
+    if engine != "batched":
+        raise ValueError(
+            f"block={block} requires engine='batched' (the sequential "
+            f"oracle dispatches per client turn and cannot scan rounds)")
+    if plus:
+        warnings.warn(
+            f"block={block} forced to 1: Pigeon-SL+ sub-rounds sample the "
+            f"previous round's selected cluster, so round t+1's host "
+            f"assembly cannot run before round t's selection", stacklevel=3)
+        return 1
+    if has_param_tamper:
+        warnings.warn(
+            f"block={block} forced to 1: param-tamper threat models split "
+            f"the protocol key per visited candidate during host-side "
+            f"selection, which is inherently per-round", stacklevel=3)
+        return 1
+    if force_host_selection:
+        warnings.warn(
+            f"block={block} forced to 1: the host-side reference cascade "
+            f"needs every round's candidates on the host", stacklevel=3)
+        return 1
+    if eval_every == 1:
+        warnings.warn(
+            f"block={block} degrades to per-round execution: eval_every=1 "
+            f"makes every round an eval sync point — raise pcfg.eval_every "
+            f"to let rounds fuse", stacklevel=3)
+    elif checkpoint_path is not None and checkpoint_every == 1:
+        warnings.warn(
+            f"block={block} degrades to per-round execution: "
+            f"checkpoint_every=1 checkpoints every round — raise "
+            f"checkpoint_every to let rounds fuse", stacklevel=3)
+    return block
+
+
 def account_client_turn(meter: CommMeter, pcfg: ProtocolConfig, d_c: int,
                         d_cl: int, handoff: bool) -> None:
     """Table I accounting for one client's turn (E batches of B samples:
@@ -346,7 +404,7 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                plus: bool = False, verbose: bool = False,
                checkpoint_path: Optional[str] = None, resume: bool = False,
                engine: str = "sequential", placement: str = "vmap",
-               prefetch: int = 0,
+               prefetch: int = 0, block: int = 1, checkpoint_every: int = 1,
                threat_model: Optional[ThreatModel] = None,
                selection="argmin", quant: Optional[str] = None,
                telemetry=None,
@@ -392,6 +450,25 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
       round's outcome: Pigeon-SL+ sub-rounds sample the *selected* cluster,
       and param-tamper threat models consume the key stream at selection
       time, so both fall back transparently.
+    * ``block`` — batched engine only: chain up to ``block`` consecutive
+      rounds as ONE compiled ``lax.scan`` program with a single stacked
+      ``(K, 2R+3)`` host fetch per block, from which per-round ``History``,
+      telemetry round events and ``CommMeter`` deltas are replayed
+      bit-identically to ``block=1``.  Host-side K-round assembly preserves
+      the per-round RNG/key order exactly (``engine.assemble_block``), so
+      the trajectory is unchanged.  Blocks break at *sync rounds* — eval
+      rounds (``pcfg.eval_every``) and checkpoint rounds
+      (``checkpoint_every``) — because intermediate thetas never leave the
+      device mid-block; they are bounded to 1 (with a warning) for
+      Pigeon-SL+ and param-tamper threat models, whose round t+1 data
+      depends on round t's selection, exactly as ``prefetch`` falls back.
+      See :func:`check_block` for the up-front validation.
+    * ``checkpoint_every`` — write a checkpoint after round t only when
+      ``(t+1) % checkpoint_every == 0`` (or at the final round).  The
+      default 1 keeps the historical every-round cadence; raising it both
+      amortises checkpoint I/O and lets round blocks fuse across the
+      non-checkpointed rounds (resume restarts from the last checkpointed
+      round, re-training at most ``checkpoint_every - 1`` rounds).
     * ``checkpoint_path`` / ``resume`` — per-round checkpoints carry theta
       AND the full randomness-stream state (numpy bit-generator state + the
       protocol key), so a resumed run is *on-stream*: it reproduces the
@@ -406,6 +483,12 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
         pcfg = dataclasses.replace(pcfg, comm=CommConfig(quant=quant))
     policy = resolve_policy(selection)
     tm = resolve_threat_model(malicious, attack, threat_model)
+    block = check_block(block, engine, plus=plus,
+                        has_param_tamper=tm.has_param_tamper,
+                        force_host_selection=_force_host_selection,
+                        eval_every=pcfg.eval_every,
+                        checkpoint_path=checkpoint_path,
+                        checkpoint_every=checkpoint_every)
     # The fused on-device cascade covers every message-level threat model;
     # handoff (param-tamper) attacks are applied host-side and split the
     # protocol key per *visited* candidate, so they pin selection to the
@@ -468,9 +551,120 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     tel = resolve_telemetry(
         telemetry if telemetry is not None else pcfg.telemetry,
         verbose=verbose, run=f"pigeon{'+' if plus else ''}",
-        engine=engine, placement=placement, prefetch=prefetch,
+        engine=engine, placement=placement, prefetch=prefetch, block=block,
         T=pcfg.T, M=pcfg.M, R=pcfg.R, selection=policy.name,
         fused_selection=fused_selection)
+
+    def _ckpt_due(t: int) -> bool:
+        return checkpoint_path is not None and (
+            (t + 1) % checkpoint_every == 0 or t == pcfg.T - 1)
+
+    if block > 1:
+        # Round-block execution (check_block guarantees the fused batched
+        # path here): K rounds chained on device as one lax.scan with the
+        # selection cascade in-carry, ONE stacked host fetch per block, and
+        # the per-round History / telemetry / CommMeter records replayed
+        # host-side bit-identically to per-round execution.  Blocks end at
+        # sync rounds (eval / checkpoint cadence) since intermediate thetas
+        # never leave the device; the K-round host assembly runs through the
+        # same RoundFeeder (block-indexed) so prefetch still overlaps
+        # assembly of block b+1 with device execution of block b.
+        from ..data.pipeline import RoundFeeder, plan_blocks
+        from .engine import assemble_block, pigeon_block_accept
+
+        def _sync_round(t: int) -> bool:
+            return (t % pcfg.eval_every == 0 or t == pcfg.T - 1
+                    or _ckpt_due(t))
+
+        segments = plan_blocks(start_round, pcfg.T, block, _sync_round)
+
+        def _make_block(b, _state={"key": key}):
+            t0, k = segments[b]
+            _state["key"], clusters_k, payload = assemble_block(
+                rng, _state["key"], data, pcfg, tm, t0, k)
+            # Stream snapshot for the block-end checkpoint: the fused path
+            # splits no keys after assembly, so the post-block-assembly
+            # stream state IS the synchronous end-of-round state of the
+            # block's last round (same argument as the per-round feeder).
+            snap = None
+            if checkpoint_path is not None:
+                from ..checkpoint import protocol_state_metadata
+                snap = protocol_state_metadata(rng, _state["key"])
+            return clusters_k, payload, snap
+
+        feeder = RoundFeeder(_make_block, 0, len(segments), depth=prefetch,
+                             telemetry=tel)
+        try:
+            for b, (t0, k) in enumerate(segments):
+                tel.profile_tick(t0)
+                if prefetch > 0:
+                    with tel.span("round.feeder_wait", round=t0,
+                                  depth=feeder.qsize()):
+                        clusters_k, payload, stream_snap = feeder.get(b)
+                else:
+                    with tel.span("block.assemble", round=t0, k=k):
+                        clusters_k, payload, stream_snap = feeder.get(b)
+                theta, records = pigeon_block_accept(
+                    module, theta, clusters_k, pcfg, tm, t0, payload,
+                    x0, y0, policy, placement, telemetry=tel)
+                for i, brec in enumerate(records):
+                    t = t0 + i
+                    clusters = clusters_k[i]
+                    meter = CommMeter()
+                    # Bit-identical replay of the per-round accounting:
+                    # client turns + tamper re-checks (pigeon_round_accept's
+                    # internal charges) followed by the driver's validation
+                    # pushes and the winner broadcast.
+                    for cluster in clusters:
+                        for j in range(len(cluster)):
+                            account_client_turn(meter, pcfg, d_c, d_cl,
+                                                handoff=j < len(cluster) - 1)
+                    if pcfg.tamper_check:
+                        visited = brec["detections"] + (1 if brec["accepted"]
+                                                        else 0)
+                        account_handoff_recheck(meter, pcfg, d_o, d_c,
+                                                visited)
+                    for _ in clusters:
+                        account_validation(meter, d_o, d_c)
+                    if brec["accepted"]:
+                        account_param_transfer(meter, pcfg.R * d_cl)
+                    sel_cluster = clusters[brec["selected"]]
+                    rec = dict(
+                        round=t,
+                        clusters=clusters,
+                        val_losses=brec["val_losses"],
+                        train_losses=brec["train_losses"],
+                        selected=brec["selected"],
+                        accepted=brec["accepted"],
+                        selected_honest=cluster_is_honest(sel_cluster,
+                                                          tm.malicious),
+                        honest_cluster_exists=any(
+                            cluster_is_honest(c, tm.malicious)
+                            for c in clusters),
+                        detections=brec["detections"],
+                        comm=dataclasses.asdict(meter),
+                    )
+                    if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+                        # only reachable at the block's last scanned round:
+                        # plan_blocks breaks blocks at eval sync rounds, so
+                        # theta is exactly the post-round-t state
+                        with tel.span("round.eval", round=t):
+                            rec["test_acc"] = evaluate(
+                                module, theta[0], theta[1], data.x_test,
+                                data.y_test, pcfg.eval_batch)
+                    hist.rounds.append(rec)
+                    if _ckpt_due(t):
+                        from ..checkpoint import save_checkpoint
+                        with tel.span("round.checkpoint", round=t):
+                            save_checkpoint(checkpoint_path, theta,
+                                            {"round": t, **stream_snap})
+                    tel.record_round(t, rec,
+                                     feeder_depth=(feeder.qsize()
+                                                   if prefetch > 0 else None))
+        finally:
+            feeder.close()
+            tel.close()
+        return hist
 
     # Double-buffered host pipeline: assembly of round t+1 overlaps device
     # execution of round t.  Depth is bounded to zero (synchronous) at the
@@ -595,7 +789,7 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                                                data.x_test, data.y_test,
                                                pcfg.eval_batch)
             hist.rounds.append(rec)
-            if checkpoint_path is not None:
+            if _ckpt_due(t):
                 from ..checkpoint import protocol_state_metadata, save_checkpoint
                 state = (stream_snap if stream_snap is not None
                          else protocol_state_metadata(rng, key))
@@ -617,18 +811,22 @@ def run_pigeon_plus(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                     verbose: bool = False, checkpoint_path: Optional[str] = None,
                     resume: bool = False, engine: str = "sequential",
                     placement: str = "vmap", prefetch: int = 0,
+                    block: int = 1, checkpoint_every: int = 1,
                     threat_model: Optional[ThreatModel] = None,
                     selection="argmin", quant: Optional[str] = None,
                     telemetry=None) -> History:
     """Pigeon-SL+ (throughput-matched variant): ``run_pigeon`` with the R-1
-    extra selected-cluster sub-rounds enabled.  ``prefetch`` is accepted for
-    API symmetry but bounded to synchronous assembly — the sub-rounds sample
-    the selected cluster, so round t+1's host work cannot start before round
+    extra selected-cluster sub-rounds enabled.  ``prefetch`` and ``block``
+    are accepted for API symmetry but bounded to synchronous per-round
+    execution — the sub-rounds sample the selected cluster, so round t+1's
+    host work cannot start (and no round may chain on device) before round
     t's selection."""
     return run_pigeon(module, data, pcfg, malicious, attack, plus=True,
                       verbose=verbose, checkpoint_path=checkpoint_path,
                       resume=resume, engine=engine, placement=placement,
-                      prefetch=prefetch, threat_model=threat_model,
+                      prefetch=prefetch, block=block,
+                      checkpoint_every=checkpoint_every,
+                      threat_model=threat_model,
                       selection=selection, quant=quant, telemetry=telemetry)
 
 
@@ -686,7 +884,7 @@ def run_vanilla_sl(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
 def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                  malicious: Optional[Set[int]] = None, attack: Attack = HONEST,
                  verbose: bool = False, engine: str = "sequential",
-                 placement: str = "vmap", prefetch: int = 0,
+                 placement: str = "vmap", prefetch: int = 0, block: int = 1,
                  threat_model: Optional[ThreatModel] = None,
                  selection="argmin", quant: Optional[str] = None,
                  telemetry=None,
@@ -704,12 +902,18 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     into the round program — SplitFed has no chained handoff, so the verify
     stage stays off).  SplitFed sampling never depends on the previous
     round's selection — there is no tamper-check key split and no sub-round
-    — so the feeder runs at full depth under every threat model."""
+    — so the feeder runs at full depth under every threat model, and
+    ``block > 1`` chains rounds on device under every threat model too
+    (blocks break only at eval sync rounds; the per-round History replayed
+    from the block fetch is bit-identical to ``block=1``)."""
     _check_engine(engine, placement, prefetch)
     if quant is not None:
         pcfg = dataclasses.replace(pcfg, comm=CommConfig(quant=quant))
     policy = resolve_policy(selection)
     fused_selection = engine == "batched" and not _force_host_selection
+    block = check_block(block, engine,
+                        force_host_selection=_force_host_selection,
+                        eval_every=pcfg.eval_every)
     tm = resolve_threat_model(malicious, attack, threat_model)
     rng = np.random.default_rng(pcfg.seed)
     key = jax.random.PRNGKey(pcfg.seed)
@@ -723,8 +927,68 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
     tel = resolve_telemetry(
         telemetry if telemetry is not None else pcfg.telemetry,
         verbose=verbose, run="sfl", engine=engine, placement=placement,
-        prefetch=prefetch, T=pcfg.T, M=pcfg.M, R=pcfg.R,
+        prefetch=prefetch, block=block, T=pcfg.T, M=pcfg.M, R=pcfg.R,
         selection=policy.name, fused_selection=fused_selection)
+
+    if block > 1:
+        # Round-block execution: K FedAvg + selection-cascade rounds as one
+        # scanned program, one stacked fetch per block; per-round History /
+        # CommMeter replayed host-side (the SplitFed accounting is analytic,
+        # so the replay is trivially bit-identical).
+        from ..data.pipeline import RoundFeeder, plan_blocks
+        from .engine import assemble_splitfed_block, splitfed_block_accept
+
+        segments = plan_blocks(0, pcfg.T, block,
+                               lambda t: (t % pcfg.eval_every == 0
+                                          or t == pcfg.T - 1))
+
+        def _make_block(b, _state={"key": key}):
+            t0, k = segments[b]
+            _state["key"], clusters_k, payload = assemble_splitfed_block(
+                rng, _state["key"], data, pcfg, tm, t0, k)
+            return clusters_k, payload
+
+        feeder = RoundFeeder(_make_block, 0, len(segments), depth=prefetch,
+                             telemetry=tel)
+        try:
+            for b, (t0, k) in enumerate(segments):
+                tel.profile_tick(t0)
+                if prefetch > 0:
+                    with tel.span("round.feeder_wait", round=t0,
+                                  depth=feeder.qsize()):
+                        clusters_k, payload = feeder.get(b)
+                else:
+                    with tel.span("block.assemble", round=t0, k=k):
+                        clusters_k, payload = feeder.get(b)
+                theta, records = splitfed_block_accept(
+                    module, theta, clusters_k, pcfg, t0, payload, x0, y0,
+                    policy, placement=placement, telemetry=tel)
+                for i, brec in enumerate(records):
+                    t = t0 + i
+                    clusters = clusters_k[i]
+                    meter = CommMeter()
+                    account_splitfed_round(meter, pcfg, clusters, d_o, d_c,
+                                           d_cl)
+                    selected = brec["selected"]
+                    sel_cluster = clusters[selected]
+                    rec = dict(round=t, selected=selected,
+                               val_losses=brec["val_losses"],
+                               selected_honest=cluster_is_honest(
+                                   sel_cluster, tm.malicious),
+                               comm=dataclasses.asdict(meter))
+                    if t % pcfg.eval_every == 0 or t == pcfg.T - 1:
+                        with tel.span("round.eval", round=t):
+                            rec["test_acc"] = evaluate(
+                                module, theta[0], theta[1], data.x_test,
+                                data.y_test, pcfg.eval_batch)
+                    hist.rounds.append(rec)
+                    tel.record_round(t, rec,
+                                     feeder_depth=(feeder.qsize()
+                                                   if prefetch > 0 else None))
+        finally:
+            feeder.close()
+            tel.close()
+        return hist
 
     feeder = None
     if engine == "batched" and prefetch > 0:

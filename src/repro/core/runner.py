@@ -558,6 +558,64 @@ class RoundRunner:
                 self.select)
         return self._sharded_sweep
 
+    # -- round-block entries: K rounds as one lax.scan, one host fetch -------
+
+    def accept_block_fn(self) -> Callable:
+        """(params, block_inputs, val) -> (committed_params, fetches): K
+        consecutive fused acceptance rounds chained as a single
+        ``jax.lax.scan`` over the round axis.  ``block_inputs`` leaves lead
+        with K (each step slice is exactly one :meth:`accept_fn` payload);
+        the carry is theta and is donated at the jit boundary, so the scan
+        reuses the parameter buffers in place.  ``fetches`` stacks the K
+        per-round ``pack_fetch`` vectors to (K, 2R+3) — ONE host sync per
+        block, from which the drivers replay per-round History/telemetry/
+        CommMeter records bit-identically to per-round execution (the scan
+        body IS the per-round accept program)."""
+        body = self.accept_fn()
+
+        def block_body(params, block_inputs, val):
+            def step(theta, inputs):
+                return body(theta, inputs, val)
+
+            return jax.lax.scan(step, params, block_inputs)
+
+        return block_body
+
+    def sweep_block_fn(self) -> Callable:
+        """(params_S, block_inputs, val) -> (winner_params_S, (vlosses_KSR,
+        tlosses_KSR, sels_KS)): K sweep rounds as one scan.  The per-round
+        train-loss reduction (mean over the client axis) moves inside the
+        program so the stacked ys stay small — the same ``jnp.mean`` the
+        per-round driver applies to the fetched aux, hence bit-identical."""
+        body = self.sweep_fn()
+
+        def block_body(params, block_inputs, val):
+            def step(theta_s, inputs):
+                new_thetas, aux, vlosses, sels = body(theta_s, inputs, val)
+                tl = aux[0] if isinstance(aux, tuple) else aux
+                return new_thetas, (vlosses, jnp.mean(tl, axis=-1), sels)
+
+            return jax.lax.scan(step, params, block_inputs)
+
+        return block_body
+
+    def round_block_fn(self) -> Callable:
+        """(stacked_params, block_batches, val) -> (rebro_params_R,
+        (vlosses_KR, sels_K)): K full launch-layer rounds (in-program policy
+        selection + winner broadcast) as one scan — the block variant of
+        :meth:`round_fn` for the ``make_pigeon_round_step`` family.  The
+        stacked-params carry is donated at the jit boundary."""
+        body = self.round_fn()
+
+        def block_body(params, block_batches, val):
+            def step(stacked, batches):
+                rebro, vlosses, sel = body(stacked, batches, val)
+                return rebro, (vlosses, sel)
+
+            return jax.lax.scan(step, params, block_batches)
+
+        return block_body
+
     # -- sharded placement --------------------------------------------------
 
     def _gathered_context(self, aux, vloss, shard_l, ax):
@@ -718,12 +776,26 @@ class RoundRunner:
         if self.placement == "sharded" and self.mesh is not None:
             check_partial_auto_backend(self.mesh, manual_axes)
 
+    # Entries whose params/theta carry is donated at the jit boundary: the
+    # drivers rebind theta every call (theta = accept(theta, ...)), so XLA
+    # may reuse the carry buffers in place instead of allocating a second
+    # parameter set per round.  "candidates" is NOT donated — the host-side
+    # reference cascade (select_host) may roll back to the original theta —
+    # and neither is "round", whose launch/test callers legitimately reuse
+    # the same stacked params across runners.
+    _DONATED = frozenset({"accept", "sweep", "accept_block", "sweep_block",
+                          "round_block"})
+
     def _compiled(self, which: str) -> Callable:
         fn = self._jitted.get(which)
         if fn is None:
             body = {"candidates": self.candidates_fn, "round": self.round_fn,
-                    "accept": self.accept_fn, "sweep": self.sweep_fn}[which]()
-            fn = jax.jit(body)
+                    "accept": self.accept_fn, "sweep": self.sweep_fn,
+                    "accept_block": self.accept_block_fn,
+                    "sweep_block": self.sweep_block_fn,
+                    "round_block": self.round_block_fn}[which]()
+            donate = (0,) if which in self._DONATED else ()
+            fn = jax.jit(body, donate_argnums=donate)
             self._jitted[which] = fn
         return fn
 
@@ -756,6 +828,20 @@ class RoundRunner:
     def sweep(self, params, inputs, val):
         self._check_executable((self.seed_axis, self.cluster_axis))
         return self._call("sweep", params, inputs, val)
+
+    def accept_block(self, params, block_inputs, val):
+        """K scanned acceptance rounds, one stacked (K, 2R+3) fetch — see
+        :meth:`accept_block_fn`.  The theta carry is donated."""
+        self._check_executable((self.cluster_axis,))
+        return self._call("accept_block", params, block_inputs, val)
+
+    def sweep_block(self, params, block_inputs, val):
+        self._check_executable((self.seed_axis, self.cluster_axis))
+        return self._call("sweep_block", params, block_inputs, val)
+
+    def round_block(self, params, block_batches, val):
+        self._check_executable((self.cluster_axis,))
+        return self._call("round_block", params, block_batches, val)
 
 
 # ---------------------------------------------------------------------------

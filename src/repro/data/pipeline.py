@@ -95,6 +95,31 @@ def minibatches(rng: np.random.Generator, x: np.ndarray, y: np.ndarray,
 # double-buffered host pipeline
 # ---------------------------------------------------------------------------
 
+def plan_blocks(start: int, stop: int, block: int,
+                is_sync: Optional[Callable[[int], bool]] = None):
+    """Partition rounds ``[start, stop)`` into ``(t0, k)`` segments of at
+    most ``block`` consecutive rounds for round-block execution.
+
+    A segment never extends past a *sync round* — a round whose post-state
+    the host must observe before the next round may run (an eval round, a
+    checkpoint round): each segment ENDS at the first sync round it reaches,
+    because a scanned block only surfaces theta at its final round.
+    ``is_sync(t)`` returns whether round ``t`` is such a sync point (``None``
+    = no sync constraints); ``block=1`` degenerates to one segment per
+    round.  Segments tile ``[start, stop)`` exactly, in order."""
+    if block < 1:
+        raise ValueError(f"block={block} must be >= 1")
+    segments = []
+    t = start
+    while t < stop:
+        k = 1
+        while (k < block and t + k < stop
+               and not (is_sync is not None and is_sync(t + k - 1))):
+            k += 1
+        segments.append((t, k))
+        t += k
+    return segments
+
 class RoundFeeder:
     """Double-buffered host-side round assembly.
 

@@ -226,16 +226,23 @@ def make_pigeon_round_step_shardmap(model: Model, mesh, lr: float = 1e-3,
     (XLA CPU has no PartitionId under SPMD, so auto axes of size > 1 crash at
     run time with an inscrutable error).  The default leaves the gate off
     because the dry-run driver only lowers/compiles this step — that is
-    supported on every backend."""
+    supported on every backend.
+
+    ``block > 1`` returns the round-block program instead
+    (:meth:`RoundRunner.round_block_fn`): K scanned rounds whose ``batches``
+    argument leads with the K round axis, returning ``(rebro_params,
+    (vlosses_KR, sels_K))`` — one dispatch and one fetch per K rounds."""
     from ..core.runner import check_partial_auto_backend
     from ..selection import resolve_policy
+    if block < 1:
+        raise ValueError(f"block={block} must be >= 1")
     if for_execution:
         check_partial_auto_backend(mesh, ("pod",))
     runner = RoundRunner(launch_round_spec(model, lr, constrain_val=True,
                                            quant=quant),
                          placement="sharded", mesh=mesh, params_stacked=True,
                          select=resolve_policy(selection))
-    return runner.round_fn()
+    return runner.round_block_fn() if block > 1 else runner.round_fn()
 
 
 def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3,
@@ -278,7 +285,8 @@ def make_pigeon_plus_round_step(model: Model, lr: float = 1e-3,
 
 def make_pigeon_round_step(model: Model, lr: float = 1e-3,
                            selection: str = "argmin",
-                           quant: Optional[str] = None) -> Callable:
+                           quant: Optional[str] = None,
+                           block: int = 1) -> Callable:
     """One Pigeon-SL global round over R stacked cluster replicas (R is
     inferred from the stacked leading dim at trace time).
 
@@ -297,12 +305,19 @@ def make_pigeon_round_step(model: Model, lr: float = 1e-3,
     leaf instead of the gather+full-replicate path GSPMD emits for dynamic
     indexing), which retired the "pigeon_psum" named optimization — it is
     the only strategy.
+
+    ``block > 1`` returns the round-block program instead
+    (:meth:`RoundRunner.round_block_fn`): all round inputs gain a leading
+    K axis and the step runs K rounds as one ``lax.scan``, returning
+    ``(new_stacked_params, (val_losses_KR, selected_K))``.
     """
     from ..selection import resolve_policy
+    if block < 1:
+        raise ValueError(f"block={block} must be >= 1")
     runner = RoundRunner(launch_round_spec(model, lr, quant=quant),
                          placement="vmap", params_stacked=True,
                          select=resolve_policy(selection))
-    return runner.round_fn()
+    return runner.round_block_fn() if block > 1 else runner.round_fn()
 
 
 # ---------------------------------------------------------------------------

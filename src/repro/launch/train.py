@@ -51,7 +51,23 @@ def main() -> None:
                          "metrics + provenance) to PATH")
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of round 1 into DIR")
+    ap.add_argument("--engine", default=None,
+                    choices=["sequential", "batched"],
+                    help="round engine (default: batched when --block > 1, "
+                         "else sequential)")
+    ap.add_argument("--block", type=int, default=1,
+                    help="round-block size: scan this many rounds on device "
+                         "per host sync (pigeon/sfl batched engine only; "
+                         "pigeon+ and param_tamper force 1)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="enable JAX's persistent compilation cache in DIR "
+                         "(default: $REPRO_COMPILE_CACHE if set)")
     args = ap.parse_args()
+
+    from ..core import enable_compile_cache
+    enable_compile_cache(args.compile_cache)   # no-op when dir/env unset
+
+    engine = args.engine or ("batched" if args.block > 1 else "sequential")
 
     if args.task:
         data, cnn_cfg = build_image_task(args.task, m_clients=args.clients,
@@ -84,11 +100,13 @@ def main() -> None:
                                   verbose=True, telemetry=telemetry)
         elif args.protocol == "sfl":
             hist = run_splitfed(module, data, pcfg, malicious, attack,
-                                verbose=True, telemetry=telemetry)
+                                verbose=True, telemetry=telemetry,
+                                engine=engine, block=args.block)
         else:
             hist = run_pigeon(module, data, pcfg, malicious, attack,
                               plus=args.protocol == "pigeon+", verbose=True,
-                              telemetry=telemetry)
+                              telemetry=telemetry, engine=engine,
+                              block=args.block)
     final = hist.rounds[-1].get("test_acc")
     print(f"done: {args.protocol} rounds={args.rounds} "
           f"final_test_acc={final} wall={sw.elapsed:.1f}s")

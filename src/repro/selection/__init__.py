@@ -17,7 +17,7 @@ driver accepts ``selection=`` (a registered name or a policy instance) with
 ``"argmin"`` the bit-identical default.
 """
 from .cascade import (N_FETCH_TAIL, masked_first_accept, pack_fetch,
-                      unpack_fetch)
+                      unpack_block_fetch, unpack_fetch)
 from .policies import (ARGMIN, LOSS_PLUS_DISTANCE, MEDIAN_OF_MEANS,
                        SELECTION_REGISTRY, TRIMMED, LossPlusDistancePolicy,
                        MedianOfMeansPolicy, ScoreContext, SelectionPolicy,
@@ -32,7 +32,8 @@ __all__ = [
     "ARGMIN", "MEDIAN_OF_MEANS", "LOSS_PLUS_DISTANCE", "TRIMMED",
     "SELECTION_REGISTRY", "register_policy", "resolve_policy",
     "selection_policies",
-    "masked_first_accept", "pack_fetch", "unpack_fetch", "N_FETCH_TAIL",
+    "masked_first_accept", "pack_fetch", "unpack_fetch",
+    "unpack_block_fetch", "N_FETCH_TAIL",
     "SelectionOutcome", "select_host", "host_score_context", "score_and_rank",
     "effective_shards",
 ]

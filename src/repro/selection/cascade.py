@@ -70,3 +70,14 @@ def unpack_fetch(fetched, r: int):
     assert fetched.shape[-1] == 2 * r + N_FETCH_TAIL
     return (fetched[:r], fetched[r:2 * r], int(fetched[2 * r]),
             int(fetched[2 * r + 1]), bool(fetched[2 * r + 2]))
+
+
+def unpack_block_fetch(fetched, r: int):
+    """Per-round views of a stacked ``(K, 2R+3)`` round-block fetch (K
+    scanned rounds, ONE host sync): yields one :func:`unpack_fetch` tuple per
+    scanned round, in round order.  Row i is bit-identical to the
+    :func:`pack_fetch` vector round ``t0 + i`` would have fetched on its own
+    — the scan body IS the per-round accept program."""
+    assert fetched.ndim == 2, f"block fetch must be (K, 2R+3), got {fetched.shape}"
+    for row in fetched:
+        yield unpack_fetch(row, r)

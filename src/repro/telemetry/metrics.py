@@ -78,11 +78,15 @@ def jit_cache_stats() -> Dict[str, Any]:
       instances, their jitted entry points, and the total compiled-signature
       count across them (``jitted._cache_size``);
     * ``trace_compile_s`` — summed first-call wall time of every jitted
-      entry (trace + XLA compile; the runner records it once per program).
+      entry (trace + XLA compile; the runner records it once per program);
+    * ``persistent_cache_*`` — JAX's on-disk compilation cache (directory,
+      entry count, this process's lookup hits/misses), from
+      :func:`repro.core.compile_cache.compile_cache_stats`.
 
     Purely host-side introspection — safe to call every round."""
     from ..core import engine as _engine
     from ..core import runner as _runner
+    from ..core.compile_cache import compile_cache_stats
     stats: Dict[str, Any] = {}
     hits = misses = 0
     for fac in (_runner.protocol_runner, _runner.protocol_accept_runner,
@@ -107,4 +111,5 @@ def jit_cache_stats() -> Dict[str, Any]:
     stats["programs"] = programs
     stats["program_signatures"] = signatures
     stats["trace_compile_s"] = round(compile_s, 6)
+    stats.update(compile_cache_stats())
     return stats

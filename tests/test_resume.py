@@ -229,3 +229,78 @@ def test_resume_past_final_round_returns_restored_state(tiny_task, tiny_pcfg,
     assert rec["resumed_terminal"] is True
     assert rec["round"] == tiny_pcfg.T - 1
     assert rec["test_acc"] == h_full.rounds[-1]["test_acc"]
+
+
+# ---------------------------------------------------------------------------
+# round-block checkpointing: block-cadence writes + cross-mode resume
+# ---------------------------------------------------------------------------
+
+def test_resume_block_mode_is_on_stream(tiny_task, tiny_pcfg, tmp_path):
+    """A block-mode run checkpoints at block boundaries (checkpoint rounds
+    are sync rounds, so blocks END there); resuming it mid-trajectory must
+    reproduce the uninterrupted PER-ROUND run's tail bit-for-bit — one
+    stream snapshot per block is enough because the fused path splits no
+    keys after assembly."""
+    data, module = tiny_task
+    pcfg_full = dataclasses.replace(tiny_pcfg, T=4, eval_every=10)
+    pcfg_half = dataclasses.replace(tiny_pcfg, T=2, eval_every=10)
+    path = str(tmp_path / "ck")
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched")
+    h_full = run_pigeon(module, data, pcfg_full, **kw)          # block=1 ref
+    run_pigeon(module, data, pcfg_half, checkpoint_path=path,
+               checkpoint_every=2, block=2, **kw)
+    h_res = run_pigeon(module, data, pcfg_full, checkpoint_path=path,
+                       checkpoint_every=2, block=2, resume=True, **kw)
+    assert_tail_bit_identical(h_full, h_res, start=2)
+
+
+def test_resume_across_block_modes(tiny_task, tiny_pcfg, tmp_path):
+    """Checkpoints are mode-agnostic: a block-written checkpoint resumes
+    under per-round execution and a per-round checkpoint resumes under
+    blocks, both bit-identical to the uninterrupted reference."""
+    data, module = tiny_task
+    pcfg_full = dataclasses.replace(tiny_pcfg, T=4, eval_every=10)
+    pcfg_half = dataclasses.replace(tiny_pcfg, T=2, eval_every=10)
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched")
+    h_full = run_pigeon(module, data, pcfg_full, **kw)
+
+    path_b = str(tmp_path / "ck_block")        # block-written -> per-round
+    run_pigeon(module, data, pcfg_half, checkpoint_path=path_b,
+               checkpoint_every=2, block=2, **kw)
+    h_res = run_pigeon(module, data, pcfg_full, checkpoint_path=path_b,
+                       resume=True, **kw)
+    assert_tail_bit_identical(h_full, h_res, start=2)
+
+    path_r = str(tmp_path / "ck_round")        # per-round -> block resume
+    run_pigeon(module, data, pcfg_half, checkpoint_path=path_r, **kw)
+    h_res2 = run_pigeon(module, data, pcfg_full, checkpoint_path=path_r,
+                        checkpoint_every=2, block=2, resume=True, **kw)
+    assert_tail_bit_identical(h_full, h_res2, start=2)
+
+
+def test_checkpoint_every_thins_per_round_writes(tiny_task, tiny_pcfg,
+                                                 tmp_path, monkeypatch):
+    """checkpoint_every=k writes only the due rounds ((t+1) % k == 0, plus
+    the final round) instead of every round — the block-cadence knob also
+    thins per-round runs."""
+    import repro.checkpoint as checkpoint_mod
+
+    # the driver imports save_checkpoint lazily at each write, so patch the
+    # source module
+    written = []
+    real_save = checkpoint_mod.save_checkpoint
+
+    def counting_save(path, tree, meta):
+        written.append(meta["round"])
+        return real_save(path, tree, meta)
+
+    monkeypatch.setattr(checkpoint_mod, "save_checkpoint", counting_save)
+    data, module = tiny_task
+    pcfg = dataclasses.replace(tiny_pcfg, T=4, eval_every=10)
+    path = str(tmp_path / "ck")
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched")
+    run_pigeon(module, data, pcfg, checkpoint_path=path, checkpoint_every=2,
+               **kw)
+    assert written == [1, 3]                   # t=1 due, t=3 due+final
+    _, meta = load_checkpoint(path)
+    assert meta["round"] == pcfg.T - 1

@@ -11,6 +11,7 @@ largest divisor of R that fits); the multi-device assertions only engage
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — CI runs this
 file a second time under that flag so the shard_map path cannot rot.
 """
+import dataclasses
 import threading
 
 import jax
@@ -485,3 +486,220 @@ def test_onehot_select_ignores_inf_in_unselected_slots():
     stacked = {"w": jnp.array([[1.0, 2.0], [jnp.inf, jnp.nan]])}
     out = onehot_select(stacked, jnp.int32(0))
     np.testing.assert_array_equal(np.asarray(out["w"]), [1.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# round-block execution: K scanned rounds per host sync
+# ---------------------------------------------------------------------------
+
+def _block_pcfg(tiny_pcfg, **kw):
+    """tiny_pcfg widened to 4 rounds with eval pushed past T so a block can
+    actually span multiple rounds (eval rounds are host sync points)."""
+    kw.setdefault("T", 4)
+    kw.setdefault("eval_every", 10)
+    return dataclasses.replace(tiny_pcfg, **kw)
+
+
+def assert_rounds_identical(h_a, h_b):
+    """Full-record bit-identity: every History key, including CommMeter
+    totals, detections and train losses — stricter than
+    assert_histories_equivalent(exact=True)."""
+    assert len(h_a.rounds) == len(h_b.rounds)
+    for ra, rb in zip(h_a.rounds, h_b.rounds):
+        assert ra.keys() == rb.keys(), (set(ra) ^ set(rb))
+        for k in ra:
+            assert ra[k] == rb[k], (ra.get("round"), k, ra[k], rb[k])
+
+
+@pytest.mark.parametrize("malicious,attack,tamper_check", [
+    (set(), HONEST, False),
+    ({1}, Attack(LABEL_FLIP), False),
+    ({1}, Attack(LABEL_FLIP), True),
+], ids=["honest", "label_flip", "label_flip+tamper_check"])
+def test_block_history_bit_identical(tiny_task, tiny_pcfg, malicious, attack,
+                                     tamper_check):
+    """block=K must reproduce the per-round trajectory bit-for-bit: same
+    selected-cluster sequence, same History floats, same CommMeter totals —
+    the K-round scan changes only when the host observes theta, not what is
+    computed."""
+    data, module = tiny_task
+    pcfg = _block_pcfg(tiny_pcfg, tamper_check=tamper_check)
+    kw = dict(malicious=malicious, attack=attack, engine="batched",
+              placement="vmap")
+    h_1 = run_pigeon(module, data, pcfg, **kw, block=1)
+    h_4 = run_pigeon(module, data, pcfg, **kw, block=4)
+    assert_rounds_identical(h_1, h_4)
+
+
+def test_block_sharded_bit_identical(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    pcfg = _block_pcfg(tiny_pcfg)
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched",
+              placement="sharded")
+    assert_rounds_identical(run_pigeon(module, data, pcfg, **kw, block=1),
+                            run_pigeon(module, data, pcfg, **kw, block=4))
+
+
+def test_block_selection_policy_bit_identical(tiny_task, tiny_pcfg):
+    """Non-default selection policies ride inside the scanned cascade."""
+    data, module = tiny_task
+    pcfg = _block_pcfg(tiny_pcfg)
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched",
+              placement="vmap", selection="loss_plus_distance")
+    assert_rounds_identical(run_pigeon(module, data, pcfg, **kw, block=1),
+                            run_pigeon(module, data, pcfg, **kw, block=4))
+
+
+def test_block_eval_rounds_are_sync_points(tiny_task, tiny_pcfg):
+    """Mid-stream eval rounds truncate blocks (plan_blocks) so test_acc is
+    computed from exactly the per-round thetas."""
+    data, module = tiny_task
+    pcfg = _block_pcfg(tiny_pcfg, eval_every=2)
+    kw = dict(engine="batched", placement="vmap")
+    h_1 = run_pigeon(module, data, pcfg, **kw, block=1)
+    h_4 = run_pigeon(module, data, pcfg, **kw, block=4)
+    assert any("test_acc" in r for r in h_4.rounds[:-1])   # mid-stream eval
+    assert_rounds_identical(h_1, h_4)
+
+
+def test_block_splitfed_bit_identical(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    pcfg = _block_pcfg(tiny_pcfg)
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched",
+              placement="vmap")
+    assert_rounds_identical(run_splitfed(module, data, pcfg, **kw, block=1),
+                            run_splitfed(module, data, pcfg, **kw, block=4))
+
+
+def test_block_sweep_bit_identical(tiny_task, tiny_pcfg):
+    data, module = tiny_task
+    pcfg = _block_pcfg(tiny_pcfg)
+    kw = dict(seeds=[0, 1], malicious={1}, attack=Attack(LABEL_FLIP),
+              placement="vmap")
+    hs_1 = run_pigeon_sweep(module, data, pcfg, **kw, block=1)
+    hs_4 = run_pigeon_sweep(module, data, pcfg, **kw, block=4)
+    for h_1, h_4 in zip(hs_1, hs_4):
+        assert_rounds_identical(h_1, h_4)
+
+
+def test_block_prefetch_compose(tiny_task, tiny_pcfg):
+    """The feeder assembles whole blocks ahead; prefetch + block together
+    still reproduce the synchronous per-round trajectory."""
+    data, module = tiny_task
+    pcfg = _block_pcfg(tiny_pcfg)
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched",
+              placement="vmap")
+    assert_rounds_identical(
+        run_pigeon(module, data, pcfg, **kw, block=1),
+        run_pigeon(module, data, pcfg, **kw, block=2, prefetch=2))
+
+
+def test_check_block_validation(tiny_task, tiny_pcfg):
+    """Up-front block validation mirrors _check_engine: impossible combos
+    raise before any device work; host-sequenced modes force block=1 with a
+    warning rather than silently diverging."""
+    from repro.core.protocol import check_block
+    data, module = tiny_task
+    with pytest.raises(ValueError, match="block=0"):
+        check_block(0)
+    with pytest.raises(ValueError, match="engine"):
+        check_block(2, "sequential")
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        check_block(2, checkpoint_every=0)
+    with pytest.raises(ValueError, match="block"):
+        run_pigeon(module, data, tiny_pcfg, engine="sequential", block=2)
+    for forced in (dict(plus=True), dict(has_param_tamper=True),
+                   dict(force_host_selection=True)):
+        with pytest.warns(UserWarning):
+            assert check_block(4, **forced) == 1
+    with pytest.warns(UserWarning):               # every round is a sync round
+        assert check_block(4, eval_every=1) == 4  # kept: plan_blocks degrades
+    assert check_block(1, plus=True) == 1         # block=1 never warns
+
+
+def test_plan_blocks_tiles_and_respects_sync():
+    from repro.data.pipeline import plan_blocks
+    segs = plan_blocks(0, 10, 4, lambda t: t % 5 == 0 or t == 9)
+    assert segs == [(0, 1), (1, 4), (5, 1), (6, 4)]
+    assert sum(k for _, k in segs) == 10
+    assert plan_blocks(3, 3, 4) == []
+    assert plan_blocks(0, 5, 1) == [(t, 1) for t in range(5)]
+    with pytest.raises(ValueError):
+        plan_blocks(0, 5, 0)
+
+
+def test_block_donation_no_retrace_and_donated_carry(tiny_task, tiny_pcfg):
+    """Steady state of the block path: the second block re-uses the compiled
+    scan program (one cached signature — no retrace) and the theta carry
+    buffers of the previous block are donated (deleted after the call)."""
+    import repro.core.engine as engine
+    from repro.adversary import resolve_threat_model
+    from repro.core.runner import protocol_accept_runner
+    from repro.selection import resolve_policy
+
+    data, module = tiny_task
+    pcfg = _block_pcfg(tiny_pcfg)
+    tm = resolve_threat_model(set(), HONEST, None)
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    theta = module.init(jax.random.PRNGKey(1))
+    x0, y0 = jnp.asarray(data.x0), jnp.asarray(data.y0)
+    policy = resolve_policy("argmin")
+
+    runner = protocol_accept_runner(module, pcfg.lr, "vmap", policy,
+                                    pcfg.tamper_check, pcfg.tamper_tol,
+                                    quant=pcfg.comm.quant)
+    key, clusters_k, binputs = engine.assemble_block(rng, key, data, pcfg,
+                                                     tm, 0, 2)
+    theta1, _ = engine.pigeon_block_accept(module, theta, clusters_k, pcfg,
+                                           tm, 0, binputs, x0, y0, policy)
+    # the runner (and its compiled programs) is lru-shared across the suite,
+    # so assert the steady-state property: a same-shape block adds NO new
+    # compiled signature
+    sigs = runner._jitted["accept_block"]._cache_size()
+    key, clusters_k, binputs = engine.assemble_block(rng, key, data, pcfg,
+                                                     tm, 2, 2)
+    theta2, fetch = runner.accept_block(theta1, binputs, (x0, y0))
+    jax.block_until_ready(fetch)
+    assert runner._jitted["accept_block"]._cache_size() == sigs  # no retrace
+    assert all(l.is_deleted() for l in jax.tree.leaves(theta1))  # donated
+
+
+def test_accept_donation_no_retrace_and_donated_carry(tiny_task, tiny_pcfg):
+    """Same steady-state guarantees for the existing per-round accept
+    program: theta is donated round over round without retracing."""
+    import repro.core.engine as engine
+    from repro.adversary import resolve_threat_model
+    from repro.core.protocol import CommMeter
+    from repro.core.protocol import cut_width as protocol_cut_width
+    from repro.core.runner import protocol_accept_runner
+    from repro.selection import resolve_policy
+
+    data, module = tiny_task
+    tm = resolve_threat_model(set(), HONEST, None)
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    theta = module.init(jax.random.PRNGKey(1))
+    x0, y0 = jnp.asarray(data.x0), jnp.asarray(data.y0)
+    policy = resolve_policy("argmin")
+    meter = CommMeter()
+    d_c = protocol_cut_width(module, theta[0], data.x0)
+
+    runner = protocol_accept_runner(module, tiny_pcfg.lr, "vmap", policy,
+                                    tiny_pcfg.tamper_check,
+                                    tiny_pcfg.tamper_tol,
+                                    quant=tiny_pcfg.comm.quant)
+    thetas = [theta]
+    for t in range(2):
+        from repro.core.clustering import make_clusters
+        clusters = make_clusters(rng, tiny_pcfg.M, tiny_pcfg.R)
+        key, theta_next, _ = engine.pigeon_round_accept(
+            module, thetas[-1], clusters, data, tiny_pcfg, tm, t, rng, key,
+            meter, d_c, x0, y0, policy)
+        thetas.append(theta_next)
+        if t == 0:
+            sigs = runner._jitted["accept"]._cache_size()
+    jax.block_until_ready(thetas[-1])
+    assert runner._jitted["accept"]._cache_size() == sigs      # no retrace
+    # every superseded carry was donated back to the device allocator
+    assert all(l.is_deleted() for l in jax.tree.leaves(thetas[1]))

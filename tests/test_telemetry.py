@@ -404,3 +404,94 @@ def test_feeder_qsize_gauge(tiny_task, tiny_pcfg):
     with RoundFeeder(lambda t: t * 10, start=0, stop=4, depth=0) as f:
         assert f.qsize() == 0            # synchronous fallback
         assert f.get(0) == 0
+
+
+# ---------------------------------------------------------------------------
+# round-block execution: per-round events survive block-cadence host sync
+# ---------------------------------------------------------------------------
+
+def test_block_round_events_mirror_per_round(tiny_task, tiny_pcfg):
+    """block=K still emits ONE round event per protocol round (replayed from
+    the stacked block fetch), with the same payload the per-round loop
+    records — telemetry consumers cannot tell the execution modes apart."""
+    import dataclasses as _dc
+
+    data, module = tiny_task
+    pcfg = _dc.replace(tiny_pcfg, T=4, eval_every=10)
+    kw = dict(malicious={1}, attack=Attack(LABEL_FLIP), engine="batched")
+
+    mem_1, mem_4 = MemorySink(), MemorySink()
+    run_pigeon(module, data, pcfg, telemetry=Telemetry(sinks=(mem_1,)),
+               block=1, **kw)
+    run_pigeon(module, data, pcfg, telemetry=Telemetry(sinks=(mem_4,)),
+               block=4, **kw)
+
+    rounds_1, rounds_4 = mem_1.of("round"), mem_4.of("round")
+    assert [e["t"] for e in rounds_4] == [e["t"] for e in rounds_1] \
+        == list(range(pcfg.T))
+    for e1, e4 in zip(rounds_1, rounds_4):
+        for k in ("selected", "accepted", "detections", "selected_honest",
+                  "val_losses", "comm"):
+            assert e1[k] == e4[k], k
+    # block mode swaps the per-round step/fetch spans for block-grained ones
+    names_4 = {s["name"] for s in mem_4.of("span")}
+    assert {"block.assemble", "block.step", "block.fetch"} <= names_4
+
+
+def test_block_recorded_in_run_start(tiny_task, tiny_pcfg, tmp_path):
+    """The effective block size lands in the run_start provenance payload."""
+    import dataclasses as _dc
+
+    data, module = tiny_task
+    pcfg = _dc.replace(tiny_pcfg, T=2, eval_every=10)
+    path = str(tmp_path / "t.jsonl")
+    run_pigeon(module, data, pcfg, engine="batched", block=2,
+               telemetry=Telemetry(jsonl=path))
+    evs = read_jsonl(path)
+    start = [e for e in evs if e["event"] == "run_start"][0]
+    assert start["block"] == 2
+
+
+def test_compile_cache_stats_surface_in_jit_stats(tmp_path):
+    """enable_compile_cache wires JAX's persistent cache; after clearing the
+    in-process jit caches a re-jit loads from disk and the hit counters
+    surface through telemetry's jit_cache_stats."""
+    import jax
+
+    from repro.core import enable_compile_cache
+    from repro.core import compile_cache as cc
+    from repro.telemetry.metrics import jit_cache_stats
+
+    prev_dir, prev_hits, prev_misses = (cc._state["dir"], cc._state["hits"],
+                                        cc._state["misses"])
+    d = str(tmp_path / "xla_cache")
+    try:
+        assert enable_compile_cache(d) == d
+        f = jax.jit(lambda x: x * 3 + 1)
+        jax.block_until_ready(f(jnp.arange(4.0)))
+        jax.clear_caches()                     # drop in-process executables
+        f2 = jax.jit(lambda x: x * 3 + 1)
+        jax.block_until_ready(f2(jnp.arange(4.0)))
+        stats = jit_cache_stats()
+        assert stats["persistent_cache_dir"] == d
+        assert stats["persistent_cache_entries"] >= 1
+        assert stats["persistent_cache_hits"] >= 1
+        assert stats["persistent_cache_misses"] >= 1
+    finally:
+        jax.config.update("jax_compilation_cache_dir", None)
+        cc._state["dir"] = prev_dir
+        cc._state["hits"], cc._state["misses"] = prev_hits, prev_misses
+
+
+def test_enable_compile_cache_disabled_without_dir(monkeypatch):
+    from repro.core import compile_cache as cc
+    monkeypatch.delenv(cc.ENV_VAR, raising=False)
+    prev = cc._state["dir"]
+    cc._state["dir"] = None
+    try:
+        assert cc.enable_compile_cache(None) is None    # no dir, no env: off
+        stats = cc.compile_cache_stats()
+        assert stats["persistent_cache_dir"] is None
+        assert stats["persistent_cache_entries"] == 0
+    finally:
+        cc._state["dir"] = prev
