@@ -49,10 +49,10 @@ def run(full: bool = False, seed: int = 0):
                        prefetch=prefetch)
             best = float("inf")
             for _ in range(repeats):        # best-of-N vs scheduler noise
-                t0 = time.time()
+                t0 = time.perf_counter()
                 run_pigeon(module, data, pcfg, malicious=set(),
                            engine="batched", prefetch=prefetch)
-                best = min(best, (time.time() - t0) / pcfg.T * 1e3)
+                best = min(best, (time.perf_counter() - t0) / pcfg.T * 1e3)
             ms[prefetch] = best
         overlap_win = ms[0] / ms[1]
         results[f"R{r}"] = dict(sync_ms=ms[0], prefetch_ms=ms[1],

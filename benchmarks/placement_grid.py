@@ -29,9 +29,9 @@ def _time_best(fn, t_rounds: int, repeats: int) -> float:
     """Best-of-N wall-ms per protocol round (vs scheduler noise)."""
     best = float("inf")
     for _ in range(repeats):
-        t0 = time.time()
+        t0 = time.perf_counter()
         fn()
-        best = min(best, (time.time() - t0) / t_rounds * 1e3)
+        best = min(best, (time.perf_counter() - t0) / t_rounds * 1e3)
     return best
 
 

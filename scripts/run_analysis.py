@@ -1,0 +1,31 @@
+"""CI/dev wrapper for the static analyzer (`python -m repro.analysis`).
+
+Adds the two things the raw module entry point leaves to the caller:
+
+* puts ``src/`` on ``sys.path`` so the script runs from a bare checkout
+  (no install, no PYTHONPATH juggling) — the same trick the benchmarks use;
+* defaults ``--json`` to ``analysis/findings.json`` so CI always has an
+  artifact to upload, pass/fail alike.
+
+Usage:
+    python scripts/run_analysis.py --check                 # the CI gate
+    python scripts/run_analysis.py --update-baselines      # regenerate pins
+    python scripts/run_analysis.py --check --placements sharded   # 8-dev leg
+"""
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def main() -> int:
+    from repro.analysis.cli import run
+    argv = sys.argv[1:]
+    if not any(a == "--json" or a.startswith("--json=") for a in argv):
+        argv += ["--json", os.path.join(REPO, "analysis", "findings.json")]
+    return run(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,12 @@
+"""Static analysis for the round programs and the source tree.
+
+Layer 1 (``jaxpr_audit`` / ``programs`` / ``budgets``) proves invariants on
+the lowered RoundRunner programs — no f64, no host callbacks, donation
+applied, one stacked fetch — and pins transfer/compile-count budgets under
+``analysis/budgets/``.  Layer 2 (``lints``) is the repo-specific AST rule
+pass with a justification-enforcing suppression baseline.  Entry point:
+``python -m repro.analysis`` (see ``cli.py``).
+"""
+from .findings import Baseline, Finding, Report, make_finding  # noqa: F401
+from .jaxpr_audit import (CALLBACK_PRIMITIVES, ProgramAudit,  # noqa: F401
+                          audit_fn, find_callbacks, find_dtypes, iter_eqns)

@@ -1,0 +1,206 @@
+"""Checked-in program budgets: transfer/op counts and compile counts.
+
+Two baseline files under ``analysis/budgets/``:
+
+* ``programs.json``       — per program cell (``repro.analysis.programs``),
+  the measured :meth:`ProgramAudit.budget_row` numbers: jaxpr eqn count,
+  donated/aliased counts, output arity, fetch leaves, and the compiled
+  module's host-transfer/custom-call counts.  Pinning these means a future
+  change cannot silently lose donation, grow the per-round fetch, or route
+  the quant kernel's dequant through the host again.
+* ``compile_counts.json`` — per driver x placement x block cell, how many
+  new jitted programs and compiled signatures one tiny driver run creates
+  (measured as ``telemetry.metrics.jit_cache_stats`` deltas in a FIXED cell
+  order).  A retrace regression shows up as a signature delta above the pin.
+
+Baselines are device-count sensitive for sharded cells (the cluster mesh
+folds over the available devices), so those cell keys carry an ``@d{N}``
+suffix and the files can hold e.g. ``@d1`` and ``@d8`` rows side by side.
+``--update-baselines`` merges only the cells measured in this run.  A jax
+version mismatch between the baseline and the running interpreter downgrades
+mismatches to warnings — eqn/instruction counts legitimately drift across
+compiler versions.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from .findings import Finding, make_finding
+
+BUDGET_DIR = os.path.join("analysis", "budgets")
+PROGRAMS_FILE = "programs.json"
+COMPILES_FILE = "compile_counts.json"
+
+
+def budget_meta() -> Dict[str, Any]:
+    return {"jax": jax.__version__}
+
+
+def device_suffix() -> str:
+    return f"@d{len(jax.devices())}"
+
+
+def cell_key(name: str, placement: str) -> str:
+    """Sharded programs depend on the device count; vmap/kernel cells are
+    device-independent."""
+    return name + (device_suffix() if placement == "sharded" else "")
+
+
+def budget_path(root: str, filename: str) -> str:
+    return os.path.join(root, BUDGET_DIR, filename)
+
+
+def load_budget(path: str) -> Dict[str, Any]:
+    if not os.path.exists(path):
+        return {"meta": {}, "cells": {}}
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f)
+
+
+def merge_budget(path: str, measured: Dict[str, Dict[str, Any]]) -> None:
+    """Read-modify-write: update only the cells measured in this run, so
+    baselines for other device counts survive regeneration."""
+    doc = load_budget(path)
+    doc["meta"] = budget_meta()
+    cells = doc.setdefault("cells", {})
+    cells.update(measured)
+    doc["cells"] = {k: cells[k] for k in sorted(cells)}
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def compare_budget(path: str, measured: Dict[str, Dict[str, Any]],
+                   kind: str) -> Tuple[List[Finding], List[str]]:
+    """Findings for every measured cell that deviates from the checked-in
+    baseline.  ``kind`` labels the finding rule (``program-budget`` /
+    ``compile-budget``)."""
+    findings: List[Finding] = []
+    notes: List[str] = []
+    relpath = os.path.relpath(path, os.getcwd()) if os.path.isabs(path) else path
+    doc = load_budget(path)
+    if not doc["cells"]:
+        findings.append(make_finding(
+            f"{kind}-baseline-missing", "error", relpath, 0,
+            f"no {kind} baseline checked in — run "
+            f"`python -m repro.analysis --update-baselines` and commit",
+            context=kind))
+        return findings, notes
+
+    severity = "error"
+    base_jax = doc.get("meta", {}).get("jax")
+    if base_jax != jax.__version__:
+        severity = "warning"
+        notes.append(
+            f"{kind}: baseline pinned under jax {base_jax}, running "
+            f"{jax.__version__} — mismatches downgraded to warnings "
+            f"(regenerate with --update-baselines)")
+
+    for key in sorted(measured):
+        row = measured[key]
+        base = doc["cells"].get(key)
+        if base is None:
+            findings.append(make_finding(
+                f"{kind}-cell-missing", severity, relpath, 0,
+                f"cell '{key}' has no checked-in baseline — run "
+                f"--update-baselines",
+                context=key))
+            continue
+        diffs = [f"{f}: {base.get(f)} -> {row[f]}"
+                 for f in sorted(row) if base.get(f) != row[f]]
+        if diffs:
+            findings.append(make_finding(
+                f"{kind}-mismatch", severity, relpath, 0,
+                f"cell '{key}' deviates from baseline ({'; '.join(diffs)})",
+                context=key))
+    return findings, notes
+
+
+# ---------------------------------------------------------------------------
+# compile-count measurement
+# ---------------------------------------------------------------------------
+
+def _run_pigeon(ctx, placement: str, block: int):
+    from repro.core.protocol import run_pigeon
+    run_pigeon(ctx.module, ctx.data, ctx.pcfg, engine="batched",
+               placement=placement, block=block)
+
+
+def _run_splitfed(ctx, placement: str, block: int):
+    from repro.core.protocol import run_splitfed
+    run_splitfed(ctx.module, ctx.data, ctx.pcfg, engine="batched",
+                 placement=placement, block=block)
+
+
+def _run_sweep(ctx, placement: str, block: int):
+    from repro.core.engine import run_pigeon_sweep
+    run_pigeon_sweep(ctx.module, ctx.data, ctx.pcfg, seeds=(0, 1),
+                     placement=placement, block=block)
+
+
+# Fixed measurement order — the deltas are defined BY this order (a later
+# cell re-using an earlier cell's compiled program is the steady state the
+# budget wants to prove).
+DRIVER_CELLS: List[Tuple[str, Callable]] = [
+    ("pigeon/block1", lambda ctx, p: _run_pigeon(ctx, p, 1)),
+    ("pigeon/block2", lambda ctx, p: _run_pigeon(ctx, p, 2)),
+    ("pigeon/block2-again", lambda ctx, p: _run_pigeon(ctx, p, 2)),
+    ("splitfed/block1", lambda ctx, p: _run_splitfed(ctx, p, 1)),
+    ("splitfed/block2", lambda ctx, p: _run_splitfed(ctx, p, 2)),
+    ("sweep/block1", lambda ctx, p: _run_sweep(ctx, p, 1)),
+    ("sweep/block2", lambda ctx, p: _run_sweep(ctx, p, 2)),
+]
+
+
+def measure_compile_counts(ctx, placements: Tuple[str, ...]
+                           ) -> Dict[str, Dict[str, int]]:
+    """Run every driver cell on the tiny task and record how many new
+    programs / compiled signatures / runner builds each added.  The
+    ``*-again`` cells pin the steady state: a repeat run must add ZERO new
+    signatures (the retrace detector)."""
+    from repro.telemetry.metrics import jit_cache_stats
+    rows: Dict[str, Dict[str, int]] = {}
+    for placement in placements:
+        if placement == "kernel":
+            continue
+        for name, run in DRIVER_CELLS:
+            before = jit_cache_stats()
+            run(ctx, placement)
+            after = jit_cache_stats()
+            rows[cell_key(f"{name}@{placement}", placement)] = {
+                "new_programs": after["programs"] - before["programs"],
+                "new_signatures": (after["program_signatures"]
+                                   - before["program_signatures"]),
+                "runner_builds": (after["runner_cache_misses"]
+                                  - before["runner_cache_misses"]),
+            }
+    return rows
+
+
+def measure_program_budgets(ctx, cells) -> Tuple[Dict[str, Dict[str, Any]],
+                                                 List[Finding]]:
+    """Audit every program cell; returns (budget rows, invariant findings)."""
+    from .jaxpr_audit import audit_fn
+    from .programs import expected_counts
+    rows: Dict[str, Dict[str, Any]] = {}
+    findings: List[Finding] = []
+    for cell in cells:
+        runner, (fn, args, donate) = cell.realize(ctx)
+        expected_donated, expected_fetch = expected_counts(fn, args, donate)
+        lowered = None
+        if runner is not None:
+            entry = cell.name.split("/")[1].split("@")[0]
+            lowered = runner.lower(entry, *args)
+        audit = audit_fn(fn, args, name=cell_key(cell.name, cell.placement),
+                         donate_argnums=donate,
+                         expected_donated=expected_donated,
+                         expected_fetch_leaves=expected_fetch,
+                         lowered=lowered)
+        findings.extend(audit.findings)
+        rows[cell_key(cell.name, cell.placement)] = audit.budget_row()
+    return rows, findings

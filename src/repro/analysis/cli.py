@@ -1,0 +1,139 @@
+"""``python -m repro.analysis`` — the two-layer static analyzer.
+
+Modes:
+
+* default / ``--check``   — run the requested layers, print open findings,
+  exit nonzero if any survive the baselines (the CI gate);
+* ``--update-baselines``  — regenerate the budget baselines for the cells
+  measured under the current placements/device count (merge, not overwrite)
+  and exit 0.  Lint suppressions are NOT auto-added: edit
+  ``analysis/lint_baseline.json`` by hand and include a justification line.
+
+Layers (``--layers``): ``lints`` (AST rules), ``programs`` (jaxpr/HLO
+invariants + transfer budgets), ``compiles`` (driver compile-count budgets).
+Placements (``--placements``): ``vmap,kernel`` by default; add ``sharded``
+on the multi-device CI leg (sharded budget cells are keyed ``@d{N}``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from .findings import Baseline, Report, repo_root
+
+LAYERS = ("lints", "programs", "compiles")
+LINT_BASELINE = os.path.join("analysis", "lint_baseline.json")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static program auditor + repo lint pass")
+    p.add_argument("--check", action="store_true",
+                   help="explicit CI-gate mode (the default behaviour)")
+    p.add_argument("--update-baselines", action="store_true",
+                   help="regenerate budget baselines for measured cells")
+    p.add_argument("--json", metavar="PATH",
+                   help="write the findings report (provenance-stamped) here")
+    p.add_argument("--layers", default=",".join(LAYERS),
+                   help=f"comma list of {LAYERS}")
+    p.add_argument("--placements", default="vmap,kernel",
+                   help="comma list of vmap,kernel,sharded")
+    p.add_argument("--root", default=None,
+                   help="repo root to analyze (default: this checkout)")
+    return p
+
+
+def run(argv: List[str] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.check and args.update_baselines:
+        print("--check and --update-baselines are mutually exclusive",
+              file=sys.stderr)
+        return 2
+    root = repo_root(args.root)
+    layers = tuple(s for s in args.layers.split(",") if s)
+    placements = tuple(s for s in args.placements.split(",") if s)
+    for layer in layers:
+        if layer not in LAYERS:
+            print(f"unknown layer {layer!r} (choose from {LAYERS})",
+                  file=sys.stderr)
+            return 2
+
+    report = Report(baseline=Baseline.load(os.path.join(root, LINT_BASELINE)))
+
+    if "lints" in layers:
+        from .lints import run_lints
+        report.extend(run_lints(root))
+
+    need_programs = "programs" in layers
+    need_compiles = "compiles" in layers
+    if need_programs or need_compiles:
+        from . import budgets
+        from .programs import build_context, select_cells
+        ctx = build_context()
+        # compile budgets FIRST: program audits would otherwise warm the
+        # runner caches and zero out the deltas being measured
+        if need_compiles:
+            measured = budgets.measure_compile_counts(ctx, placements)
+            path = budgets.budget_path(root, budgets.COMPILES_FILE)
+            if args.update_baselines:
+                budgets.merge_budget(path, measured)
+                report.notes.append(
+                    f"updated {len(measured)} compile-count cells in {path}")
+            else:
+                fs, notes = budgets.compare_budget(path, measured,
+                                                   "compile-budget")
+                report.extend(fs)
+                report.notes.extend(notes)
+        if need_programs:
+            cells = select_cells(placements)
+            rows, inv = budgets.measure_program_budgets(ctx, cells)
+            report.extend(inv)
+            path = budgets.budget_path(root, budgets.PROGRAMS_FILE)
+            if args.update_baselines:
+                budgets.merge_budget(path, rows)
+                report.notes.append(
+                    f"updated {len(rows)} program cells in {path}")
+            else:
+                fs, notes = budgets.compare_budget(path, rows,
+                                                   "program-budget")
+                report.extend(fs)
+                report.notes.extend(notes)
+
+    open_findings = report.open_findings
+    doc = report.to_dict()
+    try:
+        from repro.telemetry.provenance import provenance
+        doc["provenance"] = provenance(tool="repro.analysis",
+                                       layers=list(layers),
+                                       placements=list(placements))
+    except Exception:  # noqa: BLE001 — the report must still be written
+        pass
+    if args.json:
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=2, sort_keys=True, default=str)
+            f.write("\n")
+
+    for note in report.notes:
+        print(f"note: {note}")
+    stale = doc.get("stale_suppressions", [])
+    if stale:
+        print(f"note: {len(stale)} stale suppression(s) in the lint "
+              f"baseline can be deleted")
+    for f in open_findings:
+        print(f.located())
+    n_sup = len(doc.get("suppressed", []))
+    print(f"{len(open_findings)} open finding(s), {n_sup} suppressed "
+          f"(layers={','.join(layers)}; placements={','.join(placements)})")
+    if args.update_baselines:
+        return 0
+    return 1 if any(f.severity == "error" for f in open_findings) else 0
+
+
+def main() -> None:
+    sys.exit(run())

@@ -1,0 +1,376 @@
+"""The repo-specific lint rules.
+
+Five rule classes, each encoding one bug class this codebase has actually
+hit or explicitly guards against:
+
+- ``prng-key-reuse``      — a jax.random key consumed by two calls without an
+                            interleaving ``split``/``fold_in`` rebind (the
+                            on-stream-resume bug class from PR 4).
+- ``hidden-host-sync``    — ``float()`` / ``.item()`` / ``np.asarray`` on
+                            device values inside ``core/engine.py`` /
+                            ``core/runner.py``; everything outside the
+                            whitelisted stacked-fetch sites breaks the
+                            one-fetch-per-round contract.
+- ``wall-clock``          — ``time.time()`` anywhere but
+                            ``telemetry/provenance.py``; timing must use the
+                            monotonic ``perf_counter`` family.
+- ``unseeded-np-random``  — module-level ``np.random.*`` draws off the global
+                            (unseeded) numpy state.
+- ``mutable-default-arg`` — the classic shared-mutable-default trap.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Tuple
+
+from ..findings import Finding
+from .base import (LintContext, LintRule, dotted_name, expr_calls,
+                   function_scopes, import_aliases, resolve_call,
+                   assignment_targets, scope_events, FunctionNode)
+
+
+# ---------------------------------------------------------------------------
+# prng-key-reuse
+# ---------------------------------------------------------------------------
+
+# jax.random calls whose first positional argument is a key they CONSUME.
+# (split / fold_in consume too — but their result is normally rebound, which
+# refreshes the name.)
+_KEY_NONCONSUMING = {"PRNGKey", "key", "key_data", "wrap_key_data",
+                     "default_prng_impl", "key_impl", "clone"}
+
+
+class PRNGKeyReuse(LintRule):
+    id = "prng-key-reuse"
+    severity = "error"
+    description = ("jax.random key consumed twice without an interleaving "
+                   "split/fold_in rebind")
+
+    def run(self, ctx: LintContext) -> Iterator[Finding]:
+        aliases = import_aliases(ctx.tree)
+        for _scope, body in function_scopes(ctx.tree):
+            consumed: Set[str] = set()
+            # branch stack: (state saved at branch entry, finished branches)
+            stack: List[Tuple[Set[str], List[Set[str]]]] = []
+            reported: Set[int] = set()
+            for kind, payload in scope_events(body):
+                if kind == "push":
+                    stack.append((set(consumed), []))
+                elif kind == "alt":
+                    saved, acc = stack[-1]
+                    acc.append(consumed)
+                    consumed = set(saved)
+                elif kind == "pop":
+                    _saved, acc = stack.pop()
+                    acc.append(consumed)
+                    consumed = set().union(*acc)
+                elif kind == "bind":
+                    consumed -= payload  # rebind refreshes the name
+                elif kind == "call":
+                    call = payload
+                    full = resolve_call(call, aliases)
+                    if not full or not full.startswith("jax.random."):
+                        continue
+                    fn = full.rsplit(".", 1)[1]
+                    if fn in _KEY_NONCONSUMING or not call.args:
+                        continue
+                    arg = call.args[0]
+                    if not isinstance(arg, ast.Name):
+                        continue
+                    name = arg.id
+                    if name in consumed:
+                        if id(call) not in reported:
+                            reported.add(id(call))
+                            yield self.finding(
+                                ctx, call,
+                                f"key '{name}' already consumed by an earlier "
+                                f"jax.random call; split/fold_in before "
+                                f"reusing it (jax.random.{fn})")
+                    else:
+                        consumed.add(name)
+
+
+# ---------------------------------------------------------------------------
+# hidden-host-sync
+# ---------------------------------------------------------------------------
+
+_SYNC_FILES = ("src/repro/core/engine.py", "src/repro/core/runner.py")
+
+# call targets whose results are host values regardless of their arguments
+_HOST_MODULE_PREFIX = ("numpy.", "os.", "time.", "math.")
+_HOST_BUILTINS = {"range", "len", "int", "str", "bool", "list", "tuple",
+                  "dict", "sorted", "enumerate", "zip", "min", "max", "sum",
+                  "abs", "isinstance", "getattr", "hasattr"}
+# repo-specific: results that are host values by construction.  jax.devices()
+# returns Device handles (mesh building), and the unpack_* helpers only ever
+# see the already-fetched stacked round vector — THE whitelisted fetch path.
+_HOST_CALL_SUFFIX = {"devices", "local_devices"}          # jax.devices etc.
+_HOST_WHITELIST_FNS = {"unpack_fetch", "unpack_block_fetch",
+                       "evaluate", "evaluate_sweep"}
+
+
+class HiddenHostSync(LintRule):
+    id = "hidden-host-sync"
+    severity = "error"
+    description = ("float()/.item()/np.asarray on a device value in the "
+                   "round engine outside whitelisted stacked-fetch sites")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath in _SYNC_FILES
+
+    def run(self, ctx: LintContext) -> Iterator[Finding]:
+        aliases = import_aliases(ctx.tree)
+        for _scope, body in function_scopes(ctx.tree):
+            host: Set[str] = set()
+            found: List[Finding] = []
+
+            def is_host(e: Optional[ast.AST]) -> bool:
+                """Conservative 'definitely a host value' — False means the
+                expression may hold a live device array."""
+                if e is None or isinstance(e, ast.Constant):
+                    return True
+                if isinstance(e, ast.Name):
+                    return e.id in host
+                if isinstance(e, ast.Attribute):
+                    base = dotted_name(e)
+                    if base is not None:
+                        head = base.split(".")[0]
+                        mod = aliases.get(head, head)
+                        if mod in ("numpy", "os", "time", "math"):
+                            return True
+                    return is_host(e.value)
+                if isinstance(e, (ast.Subscript, ast.Starred)):
+                    return is_host(e.value)
+                if isinstance(e, (ast.BinOp, ast.BoolOp, ast.Compare,
+                                  ast.UnaryOp, ast.IfExp, ast.Tuple, ast.List,
+                                  ast.Set, ast.Dict, ast.JoinedStr,
+                                  ast.FormattedValue, ast.Slice)):
+                    return all(is_host(c) for c in ast.iter_child_nodes(e)
+                               if not isinstance(c, (ast.operator, ast.boolop,
+                                                     ast.cmpop, ast.unaryop,
+                                                     ast.expr_context)))
+                if isinstance(e, ast.Call):
+                    return call_result_is_host(e)
+                if isinstance(e, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                  ast.GeneratorExp)):
+                    return all(is_host(g.iter) for g in e.generators)
+                return False
+
+            def call_result_is_host(call: ast.Call) -> bool:
+                # results of fetches/materializations are host values (the
+                # fetch itself is reported separately by ``check``)
+                if (isinstance(call.func, ast.Attribute)
+                        and call.func.attr in ("item", "tolist")):
+                    return True
+                full = resolve_call(call, aliases)
+                if full is None:
+                    return False
+                tail = full.rsplit(".", 1)[-1]
+                if full.startswith("jax.") and tail in _HOST_CALL_SUFFIX:
+                    return True
+                if tail in _HOST_WHITELIST_FNS:
+                    return True
+                return (full == "float" or full in _HOST_BUILTINS
+                        or full.startswith(_HOST_MODULE_PREFIX))
+
+            def check(call: ast.Call) -> None:
+                """Emit findings for the three sync idioms on device args."""
+                full = resolve_call(call, aliases)
+                if (isinstance(call.func, ast.Attribute)
+                        and call.func.attr == "item" and not call.args):
+                    if not is_host(call.func.value):
+                        found.append(self.finding(
+                            ctx, call,
+                            ".item() on a device value forces a per-element "
+                            "host sync; go through the stacked fetch"))
+                    return
+                args_host = all(is_host(a) for a in call.args)
+                if full in ("numpy.asarray", "numpy.array") and not args_host:
+                    found.append(self.finding(
+                        ctx, call,
+                        f"{full}() on a device value is a device->host "
+                        f"transfer; whitelist intended fetch sites in the "
+                        f"baseline"))
+                elif full == "float" and not args_host:
+                    found.append(self.finding(
+                        ctx, call,
+                        "float() on a device value blocks on a host sync; "
+                        "fetch through the stacked round vector instead"))
+
+            # The flat event stream does not tie calls to their binding
+            # statement, so this rule walks statements directly, threading
+            # the host-name set through assignments.
+            self._walk(body, host, is_host, check)
+            for f in found:
+                yield f
+
+    def _walk(self, body, host, is_host, check) -> None:
+        """Statement-order walk maintaining the host-name set; ``check``
+        emits findings as a side effect."""
+        for stmt in body:
+            if isinstance(stmt, FunctionNode) or isinstance(stmt, ast.ClassDef):
+                continue
+            # comprehension variables iterate host values -> host for the
+            # duration of this statement ([float(v) for v in fetched])
+            tmp: Set[str] = set()
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                     ast.GeneratorExp)):
+                    for g in node.generators:
+                        if is_host(g.iter):
+                            tmp |= _target_names(g.target)
+            tmp -= host
+            host |= tmp
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = getattr(stmt, "value", None)
+                for c in expr_calls(value):
+                    check(c)
+                if is_host(value):
+                    host |= assignment_targets(stmt)
+                else:
+                    host -= assignment_targets(stmt)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                for c in expr_calls(stmt.iter):
+                    check(c)
+                if is_host(stmt.iter):
+                    host |= assignment_targets(stmt)
+                else:
+                    host -= assignment_targets(stmt)
+                self._walk(stmt.body, host, is_host, check)
+                self._walk(stmt.orelse, host, is_host, check)
+            elif isinstance(stmt, ast.While):
+                for c in expr_calls(stmt.test):
+                    check(c)
+                self._walk(stmt.body, host, is_host, check)
+            elif isinstance(stmt, ast.If):
+                for c in expr_calls(stmt.test):
+                    check(c)
+                self._walk(stmt.body, host, is_host, check)
+                self._walk(stmt.orelse, host, is_host, check)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    for c in expr_calls(item.context_expr):
+                        check(c)
+                self._walk(stmt.body, host, is_host, check)
+            elif isinstance(stmt, ast.Try):
+                self._walk(stmt.body, host, is_host, check)
+                for h in stmt.handlers:
+                    self._walk(h.body, host, is_host, check)
+                self._walk(stmt.orelse, host, is_host, check)
+                self._walk(stmt.finalbody, host, is_host, check)
+            else:
+                for c in expr_calls(stmt):
+                    check(c)
+            host -= tmp
+
+
+def _target_names(t: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    if isinstance(t, ast.Name):
+        out.add(t.id)
+    elif isinstance(t, (ast.Tuple, ast.List)):
+        for e in t.elts:
+            out |= _target_names(e)
+    elif isinstance(t, ast.Starred):
+        out |= _target_names(t.value)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# wall-clock
+# ---------------------------------------------------------------------------
+
+class WallClock(LintRule):
+    id = "wall-clock"
+    severity = "error"
+    description = "time.time() outside telemetry/provenance.py"
+
+    EXEMPT = ("src/repro/telemetry/provenance.py",)
+
+    def applies(self, relpath: str) -> bool:
+        return relpath not in self.EXEMPT
+
+    def run(self, ctx: LintContext) -> Iterator[Finding]:
+        aliases = import_aliases(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                full = resolve_call(node, aliases)
+                if full in ("time.time", "time.time_ns"):
+                    yield self.finding(
+                        ctx, node,
+                        "time.time() steps under NTP; use time.perf_counter "
+                        "(timing) or telemetry.provenance (wall-clock stamps)")
+
+
+# ---------------------------------------------------------------------------
+# unseeded-np-random
+# ---------------------------------------------------------------------------
+
+class UnseededNpRandom(LintRule):
+    id = "unseeded-np-random"
+    severity = "error"
+    description = "module-level np.random.* draw off the global numpy state"
+
+    # constructors / seeding calls that are fine at module level
+    OK = {"default_rng", "Generator", "RandomState", "seed", "SeedSequence",
+          "PCG64", "Philox", "MT19937", "SFC64", "BitGenerator"}
+
+    def run(self, ctx: LintContext) -> Iterator[Finding]:
+        aliases = import_aliases(ctx.tree)
+        module_body = list(getattr(ctx.tree, "body", []))
+        for kind, payload in scope_events(module_body):
+            if kind != "call":
+                continue
+            full = resolve_call(payload, aliases)
+            if not full or not full.startswith("numpy.random."):
+                continue
+            fn = full.split(".")[-1]
+            if fn in self.OK:
+                continue
+            yield self.finding(
+                ctx, payload,
+                f"module-level np.random.{fn}() draws from the global "
+                f"unseeded state; thread an np.random.default_rng(seed) "
+                f"Generator instead")
+
+
+# ---------------------------------------------------------------------------
+# mutable-default-arg
+# ---------------------------------------------------------------------------
+
+class MutableDefaultArg(LintRule):
+    id = "mutable-default-arg"
+    severity = "error"
+    description = "mutable default argument shared across calls"
+
+    _MUTABLE_CALLS = {"list", "dict", "set", "bytearray",
+                      "collections.defaultdict", "collections.OrderedDict"}
+
+    def run(self, ctx: LintContext) -> Iterator[Finding]:
+        aliases = import_aliases(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                continue
+            defaults = list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]
+            for d in defaults:
+                bad = isinstance(d, (ast.List, ast.Dict, ast.Set))
+                if isinstance(d, ast.Call):
+                    full = resolve_call(d, aliases)
+                    bad = full in self._MUTABLE_CALLS
+                if bad:
+                    name = getattr(node, "name", "<lambda>")
+                    yield self.finding(
+                        ctx, d,
+                        f"mutable default argument in '{name}' is shared "
+                        f"across calls; default to None and construct inside")
+
+
+LINT_RULES: List[LintRule] = [
+    PRNGKeyReuse(),
+    HiddenHostSync(),
+    WallClock(),
+    UnseededNpRandom(),
+    MutableDefaultArg(),
+]

@@ -1,0 +1,240 @@
+"""The audited program catalog: every driver x placement x block cell.
+
+One tiny fixed task (4 clients, 32-sample shards) is enough — the audited
+invariants (dtypes, callbacks, donation, fetch arity) are shape-independent,
+and the tiny config keeps the whole audit under the CI job's time budget.
+
+Cells resolve through the SAME lru-cached factories the drivers use
+(``protocol_accept_runner`` / ``splitfed_accept_runner`` / ...), and lower
+through ``RoundRunner.lower`` which shares the runner's ``_jitted`` dispatch
+cache — the auditor provably sees the program object the drivers run, not a
+reconstruction of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEED = 0
+BLOCK_K = 2
+SWEEP_SEEDS = (0, 1)
+
+
+@dataclasses.dataclass
+class TinyContext:
+    """Deterministically-built inputs shared by every program cell."""
+    module: Any
+    data: Any
+    pcfg: Any
+    tm: Any
+    theta: Any
+    thetas: Any                     # stacked over SWEEP_SEEDS
+    x0: Any
+    y0: Any
+    round_payload: Any
+    block_payload: Any              # K = BLOCK_K rounds
+    sweep_payload: Any
+    sweep_block_payload: Any
+
+
+def build_context() -> TinyContext:
+    from repro.adversary import HONEST, resolve_threat_model
+    from repro.core import ProtocolConfig, from_cnn
+    from repro.core.clustering import make_clusters
+    from repro.core.engine import assemble_block, assemble_round
+    from repro.data import build_image_task
+
+    data, cfg = build_image_task("mnist", m_clients=4, d_m=32, d_o=16,
+                                 n_test=32, seed=SEED)
+    module = from_cnn(cfg)
+    # eval_every=2 so the block=2 compile cells actually engage round-block
+    # fusion instead of degrading to per-round execution
+    pcfg = ProtocolConfig(M=4, N=1, T=2, E=1, B=4, lr=0.05, seed=SEED,
+                          eval_every=2)
+    tm = resolve_threat_model(set(), HONEST, None)
+
+    rng = np.random.default_rng(SEED)
+    key = jax.random.PRNGKey(SEED)
+    theta = module.init(jax.random.PRNGKey(1))
+    x0, y0 = jnp.asarray(data.x0), jnp.asarray(data.y0)
+
+    clusters = make_clusters(rng, pcfg.M, pcfg.R)
+    key, round_payload = assemble_round(rng, key, data, clusters, pcfg, tm, 0)
+    key, _clusters_k, block_payload = assemble_block(rng, key, data, pcfg,
+                                                     tm, 0, BLOCK_K)
+
+    # sweep: S protocol replicas, inputs stacked over the seed axis exactly
+    # as run_pigeon_sweep assembles them
+    rngs = [np.random.default_rng(s) for s in SWEEP_SEEDS]
+    keys, k0s = [], []
+    for s in SWEEP_SEEDS:
+        k, k0 = jax.random.split(jax.random.PRNGKey(s))
+        keys.append(k)
+        k0s.append(k0)
+    thetas = jax.vmap(module.init)(jnp.stack(k0s))
+    xs, ys, avecs, krows = [], [], [], []
+    for i in range(len(SWEEP_SEEDS)):
+        cs = make_clusters(rngs[i], pcfg.M, pcfg.R)
+        keys[i], (x_i, y_i, avec_i, krow) = assemble_round(
+            rngs[i], keys[i], data, cs, pcfg, tm, 0)
+        xs.append(x_i)
+        ys.append(y_i)
+        avecs.append(avec_i)
+        krows.append(krow)
+    avec = jax.tree.map(lambda *ls: jnp.stack(ls), *avecs)
+    sweep_payload = (jnp.stack(xs), jnp.stack(ys), avec, jnp.stack(krows))
+    # sweep block: K per-round stacked payloads, stacked again on axis 0
+    sweep_block_payload = jax.tree.map(
+        lambda a: jnp.stack([a] * BLOCK_K), sweep_payload)
+
+    return TinyContext(module=module, data=data, pcfg=pcfg, tm=tm,
+                       theta=theta, thetas=thetas, x0=x0, y0=y0,
+                       round_payload=round_payload,
+                       block_payload=block_payload,
+                       sweep_payload=sweep_payload,
+                       sweep_block_payload=sweep_block_payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramCell:
+    """One audited program: a runner entry under a placement, or a kernel."""
+    name: str                       # e.g. "pigeon/accept@vmap"
+    placement: str                  # "vmap" | "sharded" | "kernel"
+    realize: Callable[[TinyContext], Tuple[Any, tuple]]
+    #        ctx -> (runner_or_None, (fn, args, donate_argnums))
+
+
+def _pigeon_runner(ctx: TinyContext, placement: str, selection: str = "argmin"):
+    from repro.core.runner import protocol_accept_runner
+    from repro.selection import resolve_policy
+    policy = resolve_policy(selection)
+    return protocol_accept_runner(ctx.module, ctx.pcfg.lr, placement, policy,
+                                  ctx.pcfg.tamper_check, ctx.pcfg.tamper_tol,
+                                  quant=ctx.pcfg.comm.quant)
+
+
+def _splitfed_runner(ctx: TinyContext, placement: str):
+    from repro.core.engine import splitfed_accept_runner
+    from repro.selection import resolve_policy
+    return splitfed_accept_runner(ctx.module, ctx.pcfg.lr, placement,
+                                  resolve_policy("argmin"),
+                                  quant=ctx.pcfg.comm.quant)
+
+
+def _sweep_runner(ctx: TinyContext, placement: str):
+    from repro.core.runner import protocol_runner
+    from repro.selection import resolve_policy
+    policy = resolve_policy("argmin")
+    return protocol_runner(ctx.module, ctx.pcfg.lr, placement,
+                           policy.needs_message_stats, policy,
+                           ctx.pcfg.comm.quant)
+
+
+def _entry_cell(runner_of, entry: str, args_of):
+    def realize(ctx: TinyContext):
+        r = runner_of(ctx)
+        return r, (r.audit_body(entry), args_of(ctx), r.donated_argnums(entry))
+    return realize
+
+
+def _quant_cell(stats: bool):
+    def realize(ctx: TinyContext):
+        from repro.kernels.quant_exchange import (quant_dequant,
+                                                  quant_dequant_stats)
+        x = jnp.asarray(np.linspace(-3, 3, 32 * 16,
+                                    dtype=np.float32).reshape(32, 16))
+        if stats:
+            fn = lambda v: quant_dequant_stats(v, "int8", interpret=True)
+        else:
+            fn = lambda v: quant_dequant(v, "int8", interpret=True)
+        return None, (fn, (x,), ())
+    return realize
+
+
+def _round_args(ctx):
+    return (ctx.theta, ctx.round_payload, (ctx.x0, ctx.y0))
+
+
+def _block_args(ctx):
+    return (ctx.theta, ctx.block_payload, (ctx.x0, ctx.y0))
+
+
+def _sweep_args(ctx):
+    return (ctx.thetas, ctx.sweep_payload, (ctx.x0, ctx.y0))
+
+
+def _sweep_block_args(ctx):
+    return (ctx.thetas, ctx.sweep_block_payload, (ctx.x0, ctx.y0))
+
+
+CELLS: List[ProgramCell] = [
+    # pigeon accept cascade: the default batched driver path
+    ProgramCell("pigeon/accept@vmap", "vmap",
+                _entry_cell(lambda c: _pigeon_runner(c, "vmap"),
+                            "accept", _round_args)),
+    ProgramCell("pigeon/accept@sharded", "sharded",
+                _entry_cell(lambda c: _pigeon_runner(c, "sharded"),
+                            "accept", _round_args)),
+    ProgramCell("pigeon/accept_block@vmap", "vmap",
+                _entry_cell(lambda c: _pigeon_runner(c, "vmap"),
+                            "accept_block", _block_args)),
+    ProgramCell("pigeon/accept_block@sharded", "sharded",
+                _entry_cell(lambda c: _pigeon_runner(c, "sharded"),
+                            "accept_block", _block_args)),
+    # representative non-argmin policy (message-stats lane active)
+    ProgramCell("pigeon/accept@vmap+loss_plus_distance", "vmap",
+                _entry_cell(lambda c: _pigeon_runner(
+                    c, "vmap", "loss_plus_distance"),
+                    "accept", _round_args)),
+    # launch-layer full round (selection + winner broadcast in-program)
+    ProgramCell("pigeon/round@vmap", "vmap",
+                _entry_cell(lambda c: _pigeon_runner(c, "vmap"),
+                            "round", _round_args)),
+    ProgramCell("pigeon/round@sharded", "sharded",
+                _entry_cell(lambda c: _pigeon_runner(c, "sharded"),
+                            "round", _round_args)),
+    # splitfed FedAvg + policy cascade
+    ProgramCell("splitfed/accept@vmap", "vmap",
+                _entry_cell(lambda c: _splitfed_runner(c, "vmap"),
+                            "accept", _round_args)),
+    ProgramCell("splitfed/accept_block@vmap", "vmap",
+                _entry_cell(lambda c: _splitfed_runner(c, "vmap"),
+                            "accept_block", _block_args)),
+    # multi-seed sweep
+    ProgramCell("sweep/sweep@vmap", "vmap",
+                _entry_cell(lambda c: _sweep_runner(c, "vmap"),
+                            "sweep", _sweep_args)),
+    ProgramCell("sweep/sweep_block@vmap", "vmap",
+                _entry_cell(lambda c: _sweep_runner(c, "vmap"),
+                            "sweep_block", _sweep_block_args)),
+    ProgramCell("sweep/sweep@sharded", "sharded",
+                _entry_cell(lambda c: _sweep_runner(c, "sharded"),
+                            "sweep", _sweep_args)),
+    # quant-exchange kernel (interpret mode on CPU; same program structure)
+    ProgramCell("kernels/quant_dequant@int8", "kernel",
+                _quant_cell(stats=False)),
+    ProgramCell("kernels/quant_dequant_stats@int8", "kernel",
+                _quant_cell(stats=True)),
+]
+
+
+def expected_counts(fn: Callable, args: tuple,
+                    donate_argnums: Tuple[int, ...]) -> Tuple[int, int]:
+    """(expected_donated, expected_fetch_leaves) for one cell: the donated
+    carry must alias leaf-for-leaf, and everything else the program returns
+    is the stacked fetch."""
+    donated = sum(len(jax.tree.leaves(args[i])) for i in donate_argnums)
+    out = jax.eval_shape(fn, *args)
+    return donated, len(jax.tree.leaves(out)) - donated
+
+
+def select_cells(placements: Tuple[str, ...] = ("vmap", "kernel"),
+                 names: Optional[Tuple[str, ...]] = None) -> List[ProgramCell]:
+    cells = [c for c in CELLS if c.placement in placements]
+    if names:
+        cells = [c for c in cells if c.name in names]
+    return cells

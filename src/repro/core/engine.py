@@ -651,27 +651,36 @@ def sweep_round(module: SplitModule, lr: float, theta_s, inputs, val,
 
 
 @lru_cache(maxsize=None)
-def _sweep_predict(module: SplitModule):
-    """Jitted seed-vmapped predict, cached per module so every evaluation
-    round reuses one compiled program instead of retracing a fresh wrapper."""
-    return jax.jit(jax.vmap(module.predict, in_axes=(0, 0, None)))
+def _sweep_count(module: SplitModule):
+    """Jitted seed-vmapped correct-prediction count, cached per module.
+    Counting on device avoids transferring the full (S, b, classes) logits
+    tensor to the host for every evaluation batch; the integer counts are
+    the same, so the resulting accuracies are bit-identical."""
+    @jax.jit
+    def count(gammas, phis, xb, yb):
+        logits = jax.vmap(module.predict, in_axes=(0, 0, None))(
+            gammas, phis, xb)                              # (S, b, classes)
+        return jnp.sum(jnp.argmax(logits, axis=-1) == yb[None],
+                       axis=-1, dtype=jnp.int32)           # (S,)
+    return count
 
 
 def evaluate_sweep(module: SplitModule, gammas, phis, x_test: np.ndarray,
                    y_test: np.ndarray, batch: int = 500) -> np.ndarray:
     """Per-seed test accuracy: ``module.predict`` vmapped over the seed axis,
-    batched over the test set exactly like ``protocol.evaluate``."""
-    n_seeds = jax.tree.leaves(gammas)[0].shape[0]
-    correct = np.zeros(n_seeds)
+    batched over the test set exactly like ``protocol.evaluate``.  Counts
+    accumulate on device; the evaluation's only host transfer is one final
+    (S,) int32 vector."""
+    count = _sweep_count(module)
+    correct = None
     total = 0
-    predict = _sweep_predict(module)
     for i in range(0, x_test.shape[0], batch):
         xb = jnp.asarray(x_test[i : i + batch])
-        yb = y_test[i : i + batch]
-        logits = np.asarray(predict(gammas, phis, xb))     # (S, b, ...)
-        pred = logits.argmax(-1)
-        correct += (pred == yb[None]).reshape(n_seeds, -1).sum(axis=1)
-        total += int(np.prod(yb.shape))
+        yb = jnp.asarray(y_test[i : i + batch])
+        c = count(gammas, phis, xb, yb)
+        correct = c if correct is None else correct + c
+        total += int(y_test[i : i + batch].shape[0])
+    correct = np.asarray(correct)              # the evaluation's one fetch
     return correct / float(total)
 
 

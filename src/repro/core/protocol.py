@@ -578,7 +578,9 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
 
         segments = plan_blocks(start_round, pcfg.T, block, _sync_round)
 
-        def _make_block(b, _state={"key": key}):
+        _state = {"key": key}
+
+        def _make_block(b):
             t0, k = segments[b]
             _state["key"], clusters_k, payload = assemble_block(
                 rng, _state["key"], data, pcfg, tm, t0, k)
@@ -677,7 +679,9 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
         from ..data.pipeline import RoundFeeder
         from .engine import assemble_round
 
-        def _make_round(t, _state={"key": key}):
+        _state = {"key": key}
+
+        def _make_round(t):
             clusters = make_clusters(rng, pcfg.M, pcfg.R)
             _state["key"], payload = assemble_round(
                 rng, _state["key"], data, clusters, pcfg, tm, t)
@@ -942,7 +946,9 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
                                lambda t: (t % pcfg.eval_every == 0
                                           or t == pcfg.T - 1))
 
-        def _make_block(b, _state={"key": key}):
+        _state = {"key": key}
+
+        def _make_block(b):
             t0, k = segments[b]
             _state["key"], clusters_k, payload = assemble_splitfed_block(
                 rng, _state["key"], data, pcfg, tm, t0, k)
@@ -995,7 +1001,9 @@ def run_splitfed(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
         from ..data.pipeline import RoundFeeder
         from .engine import assemble_splitfed_round
 
-        def _make_round(t, _state={"key": key}):
+        _state = {"key": key}
+
+        def _make_round(t):
             clusters = make_clusters(rng, pcfg.M, pcfg.R)
             _state["key"], payload = assemble_splitfed_round(
                 rng, _state["key"], data, clusters, pcfg, tm, t)

@@ -110,7 +110,7 @@ def onehot_select(stacked: Pytree, sel: jnp.ndarray) -> Pytree:
 
     def pick(x):
         mask = (jnp.arange(x.shape[0]) == sel).reshape((-1,) + (1,) * (x.ndim - 1))
-        masked = jnp.where(mask, x.astype(jnp.float32), 0.0)
+        masked = jnp.where(mask, x.astype(jnp.float32), jnp.float32(0.0))
         return jnp.sum(masked, axis=0).astype(x.dtype)
 
     return jax.tree.map(pick, stacked)
@@ -370,7 +370,8 @@ def masked_argmin(scores: jnp.ndarray, elig: jnp.ndarray) -> jnp.ndarray:
     """The one copy of the in-program winner rule (ineligible candidates
     sentinel to +inf) — vmap, sharded and sweep placements all call this, so
     their documented bit-for-bit agreement cannot drift."""
-    return jnp.argmin(jnp.where(elig, scores, jnp.inf)).astype(jnp.int32)
+    return jnp.argmin(jnp.where(elig, scores,
+                                jnp.float32(jnp.inf))).astype(jnp.int32)
 
 
 def policy_choose(spec: RoundSpec, policy, aux, vlosses, shard_losses):
@@ -646,7 +647,8 @@ class RoundRunner:
 
         def pick(x):
             mask = mine.reshape((-1,) + (1,) * (x.ndim - 1))
-            local = jnp.sum(jnp.where(mask, x.astype(jnp.float32), 0.0),
+            local = jnp.sum(jnp.where(mask, x.astype(jnp.float32),
+                                      jnp.float32(0.0)),
                             axis=0)
             return jax.lax.psum(local, ax).astype(x.dtype)
 
@@ -758,7 +760,8 @@ class RoundRunner:
 
             def pick(x):
                 mask = mine.reshape(mine.shape + (1,) * (x.ndim - 2))
-                local = jnp.sum(jnp.where(mask, x.astype(jnp.float32), 0.0),
+                local = jnp.sum(jnp.where(mask, x.astype(jnp.float32),
+                                      jnp.float32(0.0)),
                                 axis=1)
                 return jax.lax.psum(local, ax).astype(x.dtype)
 
@@ -786,18 +789,36 @@ class RoundRunner:
     _DONATED = frozenset({"accept", "sweep", "accept_block", "sweep_block",
                           "round_block"})
 
+    ENTRIES = ("candidates", "round", "accept", "sweep", "accept_block",
+               "sweep_block", "round_block")
+
+    def audit_body(self, which: str) -> Callable:
+        """The un-jitted body of one entry — the static-analysis layer
+        retraces this under alternative configs (e.g. ``enable_x64`` to
+        surface weak-type f64 promotion) without touching the dispatch
+        cache."""
+        return {"candidates": self.candidates_fn, "round": self.round_fn,
+                "accept": self.accept_fn, "sweep": self.sweep_fn,
+                "accept_block": self.accept_block_fn,
+                "sweep_block": self.sweep_block_fn,
+                "round_block": self.round_block_fn}[which]()
+
+    def donated_argnums(self, which: str) -> tuple:
+        return (0,) if which in self._DONATED else ()
+
     def _compiled(self, which: str) -> Callable:
         fn = self._jitted.get(which)
         if fn is None:
-            body = {"candidates": self.candidates_fn, "round": self.round_fn,
-                    "accept": self.accept_fn, "sweep": self.sweep_fn,
-                    "accept_block": self.accept_block_fn,
-                    "sweep_block": self.sweep_block_fn,
-                    "round_block": self.round_block_fn}[which]()
-            donate = (0,) if which in self._DONATED else ()
-            fn = jax.jit(body, donate_argnums=donate)
+            fn = jax.jit(self.audit_body(which),
+                         donate_argnums=self.donated_argnums(which))
             self._jitted[which] = fn
         return fn
+
+    def lower(self, which: str, *args):
+        """Audit hook: the lowered (pre-compile) program of a jitted entry,
+        donation flags included.  Shares ``_jitted`` with dispatch, so the
+        auditor provably sees the same program object the drivers run."""
+        return self._compiled(which).lower(*args)
 
     def _call(self, which: str, *args):
         """Invoke a jitted entry, recording the first call's wall time

@@ -64,9 +64,9 @@ def _qdq_block(a: jnp.ndarray, fmt: str):
     Returns (dequantized block, per-row scales).  The round trip through the
     narrow dtype is explicit, so the dequantized values are exactly what a
     receiver reconstructs from the wire bytes."""
-    qmax = QMAX[fmt]
+    qmax = jnp.float32(QMAX[fmt])
     amax = jnp.max(jnp.abs(a), axis=1)
-    scale = jnp.maximum(amax, _EPS) / qmax
+    scale = jnp.maximum(amax, jnp.float32(_EPS)) / qmax
     s = scale[:, None]
     if fmt == INT8:
         q = jnp.clip(jnp.round(a / s), -qmax, qmax).astype(jnp.int8)
@@ -121,20 +121,22 @@ def _quant_stats_kernel(x_ref, deq_ref, scale_ref, stats_ref, colsum_scr,
     def _accumulate_mean():
         colsum_scr[...] = colsum_scr[...] + jnp.sum(deq, axis=0, keepdims=True)
 
+    nt = jnp.float32(n_total)
+
     @pl.when(p == 1)
     def _accumulate_stats():
-        mu = colsum_scr[...] / n_total
+        mu = colsum_scr[...] / nt
         dev = deq - mu
         acc_scr[0] = acc_scr[0] + jnp.sum(jnp.sqrt(jnp.sum(dev * dev, axis=1)))
-        acc_scr[1] = acc_scr[1] + jnp.sum(jnp.minimum(deq, 0.0) ** 2)
+        acc_scr[1] = acc_scr[1] + jnp.sum(jnp.minimum(deq, jnp.float32(0.0)) ** 2)
         acc_scr[2] = acc_scr[2] + jnp.sum(deq * deq)
 
     @pl.when((p == 1) & (i == nb - 1))
     def _finish():
-        mu = colsum_scr[...] / n_total
-        mu_norm = jnp.maximum(jnp.sqrt(jnp.sum(mu * mu)), _EPS)
-        dispersion = (acc_scr[0] / n_total) / mu_norm
-        total = jnp.maximum(jnp.sqrt(acc_scr[2]), _EPS)
+        mu = colsum_scr[...] / nt
+        mu_norm = jnp.maximum(jnp.sqrt(jnp.sum(mu * mu)), jnp.float32(_EPS))
+        dispersion = (acc_scr[0] / nt) / mu_norm
+        total = jnp.maximum(jnp.sqrt(acc_scr[2]), jnp.float32(_EPS))
         support = jnp.sqrt(acc_scr[1]) / total
         stats_ref[...] = jnp.stack([dispersion, support])
 

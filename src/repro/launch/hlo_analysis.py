@@ -318,6 +318,33 @@ def analyze_hlo(hlo: str) -> HLOAnalysis:
                        agg.coll_by_kind, agg.coll_count)
 
 
+HOST_TRANSFER_OPS = ("outfeed", "infeed", "send", "recv", "send-done",
+                     "recv-done")
+
+
+def host_transfer_counts(hlo: str) -> Dict[str, int]:
+    """Counts of device<->host channel ops and host-callback custom-calls
+    across every computation of the module.  The static program auditor
+    (``repro.analysis``) pins these to zero for device round programs: the
+    only data that may leave the device is the jit outputs themselves (the
+    stacked round/block fetch)."""
+    comps = parse_computations(hlo)
+    out: Dict[str, int] = {op: 0 for op in HOST_TRANSFER_OPS}
+    out["host_callback"] = 0
+    out["custom_call"] = 0
+    out["instructions"] = 0
+    for comp in comps.values():
+        for ins in comp.instrs:
+            out["instructions"] += 1
+            if ins.op in HOST_TRANSFER_OPS:
+                out[ins.op] += 1
+            elif ins.op == "custom-call":
+                out["custom_call"] += 1
+                if "callback" in ins.rest:
+                    out["host_callback"] += 1
+    return out
+
+
 def _accumulate(agg: CompCost, sub: CompCost, mult: float,
                 include_bytes: bool = True) -> None:
     agg.flops += sub.flops * mult

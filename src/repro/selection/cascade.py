@@ -43,7 +43,8 @@ def masked_first_accept(scores: jnp.ndarray, eligible: jnp.ndarray,
     when verification is disabled)."""
     eligible = jnp.where(jnp.any(eligible), eligible,
                          jnp.ones_like(eligible))
-    masked = jnp.where(eligible, scores.astype(jnp.float32), jnp.inf)
+    masked = jnp.where(eligible, scores.astype(jnp.float32),
+                       jnp.float32(jnp.inf))
     ranks = jnp.argsort(masked)                      # stable: eligible first
     ok = (passed & eligible)[ranks]
     first = jnp.argmax(ok)                           # 0 when none pass

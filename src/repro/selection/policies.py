@@ -38,12 +38,31 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Union
 
+import jax
 import jax.numpy as jnp
 
 # indices into the message-stats lane of ScoreContext (see
 # repro.core.split.MESSAGE_STAT_NAMES)
 _STAT_DISPERSION = 0
 _STAT_SUPPORT = 1
+
+
+def _median(x: jnp.ndarray, axis=None, keepdims: bool = False) -> jnp.ndarray:
+    """Sort-based median.  ``jnp.median`` routes through ``jnp.quantile``,
+    whose fractional-index arithmetic traces float64 eqns under x64; picking
+    the two middle order statistics directly keeps the program f32-pure
+    (and 0.5 * (lo + hi) is bit-identical to quantile interpolation at 0.5)."""
+    if axis is None:
+        s = jnp.sort(x.reshape(-1))
+        n = s.shape[0]
+        m = jnp.float32(0.5) * (s[(n - 1) // 2] + s[n // 2])
+        return jnp.reshape(m, (1,) * x.ndim) if keepdims else m
+    s = jnp.sort(x, axis=axis)
+    n = s.shape[axis]
+    lo = jax.lax.index_in_dim(s, (n - 1) // 2, axis, keepdims=True)
+    hi = jax.lax.index_in_dim(s, n // 2, axis, keepdims=True)
+    m = jnp.float32(0.5) * (lo + hi)
+    return m if keepdims else jnp.squeeze(m, axis)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,9 +80,9 @@ def robust_z(x: jnp.ndarray, axis=None, eps: float = 1e-6) -> jnp.ndarray:
     """Median/MAD z-score (1.4826 * MAD estimates sigma under normality).
     ``eps`` keeps degenerate all-equal features at z = 0 instead of NaN."""
     x = x.astype(jnp.float32)
-    med = jnp.median(x, axis=axis, keepdims=axis is not None)
-    mad = jnp.median(jnp.abs(x - med), axis=axis, keepdims=axis is not None)
-    return (x - med) / (1.4826 * mad + eps)
+    med = _median(x, axis=axis, keepdims=axis is not None)
+    mad = _median(jnp.abs(x - med), axis=axis, keepdims=axis is not None)
+    return (x - med) / (jnp.float32(1.4826) * mad + jnp.float32(eps))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,7 +134,7 @@ class MedianOfMeansPolicy(SelectionPolicy):
     def score(self, ctx: ScoreContext) -> jnp.ndarray:
         assert ctx.shard_losses is not None, \
             f"{self.name} needs per-shard validation losses"
-        return jnp.median(ctx.shard_losses.astype(jnp.float32), axis=1)
+        return _median(ctx.shard_losses.astype(jnp.float32), axis=1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,10 +176,12 @@ class LossPlusDistancePolicy(SelectionPolicy):
         flat = stats.reshape(r * m_bar, -1)
         z_disp = robust_z(flat[:, _STAT_DISPERSION])
         z_sup = robust_z(flat[:, _STAT_SUPPORT])
-        anomaly = jnp.maximum(jnp.maximum(z_sup, -z_disp), 0.0)
-        anomaly = jnp.clip(anomaly, 0.0, self.z_clip).reshape(r, m_bar)
+        zero = jnp.float32(0.0)
+        anomaly = jnp.maximum(jnp.maximum(z_sup, -z_disp), zero)
+        anomaly = jnp.clip(anomaly, zero,
+                           jnp.float32(self.z_clip)).reshape(r, m_bar)
         cluster_dist = jnp.maximum(jnp.max(anomaly, axis=1)
-                                   - jnp.float32(self.margin), 0.0)
+                                   - jnp.float32(self.margin), zero)
         loss_term = jnp.tanh(robust_z(ctx.vlosses)
                              / jnp.float32(self.loss_scale))
         return loss_term + jnp.float32(self.weight) * cluster_dist

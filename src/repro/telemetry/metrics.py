@@ -113,3 +113,25 @@ def jit_cache_stats() -> Dict[str, Any]:
     stats["trace_compile_s"] = round(compile_s, 6)
     stats.update(compile_cache_stats())
     return stats
+
+
+def program_census() -> Dict[str, Dict[str, int]]:
+    """Deterministic placement/entry breakdown of the compiled programs
+    behind :func:`jit_cache_stats`'s aggregate counts: for every live
+    RoundRunner, each jitted entry contributes to its ``"{placement}/{entry}"``
+    row (programs = jitted entry objects, signatures = compiled shape
+    signatures inside each).  The static-analysis layer's compile-count
+    budgets (``repro.analysis.budgets``) pin these rows per driver cell —
+    a retrace regression shows up as a signature count above baseline."""
+    from ..core import runner as _runner
+    census: Dict[str, Dict[str, int]] = {}
+    for r in _runner.live_runners():
+        for which, f in r._jitted.items():
+            key = f"{getattr(r, 'placement', '?')}/{which}"
+            row = census.setdefault(key, {"programs": 0, "signatures": 0})
+            row["programs"] += 1
+            try:
+                row["signatures"] += f._cache_size()
+            except (AttributeError, TypeError):
+                pass
+    return {k: census[k] for k in sorted(census)}

@@ -20,9 +20,33 @@ import json
 import os
 from typing import Any, Dict, List, Optional
 
+import numpy as np
+
+
+def materialize(event: Any) -> Any:
+    """One up-front host materialization of an event tree.
+
+    Array-like values (numpy or device arrays) are pulled with a **single**
+    ``np.asarray`` each and converted to nested Python lists/scalars here,
+    before serialization — the encoder never walks a device array
+    element-by-element (the historical ``.item()``-per-scalar default
+    encoder issued one device sync per element mid-``json.dumps``)."""
+    if isinstance(event, dict):
+        return {k: materialize(v) for k, v in event.items()}
+    if isinstance(event, (list, tuple)):
+        return [materialize(v) for v in event]
+    if isinstance(event, (str, bool, int, float)) or event is None:
+        return event
+    if isinstance(event, np.generic):
+        return event.item()
+    if isinstance(event, np.ndarray) or hasattr(event, "__array__"):
+        arr = np.asarray(event)
+        return arr.item() if arr.ndim == 0 else arr.tolist()
+    return event
+
 
 def _jsonable(o: Any) -> Any:
-    """Default encoder for numpy scalars/arrays that leak into events."""
+    """Last-resort encoder for exotic types that survive materialization."""
     if hasattr(o, "item") and not hasattr(o, "__len__"):
         return o.item()
     if hasattr(o, "tolist"):
@@ -82,7 +106,7 @@ class JSONLSink(Sink):
             self._f.flush()
 
     def emit(self, event: Dict[str, Any]) -> None:
-        self._f.write(json.dumps(event, default=_jsonable) + "\n")
+        self._f.write(json.dumps(materialize(event), default=_jsonable) + "\n")
         self._f.flush()
         if self._fsync:
             os.fsync(self._f.fileno())
