@@ -83,6 +83,19 @@ def csv_row(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.0f},{derived}", flush=True)
 
 
+def throughput_fields(elapsed_s: float, rounds: int, jobs: int = 1,
+                      dispatches: int = 0) -> Dict[str, float]:
+    """Comparable throughput fields for ``experiments/*.json`` result
+    records: rounds/sec and jobs/sec over the timed window, plus the mean
+    device dispatches per round (1.0 = per-round execution; 1/K under
+    round-block fusion; 1/(J*K) per job-round under the job pool) — so the
+    perf trajectory stays comparable across PRs."""
+    e = max(elapsed_s, 1e-12)
+    return {"rounds_per_sec": rounds / e,
+            "jobs_per_sec": jobs / e,
+            "dispatches_per_round": dispatches / max(rounds, 1)}
+
+
 class RoundTimer(Stopwatch):
     """A :class:`repro.telemetry.Stopwatch` (monotonic ``perf_counter`` —
     wall-clock ``time.time()`` can step under NTP) reporting per-round us."""

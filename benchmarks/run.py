@@ -16,7 +16,7 @@ def main() -> None:
                     help="paper-scale Table II parameters (hours on CPU)")
     ap.add_argument("--only", default=None,
                     help="table1|fig3|fig4|fig5|ablation|roofline|robustness|"
-                         "robustness_quant|pipeline|placements|fusion")
+                         "robustness_quant|pipeline|placements|fusion|pool")
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="enable JAX's persistent compilation cache in DIR "
                          "(default: $REPRO_COMPILE_CACHE if set); repeated "
@@ -71,9 +71,9 @@ def main() -> None:
         formats = tuple(resolve_quant(q) for q in formats)  # fail fast
 
     from . import (ablation_shared_set, fig3_mnist_attacks, fig4_cifar_attacks,
-                   fig5_fig6_vary_n, pipeline_overlap, placement_grid,
-                   robustness_matrix, roofline_report, round_fusion,
-                   table1_overhead)
+                   fig5_fig6_vary_n, job_throughput, pipeline_overlap,
+                   placement_grid, robustness_matrix, roofline_report,
+                   round_fusion, table1_overhead)
 
     benches = {
         "table1": lambda: table1_overhead.run(args.full, telemetry=telemetry),
@@ -94,6 +94,7 @@ def main() -> None:
         "pipeline": lambda: pipeline_overlap.run(args.full),
         "placements": lambda: placement_grid.run(args.full),
         "fusion": lambda: round_fusion.run(args.full),
+        "pool": lambda: job_throughput.run(args.full),
     }
     if args.only and args.only not in benches:
         # an unknown name used to silently skip every benchmark and exit 0

@@ -143,6 +143,15 @@ def _run_sweep(ctx, placement: str, block: int):
                      placement=placement, block=block)
 
 
+def _run_pool(ctx, placement: str, block: int):
+    import dataclasses as _dc
+
+    from repro.core.jobs import JobSpec, run_job_pool
+    specs = [JobSpec(name=f"job{s}", module=ctx.module, data=ctx.data,
+                     pcfg=_dc.replace(ctx.pcfg, seed=s)) for s in (0, 1)]
+    run_job_pool(specs, block=block, placement=placement)
+
+
 # Fixed measurement order — the deltas are defined BY this order (a later
 # cell re-using an earlier cell's compiled program is the steady state the
 # budget wants to prove).
@@ -154,6 +163,8 @@ DRIVER_CELLS: List[Tuple[str, Callable]] = [
     ("splitfed/block2", lambda ctx, p: _run_splitfed(ctx, p, 2)),
     ("sweep/block1", lambda ctx, p: _run_sweep(ctx, p, 1)),
     ("sweep/block2", lambda ctx, p: _run_sweep(ctx, p, 2)),
+    ("pool/block2", lambda ctx, p: _run_pool(ctx, p, 2)),
+    ("pool/block2-again", lambda ctx, p: _run_pool(ctx, p, 2)),
 ]
 
 

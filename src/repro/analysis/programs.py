@@ -39,6 +39,9 @@ class TinyContext:
     block_payload: Any              # K = BLOCK_K rounds
     sweep_payload: Any
     sweep_block_payload: Any
+    pool_block_payload: Any         # J = 2 lanes x K = BLOCK_K rounds
+    pool_val: Any
+    pool_active: Any
 
 
 def build_context() -> TinyContext:
@@ -91,12 +94,23 @@ def build_context() -> TinyContext:
     sweep_block_payload = jax.tree.map(
         lambda a: jnp.stack([a] * BLOCK_K), sweep_payload)
 
+    # job pool: J=2 lanes of the block payload (lane-identical inputs are
+    # fine for auditing — lane content never shapes the program), thetas
+    # reused as the stacked 2-job carry, both lanes active
+    pool_block_payload = jax.tree.map(lambda a: jnp.stack([a, a]),
+                                      block_payload)
+    pool_val = (jnp.stack([x0, x0]), jnp.stack([y0, y0]))
+    pool_active = jnp.array([True, True])
+
     return TinyContext(module=module, data=data, pcfg=pcfg, tm=tm,
                        theta=theta, thetas=thetas, x0=x0, y0=y0,
                        round_payload=round_payload,
                        block_payload=block_payload,
                        sweep_payload=sweep_payload,
-                       sweep_block_payload=sweep_block_payload)
+                       sweep_block_payload=sweep_block_payload,
+                       pool_block_payload=pool_block_payload,
+                       pool_val=pool_val,
+                       pool_active=pool_active)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +185,11 @@ def _sweep_block_args(ctx):
     return (ctx.thetas, ctx.sweep_block_payload, (ctx.x0, ctx.y0))
 
 
+def _pool_block_args(ctx):
+    return (ctx.thetas, ctx.pool_block_payload, ctx.pool_val,
+            ctx.pool_active)
+
+
 CELLS: List[ProgramCell] = [
     # pigeon accept cascade: the default batched driver path
     ProgramCell("pigeon/accept@vmap", "vmap",
@@ -204,6 +223,14 @@ CELLS: List[ProgramCell] = [
     ProgramCell("splitfed/accept_block@vmap", "vmap",
                 _entry_cell(lambda c: _splitfed_runner(c, "vmap"),
                             "accept_block", _block_args)),
+    # job pool: J jobs megabatched onto the accept_block scan (one stacked
+    # (J, K, 2R+3) fetch; theta_J carry donated)
+    ProgramCell("pigeon/pool_accept_block@vmap", "vmap",
+                _entry_cell(lambda c: _pigeon_runner(c, "vmap"),
+                            "pool_accept_block", _pool_block_args)),
+    ProgramCell("pigeon/pool_accept_block@sharded", "sharded",
+                _entry_cell(lambda c: _pigeon_runner(c, "sharded"),
+                            "pool_accept_block", _pool_block_args)),
     # multi-seed sweep
     ProgramCell("sweep/sweep@vmap", "vmap",
                 _entry_cell(lambda c: _sweep_runner(c, "vmap"),

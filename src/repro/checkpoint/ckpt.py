@@ -158,3 +158,16 @@ def restore_protocol_state(rng: np.random.Generator, key_like,
     if _is_typed_key(key_like):
         return jax.random.wrap_key_data(raw)
     return raw
+
+
+def job_checkpoint_metadata(t: int, stream_snap: Dict[str, Any],
+                            job: Optional[str] = None) -> Dict[str, Any]:
+    """Checkpoint metadata for one protocol run's round ``t``: the round
+    index + randomness-stream snapshot the solo driver stores, plus (for
+    pool-scheduled jobs) the owning job's name — the snapshot layout is
+    byte-compatible with a solo run's, so a job checkpointed under the pool
+    resumes under the solo driver and vice versa."""
+    meta = {"round": t, **stream_snap}
+    if job is not None:
+        meta["job"] = job
+    return meta

@@ -23,6 +23,7 @@ from .comm import (QUANT_FORMATS, CommConfig, fp8_supported, message_bytes,
 from .compile_cache import compile_cache_stats, enable_compile_cache
 from .engine import (batched_round, onehot_select, run_pigeon_sweep,
                      train_round_batched)
+from .jobs import JobPool, JobSpec, run_job_pool
 from .protocol import (ENGINES, ClientData, CommMeter, History, ProtocolConfig,
                        run_pigeon, run_pigeon_plus, run_splitfed,
                        run_vanilla_sl)
@@ -48,6 +49,7 @@ __all__ = [
     "Telemetry",
     "run_pigeon", "run_pigeon_plus", "run_splitfed", "run_vanilla_sl",
     "run_pigeon_sweep", "batched_round", "train_round_batched", "onehot_select",
+    "JobSpec", "JobPool", "run_job_pool",
     "PLACEMENTS", "RoundRunner", "RoundSpec", "VerifyConfig", "cluster_map",
     "select_map", "cluster_mesh", "sweep_map", "sweep_mesh",
     "check_partial_auto_backend", "protocol_round_spec", "protocol_runner",

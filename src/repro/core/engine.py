@@ -502,7 +502,8 @@ def stack_payloads(payloads):
 
 
 def assemble_block(rng: np.random.Generator, key: jax.Array, data: ClientData,
-                   pcfg: ProtocolConfig, tm: ThreatModel, t0: int, k: int):
+                   pcfg: ProtocolConfig, tm: ThreatModel, t0: int, k: int,
+                   out=None):
     """Host-side payload for a K-round block starting at round ``t0``:
     cluster partitions, stacked mini-batches, derived per-client keys and
     attack state for rounds ``t0 .. t0+k-1``, stacked to a leading K axis.
@@ -517,9 +518,16 @@ def assemble_block(rng: np.random.Generator, key: jax.Array, data: ClientData,
 
     Returns ``(advanced_key, clusters_k, block_inputs)`` where ``clusters_k``
     is the K per-round cluster partitions (the host replay needs them for
-    History/honesty/CommMeter bookkeeping)."""
+    History/honesty/CommMeter bookkeeping).
+
+    ``out=(xs_k, ys_k)`` writes the batches into caller-provided numpy
+    buffers — e.g. one lane view of a job pool's ``(J, K, ...)`` block
+    buffer — and returns the SMALL leaves raw (a list of K ``(avec, keys)``
+    payloads, no stacking, no device conversion): the caller owns both the
+    transfer and the stack, so a J-lane pool block pays one host->device
+    copy per leaf instead of J."""
     return _assemble_block_with(assemble_round, rng, key, data, pcfg, tm,
-                                t0, k)
+                                t0, k, out=out)
 
 
 def assemble_splitfed_block(rng: np.random.Generator, key: jax.Array,
@@ -535,17 +543,24 @@ def assemble_splitfed_block(rng: np.random.Generator, key: jax.Array,
 def _assemble_block_with(assemble_one, rng: np.random.Generator,
                          key: jax.Array, data: ClientData,
                          pcfg: ProtocolConfig, tm: ThreatModel,
-                         t0: int, k: int):
+                         t0: int, k: int, out=None):
     """Shared K-round assembly: the mini-batches of all K rounds are gathered
     into ONE preallocated (K, R, M_bar, E, B, ...) host buffer (per-round
     ``out=`` views of it), so the block pays a single host->device transfer
     instead of K transfers followed by a device-side re-stack; the small
-    leaves (AttackVec state, per-client keys) are stacked on device."""
+    leaves (AttackVec state, per-client keys) are stacked on device.
+
+    With ``out=(xs_k, ys_k)`` the caller provides the buffers and gets the
+    small leaves back raw (list of K ``(avec, keys)``) — no stacking, no
+    device conversion (see :func:`assemble_block`)."""
     m_bar = pcfg.M // pcfg.R
-    xs_k = np.empty((k, pcfg.R, m_bar, pcfg.E, pcfg.B) + data.x.shape[2:],
-                    dtype=data.x.dtype)
-    ys_k = np.empty((k, pcfg.R, m_bar, pcfg.E, pcfg.B) + data.y.shape[2:],
-                    dtype=data.y.dtype)
+    if out is None:
+        xs_k = np.empty((k, pcfg.R, m_bar, pcfg.E, pcfg.B) + data.x.shape[2:],
+                        dtype=data.x.dtype)
+        ys_k = np.empty((k, pcfg.R, m_bar, pcfg.E, pcfg.B) + data.y.shape[2:],
+                        dtype=data.y.dtype)
+    else:
+        xs_k, ys_k = out
     clusters_k, small = [], []
     for i in range(k):
         clusters = make_clusters(rng, pcfg.M, pcfg.R)
@@ -554,6 +569,8 @@ def _assemble_block_with(assemble_one, rng: np.random.Generator,
                                                out=(xs_k[i], ys_k[i]))
         clusters_k.append(clusters)
         small.append((avec, keys))
+    if out is not None:
+        return key, clusters_k, small
     avec_k, keys_k = stack_payloads(small)
     return key, clusters_k, (jnp.asarray(xs_k), jnp.asarray(ys_k),
                              avec_k, keys_k)

@@ -426,7 +426,12 @@ def run_pigeon(module: SplitModule, data: ClientData, pcfg: ProtocolConfig,
       :mod:`repro.core.comm` for what is (and is not) quantized.
 
     * ``engine`` — ``"sequential"`` (reference oracle) or ``"batched"`` (one
-      compiled program per round via the RoundRunner).
+      compiled program per round via the RoundRunner).  For MANY concurrent
+      runs of compatible specs, :func:`repro.core.jobs.run_job_pool`
+      megabatches them onto a shared job-lane program (one dispatch and one
+      stacked fetch per pool block across all jobs) with each job's History
+      bit-identical to its solo ``run_pigeon`` — this driver stays the
+      single-job reference path the pool is pinned against.
     * ``selection`` — a registered :mod:`repro.selection` policy name
       (``"argmin"`` / ``"median_of_means"`` / ``"loss_plus_distance"`` /
       ``"trimmed"``) or a policy instance.  The default ``"argmin"`` is the

@@ -131,13 +131,14 @@ def cluster_mesh(r: int, max_devices: Optional[int] = None) -> Mesh:
     the cluster axis (R_local = 1 when R <= device count)."""
     devs = jax.devices()
     n = min(len(devs), max_devices if max_devices else len(devs))
-    while r % n:
-        n -= 1
-    return Mesh(np.array(devs[:n]), ("pod",))
+    return Mesh(np.array(devs[:_largest_divisor(r, n)]), ("pod",))
 
 
 def _largest_divisor(n: int, cap: int) -> int:
-    d = min(n, cap)
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1 always: a cap of
+    zero or below degrades to the trivial divisor instead of dividing by
+    zero — prime R on a 1-device host must still yield a valid mesh)."""
+    d = max(1, min(n, cap))
     while n % d:
         d -= 1
     return d
@@ -149,10 +150,14 @@ def sweep_mesh(s: int, r: int, max_devices: Optional[int] = None) -> Mesh:
     of the available devices into (divisor of S) x (divisor of R) that covers
     the most devices, so the S x R replica grid spreads as wide as the
     hardware allows (ties resolved toward the wider cluster axis — the
-    cluster dimension is the paper's dominant parallelism)."""
+    cluster dimension is the paper's dominant parallelism).  The ``sn=1``
+    seed never loses to worse factorisations: when neither S nor R factor
+    against the device count (both prime, say), the result degrades to the
+    widest 1-D cluster mesh (``1 x _largest_divisor(r, n)``), never below
+    it."""
     devs = jax.devices()
-    n = min(len(devs), max_devices if max_devices else len(devs))
-    best_s, best_r = 1, 1
+    n = max(1, min(len(devs), max_devices if max_devices else len(devs)))
+    best_s, best_r = 1, _largest_divisor(r, n)      # widest 1-D fallback
     for sn in range(1, min(s, n) + 1):
         if s % sn:
             continue
@@ -617,6 +622,75 @@ class RoundRunner:
 
         return block_body
 
+    # -- job-pool entry: J jobs x K rounds, one program, one fetch -----------
+
+    def pool_accept_block_fn(self) -> Callable:
+        """(params_J, block_inputs_J, val_J, active_J) -> (committed_J,
+        fetches_J): J independent jobs' round blocks batched onto a leading
+        job lane of the :meth:`accept_block_fn` program.  Every leaf of
+        ``params_J`` / ``block_inputs_J`` / ``val_J`` leads with J;
+        ``active_J`` is a (J,) bool lane mask — a masked (idle) lane runs
+        the same arithmetic on its placeholder payload but its commit is
+        discarded (``jnp.where(active, new, old)``), so ragged pools cost no
+        recompile.  ``fetches_J`` stacks to (J, K, 2R+3) — ONE host sync per
+        pool block, from which the pool driver replays every lane's
+        per-round records exactly as the solo driver would.  The per-lane
+        body is literally the scan of :meth:`accept_fn`'s vmap cascade, so
+        an active lane is bit-identical to running its job alone.
+
+        Under ``placement="sharded"`` the JOB axis (not the cluster axis)
+        lays over the mesh: jobs are embarrassingly parallel with no
+        cross-lane collectives, so each shard just vmaps its local lane
+        slice.  Protocol layout only, like :meth:`accept_fn`."""
+        if self.params_stacked:
+            raise ValueError("pool_accept_block_fn requires the protocol "
+                             "layout (params_stacked=False)")
+        if self.verify.enabled and self.verify.recompute \
+                and self.spec.handoff_acts is None:
+            raise ValueError("verify.enabled with recompute needs the "
+                             "RoundSpec handoff_acts hook")
+        body = self._accept_vmap
+
+        def one_job(params, block_inputs, val, active):
+            def step(theta, inputs):
+                return body(theta, inputs, val)
+
+            new_p, fetches = jax.lax.scan(step, params, block_inputs)
+            committed = jax.tree.map(
+                lambda n, o: jnp.where(active, n, o), new_p, params)
+            return committed, fetches
+
+        def pool_lanes(params, block_inputs, val, active):
+            # bit-identity corner: a size-1 vmap vectorises the batch-mean
+            # reductions differently from the unvmapped scan (last-float-bit
+            # drift vs solo), so a single (local) lane runs ``one_job`` on
+            # the squeezed tree — literally the solo block program — and the
+            # lane axis is reshaped back on
+            if active.shape[0] == 1:
+                sq = lambda t: jax.tree.map(lambda a: a[0], t)
+                c, f = one_job(sq(params), sq(block_inputs), sq(val),
+                               active[0])
+                return (jax.tree.map(lambda a: a[None], c),
+                        jax.tree.map(lambda a: a[None], f))
+            return jax.vmap(one_job)(params, block_inputs, val, active)
+
+        if self.placement == "vmap":
+            return pool_lanes
+
+        def pool_sharded(params_j, block_inputs_j, val_j, active_j):
+            ax = self.cluster_axis
+            j = active_j.shape[0]
+            mesh = self.mesh if self.mesh is not None else cluster_mesh(j)
+            if j % mesh.shape[ax]:
+                raise ValueError(f"J={j} not divisible by mesh axis "
+                                 f"{ax!r}={mesh.shape[ax]}")
+            fn = _apply_shard_map(
+                pool_lanes,
+                mesh, (P(ax), P(ax), P(ax), P(ax)), (P(ax), P(ax)), ax)
+            return fn(params_j, block_inputs_j, val_j, active_j)
+
+        return pool_sharded
+
     # -- sharded placement --------------------------------------------------
 
     def _gathered_context(self, aux, vloss, shard_l, ax):
@@ -787,10 +861,10 @@ class RoundRunner:
     # and neither is "round", whose launch/test callers legitimately reuse
     # the same stacked params across runners.
     _DONATED = frozenset({"accept", "sweep", "accept_block", "sweep_block",
-                          "round_block"})
+                          "round_block", "pool_accept_block"})
 
     ENTRIES = ("candidates", "round", "accept", "sweep", "accept_block",
-               "sweep_block", "round_block")
+               "sweep_block", "round_block", "pool_accept_block")
 
     def audit_body(self, which: str) -> Callable:
         """The un-jitted body of one entry — the static-analysis layer
@@ -801,7 +875,8 @@ class RoundRunner:
                 "accept": self.accept_fn, "sweep": self.sweep_fn,
                 "accept_block": self.accept_block_fn,
                 "sweep_block": self.sweep_block_fn,
-                "round_block": self.round_block_fn}[which]()
+                "round_block": self.round_block_fn,
+                "pool_accept_block": self.pool_accept_block_fn}[which]()
 
     def donated_argnums(self, which: str) -> tuple:
         return (0,) if which in self._DONATED else ()
@@ -859,6 +934,14 @@ class RoundRunner:
     def sweep_block(self, params, block_inputs, val):
         self._check_executable((self.seed_axis, self.cluster_axis))
         return self._call("sweep_block", params, block_inputs, val)
+
+    def pool_accept_block(self, params_j, block_inputs_j, val_j, active_j):
+        """J jobs x K scanned acceptance rounds, one stacked (J, K, 2R+3)
+        fetch — see :meth:`pool_accept_block_fn`.  The theta_J carry is
+        donated."""
+        self._check_executable((self.cluster_axis,))
+        return self._call("pool_accept_block", params_j, block_inputs_j,
+                          val_j, active_j)
 
     def round_block(self, params, block_batches, val):
         self._check_executable((self.cluster_axis,))

@@ -112,13 +112,24 @@ def plan_blocks(start: int, stop: int, block: int,
     segments = []
     t = start
     while t < stop:
-        k = 1
-        while (k < block and t + k < stop
-               and not (is_sync is not None and is_sync(t + k - 1))):
-            k += 1
+        k = lane_block_len(t, stop, block, is_sync)
         segments.append((t, k))
         t += k
     return segments
+
+
+def lane_block_len(t: int, stop: int, block: int,
+                   is_sync: Optional[Callable[[int], bool]] = None) -> int:
+    """Length of the :func:`plan_blocks` segment starting at round ``t`` —
+    the one copy of the sync-round-terminates-segment rule, shared with the
+    job-pool scheduler, which re-evaluates it per lane every pool block (a
+    pool block runs ``min`` over its active lanes' segment lengths, so a
+    lane's sync rounds always land on the last round that lane executes)."""
+    k = 1
+    while (k < block and t + k < stop
+           and not (is_sync is not None and is_sync(t + k - 1))):
+        k += 1
+    return k
 
 class RoundFeeder:
     """Double-buffered host-side round assembly.

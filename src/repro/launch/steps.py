@@ -214,7 +214,8 @@ def launch_round_spec(model: Model, lr: float = 1e-3,
 def make_pigeon_round_step_shardmap(model: Model, mesh, lr: float = 1e-3,
                                     for_execution: bool = False,
                                     selection: str = "argmin",
-                                    quant: Optional[str] = None) -> Callable:
+                                    quant: Optional[str] = None,
+                                    block: int = 1) -> Callable:
     """Cluster parallelism as a *manual* pod-axis shard_map (§Perf hillclimb
     C iteration 3): each pod runs its cluster slice's train+validate program
     (data/model axes stay GSPMD-auto), and the only cross-pod collectives

@@ -26,7 +26,8 @@ bit-identical ``History`` and CommMeter to a disabled one
 (``tests/test_telemetry.py`` pins this across engines × placements ×
 prefetch).
 """
-from .metrics import MetricsRegistry, jit_cache_stats, round_gauges
+from .metrics import (MetricsRegistry, jit_cache_stats, pool_gauges,
+                      round_gauges)
 from .profile import ProfileHook
 from .provenance import provenance
 from .session import (DISABLED, NULL_SESSION, NullSession, Telemetry,
@@ -39,7 +40,7 @@ __all__ = [
     "Telemetry", "TelemetrySession", "NullSession", "NULL_SESSION",
     "DISABLED", "resolve_telemetry",
     "Tracer", "Span", "Stopwatch", "NULL_TRACER", "NULL_SPAN",
-    "MetricsRegistry", "round_gauges", "jit_cache_stats",
+    "MetricsRegistry", "round_gauges", "pool_gauges", "jit_cache_stats",
     "Sink", "JSONLSink", "MemorySink", "ConsoleSink", "MultiSink",
     "read_jsonl",
     "ProfileHook", "provenance",

@@ -68,6 +68,18 @@ def round_gauges(rec: Dict[str, Any],
     return out
 
 
+def pool_gauges(t0s: Dict[str, int], k: int, lanes: int,
+                jobs_done: int, jobs_total: int) -> Dict[str, Any]:
+    """Per-pool-block gauges for the job-pool driver's ``pool_block`` event:
+    which jobs occupied a lane this block (and each lane's starting round),
+    the scanned block length K, the lane count, and queue progress.  Like
+    :func:`round_gauges`, strictly host-side — every value is scheduler
+    state the driver already holds, so emitting it costs no device sync."""
+    return {"jobs": dict(t0s), "k": int(k), "lanes": int(lanes),
+            "active": len(t0s), "jobs_done": int(jobs_done),
+            "jobs_total": int(jobs_total)}
+
+
 def jit_cache_stats() -> Dict[str, Any]:
     """Snapshot of the protocol layer's compiled-program caches:
 

@@ -1,0 +1,255 @@
+"""Job-pool megabatching: pooled execution must be invisible to every job.
+
+Contract (ISSUE: multi-job megabatching): each job's History — including
+comm dicts and eval accuracies — is BIT-identical to running the same spec
+alone through ``run_pigeon(engine="batched")``, across placements, block
+sizes, threat-model mixes and mid-pool lane recycling; telemetry round
+events carry the job tag and mirror the solo events; bucketing puts exactly
+the program-shaping fields in the key.
+
+The sharded placement sizes its job mesh to the device count, so these
+tests run anywhere; the 8-virtual-device CI leg re-runs the file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise real
+multi-lane sharding.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (HONEST, LABEL_FLIP, Attack, ProtocolConfig,
+                        run_pigeon)
+from repro.core.jobs import (JobPool, JobSpec, bucket_key, plan_pool,
+                             run_job_pool, validate_job)
+from repro.telemetry import MemorySink, Telemetry
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(the dedicated CI multi-device step sets it)")
+
+
+def _pcfg(seed, t=4, eval_every=None, **kw):
+    return ProtocolConfig(M=4, N=1, T=t, E=2, B=16, lr=0.05, seed=seed,
+                          eval_every=t if eval_every is None else eval_every,
+                          **kw)
+
+
+def _specs(tiny_task, n=3, t=4, **kw):
+    data, module = tiny_task
+    return [JobSpec(name=f"job{s}", module=module, data=data,
+                    pcfg=_pcfg(seed=s, t=t), **kw) for s in range(n)]
+
+
+def assert_history_identical(h_pool, h_solo):
+    assert len(h_pool.rounds) == len(h_solo.rounds)
+    for a, b in zip(h_pool.rounds, h_solo.rounds):
+        assert a == b      # bit-identical: comm dicts and test_acc included
+
+
+def _solo(spec, block):
+    return run_pigeon(spec.module, spec.data, spec.pcfg,
+                      malicious=spec.malicious, attack=spec.attack,
+                      threat_model=spec.threat_model,
+                      selection=spec.selection, quant=spec.quant,
+                      engine="batched", placement="vmap", block=block)
+
+
+# ---------------------------------------------------------------------------
+# pooled == solo, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("placement", ["vmap", "sharded"])
+@pytest.mark.parametrize("block", [1, 2])
+def test_pool_matches_solo(tiny_task, placement, block):
+    specs = _specs(tiny_task, n=3, t=4)
+    pooled = run_job_pool(specs, block=block, placement=placement)
+    for s in specs:
+        assert_history_identical(pooled[s.name], _solo(s, block))
+
+
+def test_pool_mixed_threat_models(tiny_task):
+    """Threat state is lane data, not program: an honest job and an attacked
+    job share one bucket and both stay bit-identical to their solo runs."""
+    data, module = tiny_task
+    specs = [
+        JobSpec(name="honest", module=module, data=data, pcfg=_pcfg(0)),
+        JobSpec(name="flip", module=module, data=data, pcfg=_pcfg(1),
+                malicious={1}, attack=Attack(LABEL_FLIP)),
+    ]
+    pool = JobPool(specs)
+    assert len(pool.buckets()) == 1
+    pooled = run_job_pool(specs, block=2)
+    for s in specs:
+        assert_history_identical(pooled[s.name], _solo(s, 2))
+
+
+def test_pool_elastic_refill(tiny_task):
+    """Fewer lanes than jobs + ragged horizons: finished jobs free their
+    lane mid-pool and the queue refills it; every History still exact."""
+    specs = [dataclasses.replace(s, pcfg=dataclasses.replace(
+        s.pcfg, T=3 + i, eval_every=2)) for i, s in
+        enumerate(_specs(tiny_task, n=3))]
+    pooled = run_job_pool(specs, block=2, lanes=2)
+    for s in specs:
+        assert_history_identical(pooled[s.name], _solo(s, 2))
+
+
+@multi_device
+def test_pool_sharded_multi_device_refill(tiny_task):
+    """Real multi-lane sharding (J=4 over the forced 8-device host) with
+    block fusion; exact per-job Histories."""
+    specs = _specs(tiny_task, n=4, t=4)
+    pooled = run_job_pool(specs, block=2, placement="sharded")
+    for s in specs:
+        assert_history_identical(pooled[s.name], _solo(s, 2))
+
+
+def test_pool_block1_matches_blockK(tiny_task):
+    specs = _specs(tiny_task, n=2, t=4)
+    h1 = run_job_pool(specs, block=1)
+    hk = run_job_pool(specs, block=4)
+    for s in specs:
+        assert_history_identical(h1[s.name], hk[s.name])
+
+
+def test_pool_checkpoint_resume(tiny_task, tmp_path):
+    """Per-job crash-atomic checkpoints: a pool interrupted after its
+    checkpoints resumes (in a pool) to the exact uninterrupted solo run."""
+    data, module = tiny_task
+    def mk(resume):
+        return [JobSpec(name=f"job{s}", module=module, data=data,
+                        pcfg=_pcfg(seed=s, t=4, eval_every=2),
+                        checkpoint_path=str(tmp_path / f"job{s}.ckpt"),
+                        checkpoint_every=2, resume=resume)
+                for s in range(2)]
+    short = [dataclasses.replace(s, pcfg=dataclasses.replace(s.pcfg, T=2))
+             for s in mk(False)]
+    run_job_pool(short, block=2)                    # writes round-1 ckpts
+    pooled = run_job_pool(mk(True), block=2)        # resumes rounds 2..3
+    for s in _specs(tiny_task, n=2):
+        spec = dataclasses.replace(s, pcfg=_pcfg(seed=s.pcfg.seed, t=4,
+                                                 eval_every=2))
+        solo = _solo(spec, 2)
+        resumed = pooled[s.name].rounds
+        assert [r["round"] for r in resumed] == [2, 3]
+        assert resumed == solo.rounds[2:]
+
+
+# ---------------------------------------------------------------------------
+# telemetry: job-tagged round events mirror the solo events
+# ---------------------------------------------------------------------------
+
+def test_pool_round_events_match_solo(tiny_task):
+    specs = _specs(tiny_task, n=2, t=4)
+    mem_pool = MemorySink()
+    run_job_pool(specs, block=2, telemetry=Telemetry(sinks=(mem_pool,)))
+    pool_rounds = mem_pool.of("round")
+    for s in specs:
+        mem_solo = MemorySink()
+        run_pigeon(s.module, s.data, s.pcfg, engine="batched", block=2,
+                   telemetry=Telemetry(sinks=(mem_solo,)))
+        mine = [e for e in pool_rounds if e.get("job") == s.name]
+        solo = mem_solo.of("round")
+        assert len(mine) == len(solo) == s.pcfg.T
+        for ep, es in zip(mine, solo):
+            for k in ("t", "selected", "accepted", "detections",
+                      "val_losses", "comm"):
+                assert ep[k] == es[k], k
+    blocks = mem_pool.of("pool_block")
+    assert blocks and blocks[0]["lanes"] == 2
+    assert blocks[-1]["jobs_done"] == len(specs)
+
+
+# ---------------------------------------------------------------------------
+# bucketing and validation
+# ---------------------------------------------------------------------------
+
+def test_bucket_rules(tiny_task):
+    data, module = tiny_task
+    base = JobSpec(name="a", module=module, data=data, pcfg=_pcfg(0))
+    same = [
+        dataclasses.replace(base, name="seed", pcfg=_pcfg(7)),
+        dataclasses.replace(base, name="horizon", pcfg=_pcfg(0, t=9)),
+        dataclasses.replace(base, name="attacked", malicious={1},
+                            attack=Attack(LABEL_FLIP)),
+    ]
+    for other in same:
+        assert bucket_key(base) == bucket_key(other), other.name
+    diff = [
+        dataclasses.replace(base, name="batch",
+                            pcfg=dataclasses.replace(_pcfg(0), B=8)),
+        dataclasses.replace(base, name="lr",
+                            pcfg=dataclasses.replace(_pcfg(0), lr=0.01)),
+        dataclasses.replace(base, name="quant", quant="int8"),
+        dataclasses.replace(base, name="policy",
+                            selection="median_of_means"),
+    ]
+    for other in diff:
+        assert bucket_key(base) != bucket_key(other), other.name
+    pool = JobPool([base] + same + diff)
+    assert len(pool.buckets()) == 1 + len(diff)
+
+
+def test_pool_multi_bucket_run(tiny_task):
+    """Two incompatible shapes run as two buckets in one call; every job
+    still bit-identical to solo."""
+    data, module = tiny_task
+    specs = [
+        JobSpec(name="fast", module=module, data=data, pcfg=_pcfg(0)),
+        JobSpec(name="slow", module=module, data=data,
+                pcfg=dataclasses.replace(_pcfg(1), lr=0.01)),
+    ]
+    pooled = run_job_pool(specs, block=2)
+    for s in specs:
+        assert_history_identical(pooled[s.name], _solo(s, 2))
+
+
+def test_pool_validation_errors(tiny_task):
+    data, module = tiny_task
+    base = JobSpec(name="a", module=module, data=data, pcfg=_pcfg(0))
+    with pytest.raises(ValueError, match="duplicate job names"):
+        JobPool([base, dataclasses.replace(base)])
+    with pytest.raises(ValueError, match="empty job pool"):
+        JobPool([])
+    with pytest.raises(ValueError, match="not divisible"):
+        validate_job(dataclasses.replace(
+            base, pcfg=dataclasses.replace(_pcfg(0), M=5)))
+    from repro.core.attacks import PARAM_TAMPER
+    with pytest.raises(ValueError, match="param-tamper"):
+        validate_job(dataclasses.replace(
+            base, malicious={1}, attack=Attack(PARAM_TAMPER)))
+
+
+def test_plan_pool_deterministic_schedule(tiny_task):
+    """The whole-pool schedule is computable up front: K is the min over
+    active lanes, sync rounds only ever end a block, and refills happen in
+    queue order."""
+    from repro.core.jobs import _init_job
+    specs = [dataclasses.replace(s, pcfg=dataclasses.replace(
+        s.pcfg, T=3 + i, eval_every=2)) for i, s in
+        enumerate(_specs(tiny_task, n=3))]
+    states = []
+    for s in specs:
+        policy, tm, pcfg = validate_job(s)
+        states.append(_init_job(s, policy, tm, pcfg))
+    plans = plan_pool(states, [0, 1, 2], lanes=2, block=2)
+    for plan in plans:
+        assert plan.k >= 1
+        for lane, j in enumerate(plan.assign):
+            if j < 0:
+                continue
+            st = states[j]
+            # a sync round may only be the block's last executed round
+            for dt in range(plan.k - 1):
+                assert not st.is_sync(plan.t0s[lane] + dt)
+    # every job's rounds are covered exactly once, in order
+    seen = {i: [] for i in range(3)}
+    for plan in plans:
+        for lane, j in enumerate(plan.assign):
+            if j >= 0:
+                seen[j].extend(range(plan.t0s[lane],
+                                     plan.t0s[lane] + plan.k))
+    for i, st in enumerate(states):
+        assert seen[i] == list(range(st.pcfg.T))

@@ -263,6 +263,41 @@ def test_sweep_mesh_factorisation():
     assert dict(sweep_mesh(1, 16).shape) == {"seed": 1, "pod": 8}
 
 
+def test_largest_divisor_properties():
+    """_largest_divisor(n, cap): a divisor of n, <= cap, >= 1 — including
+    degenerate caps (0, negative) and prime n, where it must degrade to 1
+    rather than divide by zero."""
+    from repro.core.runner import _largest_divisor
+    for n in range(1, 25):
+        for cap in range(-2, 25):
+            d = _largest_divisor(n, cap)
+            assert d >= 1 and n % d == 0
+            assert cap < 1 or d <= cap
+            # maximality: no larger divisor fits the cap
+            assert not any(n % e == 0 for e in range(d + 1,
+                                                     max(cap, 1) + 1))
+
+
+@pytest.mark.parametrize("devices", [1, 2, 3, 5, 7, 8, 12])
+def test_sweep_mesh_packing_properties(devices):
+    """Property grid over (S, R, device-count), emulated via max_devices:
+    the (seed, pod) factorisation always divides (S, R), fits the device
+    budget, and never covers fewer devices than the widest 1-D cluster mesh
+    — prime/non-factoring S and R (e.g. 7 x 11 on 8 devices) must fall back
+    to the 1-D cluster mesh, not collapse to a 1x1 grid."""
+    from repro.core.runner import _largest_divisor
+    budget = min(devices, jax.device_count())
+    for s in (1, 2, 3, 4, 5, 7, 11):
+        for r in (1, 2, 3, 4, 6, 7, 11, 13):
+            shape = dict(sweep_mesh(s, r, max_devices=devices).shape)
+            sn, rn = shape["seed"], shape["pod"]
+            assert s % sn == 0 and r % rn == 0
+            assert 1 <= sn * rn <= budget
+            one_d = dict(cluster_mesh(r, max_devices=devices).shape)["pod"]
+            assert one_d == _largest_divisor(r, budget)
+            assert sn * rn >= one_d, (s, r, devices)
+
+
 @multi_device
 def test_sweep_sharded_multi_device_matches_vmap(tiny_task):
     """S x R = 2 x 2 replicas over a real (2, 2) device mesh."""
